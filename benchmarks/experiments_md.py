@@ -1,0 +1,113 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from dry-run JSONs.
+
+Keeps hand-written prose; replaces the blocks between
+``<!-- BEGIN GENERATED: <name> -->`` / ``<!-- END GENERATED: <name> -->``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, List
+
+
+def load(path="experiments/dryrun") -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        r["_file"] = os.path.basename(f)
+        out.append(r)
+    return out
+
+
+def fmt_bytes(x) -> str:
+    if x is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def dryrun_table(reports: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compile s | flops/chip | bytes/chip | "
+        "wire bytes/chip | collectives (ag/ar/rs/a2a/cp) | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in reports:
+        if r.get("mla_absorb") or r.get("sharding_mode", "fsdp_tp") != "fsdp_tp":
+            continue  # perf variants listed in §Perf, not the baseline table
+        if "skipped" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                f"SKIP: {r['skipped']} |"
+            )
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ? | — | — | — | — | — | FAIL |")
+            continue
+        c = r["collective_counts"]
+        cc = "/".join(
+            str(c.get(k, 0)) for k in
+            ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+        )
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} | "
+            f"{r['flops_per_chip']:.3e} | {fmt_bytes(r['bytes_per_chip'])} | "
+            f"{fmt_bytes(r['collectives']['total_wire_bytes'])} | {cc} | OK |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(reports: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "MODEL_FLOPS/HLO_FLOPs | to move the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    from benchmarks.roofline import _hint
+
+    for r in reports:
+        if "roofline" not in r or r["mesh"] != "16x16":
+            continue
+        if r.get("mla_absorb") or r.get("sharding_mode", "fsdp_tp") != "fsdp_tp":
+            continue
+        t = r["roofline"]
+        u = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"**{t['bottleneck']}** | {u if u is None else f'{u:.2f}'} | "
+            f"{_hint(r)} |"
+        )
+    return "\n".join(lines)
+
+
+def replace_section(text: str, name: str, content: str) -> str:
+    begin = f"<!-- BEGIN GENERATED: {name} -->"
+    end = f"<!-- END GENERATED: {name} -->"
+    pattern = re.compile(re.escape(begin) + r".*?" + re.escape(end), re.S)
+    block = begin + "\n" + content + "\n" + end
+    if pattern.search(text):
+        return pattern.sub(block, text)
+    return text + "\n" + block + "\n"
+
+
+def main():
+    reports = load()
+    path = "EXPERIMENTS.md"
+    text = open(path).read() if os.path.exists(path) else "# EXPERIMENTS\n"
+    text = replace_section(text, "dryrun-table", dryrun_table(reports))
+    text = replace_section(text, "roofline-table", roofline_table(reports))
+    open(path, "w").write(text)
+    print(f"updated {path} from {len(reports)} reports")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper Fig. 2 — time-usage split for different n_e.
+
+The paper instruments where wall-time goes at each n_e: environment
+interaction vs. action selection (policy forward) vs. learning (backward +
+update). We reproduce the measurement on the JAX-native system by timing
+three jitted programs per n_e:
+
+  * env-only: the vmapped worker step (paper: "interacting with the env")
+  * act-only: batched policy forward + sampling (the master)
+  * full:     the complete Algorithm-1 iteration
+
+learning_time ≈ full − env − act. The paper's observation to reproduce:
+as the model grows (arch_nips → arch_nature), timesteps/s drops far less
+than the model cost grows, because env time dominates (~50% at n_e=32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.configs import get_config
+from repro.core import ParallelRL
+from repro.core.agents import PAACAgent, PAACConfig
+from repro.envs import AtariLike, FrameStack
+from repro.optim import constant
+
+
+def run(n_envs_list=(16, 32, 64), arch: str = "paac_nips", t_max: int = 5,
+        iters: int = 5):
+    rows = []
+    for n_e in n_envs_list:
+        env = FrameStack(AtariLike(n_e), n=4)
+        cfg = get_config(arch).replace(
+            obs_shape=env.obs_shape, num_actions=env.num_actions
+        )
+        agent = PAACAgent(cfg, PAACConfig(t_max=t_max))
+        rl = ParallelRL(env, agent, lr_schedule=constant(0.0007 * n_e))
+
+        # env-only program (the n_w workers)
+        def env_only(state, key):
+            def body(c, _):
+                st, k = c
+                k, k2 = jax.random.split(k)
+                st, obs, r, d = env.step(st, jnp.zeros((n_e,), jnp.int32), k2)
+                return (st, k), None
+
+            (state, key), _ = jax.lax.scan(body, (state, key), None, length=t_max)
+            return state
+
+        env_only = jax.jit(env_only)
+
+        act = agent.act_fn()
+
+        def act_only(params, obs, key):
+            def body(c, _):
+                o, k = c
+                k, k2 = jax.random.split(k)
+                logits, v = act(params, o)
+                a = jax.random.categorical(k2, logits)
+                return (o, k), a
+
+            _, actions = jax.lax.scan(body, (obs, key), None, length=t_max)
+            return actions
+
+        act_only = jax.jit(act_only)
+
+        key = jax.random.PRNGKey(0)
+        t_env = time_call(env_only, rl.env_state, key, iters=iters)
+        t_act = time_call(act_only, rl.params, rl.obs, key, iters=iters)
+        t_full = time_call(
+            lambda: rl._train_step(rl.params, rl.opt_state, rl.env_state,
+                                   rl.obs, rl.key, jnp.int32(0)),
+            iters=iters,
+        )
+        t_learn = max(t_full - t_env - t_act, 0.0)
+        steps = n_e * t_max
+        emit(
+            f"fig2_time_split/ne={n_e}/{arch}",
+            t_full,
+            f"env%={100*t_env/t_full:.0f};act%={100*t_act/t_full:.0f};"
+            f"learn%={100*t_learn/t_full:.0f};steps_per_s={steps/(t_full/1e6):.0f}",
+        )
+        rows.append((n_e, t_env, t_act, t_learn, t_full))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Fig. 3/4 — the n_e sweep with the α = 0.0007·n_e rule.
+
+Fig. 3's claim: most n_e reach similar score *per timestep*. Fig. 4's claim:
+large n_e reaches those timesteps much faster (wall-clock). The paper also
+observes divergence at n_e = 256 (the lr-scaling limit). We reproduce the
+sweep on GridWorld at CPU scale and report per-n_e: reward per timestep,
+timesteps/s, and a divergence flag (non-finite loss or collapsed entropy).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import ParallelRL
+from repro.core.agents import PAACAgent, PAACConfig
+from repro.envs import GridWorld
+from repro.optim import constant
+
+
+def run(n_envs_list=(16, 32, 64, 128, 256), total_steps: int = 60_000,
+        lr_base: float = 0.002):
+    rows = []
+    for n_e in n_envs_list:
+        env = GridWorld(n_e, size=4, max_steps=30)
+        cfg = get_config("paac_vector").replace(
+            obs_shape=env.obs_shape, num_actions=env.num_actions
+        )
+        agent = PAACAgent(cfg, PAACConfig(t_max=5))
+        # the paper's rule: lr scales linearly with n_e
+        rl = ParallelRL(env, agent, lr_schedule=constant(lr_base * n_e), seed=0)
+        iters = max(total_steps // (n_e * 5), 1)
+        res = rl.run(iters)
+        reward_per_step = (
+            res.mean_metrics["reward_sum"] / (n_e * 5)
+        )
+        diverged = not bool(jnp.isfinite(jnp.asarray(res.mean_metrics["loss"])))
+        emit(
+            f"fig34_ne_scaling/ne={n_e}",
+            1e6 * iters / max(res.timesteps_per_sec / (n_e * 5), 1e-9) / max(iters, 1),
+            f"reward_per_step={reward_per_step:.4f};tps={res.timesteps_per_sec:.0f};"
+            f"lr={lr_base*n_e:.4f};diverged={diverged}",
+        )
+        rows.append((n_e, reward_per_step, res.timesteps_per_sec, diverged))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Kernel-layer benchmark: XLA chunked attention vs naive materialization,
+and the batched n-step return path vs a per-env host loop.
+
+(Pallas kernels themselves run in interpret mode on CPU, so wall-times are
+not meaningful for them here — their win is validated structurally in the
+roofline analysis. These benches quantify the algorithmic choices that ARE
+measurable on CPU.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core.returns import n_step_returns
+from repro.models.attention import chunked_attention, naive_attention
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 2, 1024, 8, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    f_chunk = jax.jit(lambda q, k, v: chunked_attention(q, k, v, block_k=256))
+    f_naive = jax.jit(lambda q, k, v: naive_attention(q, k, v))
+    t_c = time_call(f_chunk, q, k, v, iters=5)
+    t_n = time_call(f_naive, q, k, v, iters=5)
+    emit("kernels/chunked_attention_1k", t_c, f"naive_us={t_n:.0f};ratio={t_n/t_c:.2f}")
+
+    E, T = 256, 128
+    r = jax.random.normal(key, (E, T))
+    d = jax.random.bernoulli(key, 0.1, (E, T))
+    b = jax.random.normal(key, (E,))
+    f_batched = jax.jit(lambda r, d, b: n_step_returns(r, d, b, 0.99))
+    t_b = time_call(f_batched, r, d, b, iters=10)
+    emit("kernels/nstep_returns_batched", t_b,
+         f"actors={E};t_max={T};throughput={E*T/(t_b/1e6):.2e}_returns_per_s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Quick CPU-scale versions; pass
+--full for the longer sweeps.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (
+        baselines,
+        fig2_time_split,
+        fig34_ne_scaling,
+        kernels_bench,
+        roofline,
+        table1_throughput,
+    )
+
+    print("name,us_per_call,derived")
+    jobs = {
+        "kernels": lambda: kernels_bench.run(),
+        "table1": lambda: table1_throughput.run(iters=8 if not args.full else 40),
+        "fig2": lambda: fig2_time_split.run(
+            n_envs_list=(16, 32, 64) if not args.full else (16, 32, 64, 128)
+        ),
+        "fig34": lambda: fig34_ne_scaling.run(
+            n_envs_list=(16, 32, 64) if not args.full else (16, 32, 64, 128, 256),
+            total_steps=30_000 if not args.full else 120_000,
+        ),
+        "baselines": lambda: baselines.run(iters=150 if not args.full else 400),
+        "roofline": lambda: roofline.run(),
+    }
+    for name, job in jobs.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            job()
+        except Exception as e:  # keep the harness going; record the failure
+            print(f"{name},0.0,ERROR={type(e).__name__}:{e}", file=sys.stdout)
+
+
+if __name__ == "__main__":
+    main()

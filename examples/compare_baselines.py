@@ -1,0 +1,13 @@
+"""Reproduce the paper's stability argument: PAAC vs A3C-sim (stale grads)
+vs GA3C-sim (policy lag) vs DQN on Catch.
+
+    PYTHONPATH=src python examples/compare_baselines.py
+"""
+from benchmarks.baselines import run
+
+if __name__ == "__main__":
+    scores = run(iters=300)
+    print()
+    print("final reward/iteration (higher is better):")
+    for name, score in sorted(scores.items(), key=lambda kv: -kv[1]):
+        print(f"  {name:24s} {score:+.3f}")

@@ -1,0 +1,38 @@
+"""The paper's exact setting at CPU scale: arch_nips CNN on an 84×84×4 pixel
+environment with the §5.1 pipeline (frame stack, action repeat, no-op starts)
+and §5.1 hyperparameters (n_e=32, t_max=5, RMSProp decay .99 eps .1,
+clip 40, lr 0.0007·n_e).
+
+    PYTHONPATH=src python examples/paper_atari.py [--iters 150]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core import ParallelRL
+from repro.core.agents import PAACAgent, PAACConfig
+from repro.envs import AtariLike, FrameStack
+from repro.optim import constant
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--iters", type=int, default=150)
+ap.add_argument("--n-envs", type=int, default=32)
+ap.add_argument("--arch", default="paac_nips", choices=("paac_nips", "paac_nature"))
+args = ap.parse_args()
+
+env = FrameStack(AtariLike(args.n_envs), n=4)
+cfg = get_config(args.arch).replace(
+    obs_shape=env.obs_shape, num_actions=env.num_actions
+)
+agent = PAACAgent(cfg, PAACConfig(gamma=0.99, entropy_beta=0.01, t_max=5))
+rl = ParallelRL(
+    env, agent, optimizer="rmsprop", lr_schedule=constant(0.0007 * args.n_envs)
+)
+
+for epoch in range(max(args.iters // 25, 1)):
+    res = rl.run(25)
+    print(
+        f"epoch {epoch}: steps={res.steps:7d} "
+        f"reward/iter={res.mean_metrics['reward_sum']:+.2f} "
+        f"entropy={res.mean_metrics['entropy']:.3f} "
+        f"steps/s={res.timesteps_per_sec:,.0f}"
+    )

@@ -1,0 +1,25 @@
+"""Quickstart: PAAC (paper Algorithm 1) on GridWorld in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import get_config
+from repro.core import ParallelRL
+from repro.core.agents import PAACAgent, PAACConfig
+from repro.envs import GridWorld
+from repro.optim import constant
+
+# n_e parallel environments — one vectorized JAX program (paper §3)
+env = GridWorld(n_envs=32, size=5)
+cfg = get_config("paac_vector").replace(
+    obs_shape=env.obs_shape, num_actions=env.num_actions
+)
+agent = PAACAgent(cfg, PAACConfig(t_max=5, gamma=0.99, entropy_beta=0.01))
+rl = ParallelRL(env, agent, optimizer="rmsprop", lr_schedule=constant(0.01))
+
+for epoch in range(8):
+    res = rl.run(50)
+    print(
+        f"epoch {epoch}: steps={res.steps:6d} "
+        f"reward/iter={res.mean_metrics['reward_sum']:+.3f} "
+        f"episodes={res.episodes:.0f} steps/s={res.timesteps_per_sec:,.0f}"
+    )

@@ -1,0 +1,14 @@
+"""Batched serving example: the paper's master (batched action selection)
+as modern LLM inference — prefill a batch of prompts, then decode.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch mamba2-370m
+    PYTHONPATH=src python examples/serve_batch.py --arch qwen2-7b --gen 64
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if "--reduced" not in sys.argv:
+        sys.argv.append("--reduced")
+    main()

@@ -1,0 +1,94 @@
+"""Diagnosis tool for hillclimbing: lower one pair, rank the top byte and
+collective contributors in the optimized HLO (with loop multipliers).
+
+    PYTHONPATH=src python scripts/diag_pair.py qwen2-7b prefill_32k
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import re  # noqa: E402
+import sys  # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+from repro.launch.dryrun import lower_pair  # noqa: E402
+from repro.launch.hlo_analysis import (  # noqa: E402
+    HloModule,
+    _BYTE_OPS,
+    _COLLECTIVES,
+    _group_size,
+    _shape_elems_bytes,
+    _wire_factor,
+)
+
+
+def diagnose(hlo_path: str, top: int = 20):
+    m = HloModule(open(hlo_path).read())
+    byte_items = defaultdict(float)
+    wire_items = defaultdict(float)
+
+    def called(instr):
+        out = []
+        mm = re.search(r"calls=%?([\w.\-]+)", instr.attrs)
+        if mm:
+            out.append((mm.group(1), 1.0))
+        mm = re.search(r"body=%?([\w.\-]+)", instr.attrs)
+        if mm:
+            mc = re.search(r"condition=%?([\w.\-]+)", instr.attrs)
+            out.append((mm.group(1), float(m.trip_count(mc.group(1))) if mc else 1.0))
+        return out
+
+    def walk(comp, mult, cb):
+        for instr in m.computations.get(comp, []):
+            op = instr.op
+            meta = re.search(r'op_name="([^"]+)"', instr.line)
+            tag = (meta.group(1)[-90:] if meta else instr.name)[-90:]
+            for c in _COLLECTIVES:
+                if op == c or op.startswith(c + "-start"):
+                    _, nb = _shape_elems_bytes(instr.type_str)
+                    n = _group_size(instr.line)
+                    wire_items[(c, instr.type_str[:60], tag)] += (
+                        mult * nb * _wire_factor(c, n)
+                    )
+            if cb and op in _BYTE_OPS:
+                _, rb = _shape_elems_bytes(instr.type_str)
+                if op in ("dynamic-slice", "slice", "gather"):
+                    b = 2 * rb
+                elif op == "dynamic-update-slice" and len(instr.operands) >= 2:
+                    _, ub = _shape_elems_bytes(m.shape_of.get(instr.operands[1], ""))
+                    b = 2 * ub
+                else:
+                    ob = sum(
+                        _shape_elems_bytes(m.shape_of.get(o, ""))[1]
+                        for o in set(instr.operands)
+                    )
+                    b = rb + ob
+                byte_items[(op, instr.type_str[:60], tag)] += mult * b
+            for sub, mm2 in called(instr):
+                walk(sub, mult * mm2, cb and op in ("while", "conditional", "call"))
+
+    walk(m.entry, 1.0, True)
+    print("==== top HBM-byte contributors ====")
+    for (op, ty, tag), v in sorted(byte_items.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{v:12.3e}  {op:22s} {ty:60s} {tag}")
+    print("==== top collective wire-byte contributors ====")
+    for (op, ty, tag), v in sorted(wire_items.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{v:12.3e}  {op:22s} {ty:60s} {tag}")
+
+
+if __name__ == "__main__":
+    arch, shape = sys.argv[1], sys.argv[2]
+    kw = {}
+    for a in sys.argv[3:]:
+        if a == "--absorb":
+            kw["mla_absorb"] = True
+        if a == "--tp":
+            kw["sharding_mode"] = "tp"
+    hlo = f"/tmp/{arch}_{shape}.hlo"
+    rep = lower_pair(arch, shape, save_hlo=hlo, **kw)
+    t = rep["roofline"]
+    print(
+        f"terms: compute={t['compute_s']:.3f}s memory={t['memory_s']:.3f}s "
+        f"collective={t['collective_s']:.3f}s bottleneck={t['bottleneck']}"
+    )
+    diagnose(hlo)

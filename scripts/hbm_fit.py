@@ -1,0 +1,67 @@
+"""Per-chip HBM fit table: params + optimizer state bytes under the
+production sharding, per architecture (train_4k configuration).
+
+    PYTHONPATH=src python scripts/hbm_fit.py
+"""
+import jax
+import jax.numpy as jnp
+from jax.sharding import AbstractMesh
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.distributed.sharding import param_specs
+from repro.models import init_policy
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+HBM = 16e9  # TPU v5e
+
+
+def shard_bytes(sds, specs):
+    sizes = dict(MESH.shape)
+
+    def axis_size(a):
+        if a is None:
+            return 1
+        if isinstance(a, tuple):
+            n = 1
+            for x in a:
+                n *= sizes[x]
+            return n
+        return sizes[a]
+
+    total = 0
+    for (path, spec), (_, leaf) in zip(
+        jax.tree_util.tree_flatten_with_path(specs)[0],
+        jax.tree_util.tree_flatten_with_path(sds)[0],
+    ):
+        elems = leaf.size
+        for dim, a in zip(leaf.shape, tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+            s = axis_size(a)
+            if s > 1 and dim % s == 0:
+                elems //= s
+        total += elems * leaf.dtype.itemsize
+    return total
+
+
+def main():
+    print("| arch | mode | params GB/chip | RMSProp fp32 GB/chip | total GB/chip | fits 16GB (w/ activations headroom) |")
+    print("|---|---|---|---|---|---|")
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        sds = jax.eval_shape(lambda c=cfg: init_policy(jax.random.PRNGKey(0), c))
+        mode = "fsdp_tp"
+        p_specs = param_specs(sds, MESH, mode)
+        pb = shard_bytes(sds, p_specs)
+        # RMSProp "sq" state mirrors params in fp32, same sharding
+        sq = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), sds
+        )
+        sb = shard_bytes(sq, p_specs)
+        tot = pb + sb
+        print(
+            f"| {arch} | {mode} | {pb/1e9:.2f} | {sb/1e9:.2f} | {tot/1e9:.2f} | "
+            f"{'yes' if tot < 10e9 else 'NO'} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""The paper's primary contribution: the synchronous parallel-actor
+framework (master batched action selection + parallel workers + one
+synchronous update), algorithm-agnostic per §3."""
+from repro.core.evaluation import evaluate
+from repro.core.framework import ParallelRL, RunResult
+from repro.core.returns import gae_advantages, n_step_returns
+from repro.core.rollout import Transition, rollout
+
+__all__ = [
+    "ParallelRL",
+    "RunResult",
+    "evaluate",
+    "n_step_returns",
+    "gae_advantages",
+    "rollout",
+    "Transition",
+]

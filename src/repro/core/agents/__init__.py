@@ -1,0 +1,18 @@
+from repro.core.agents.base import Agent
+from repro.core.agents.paac import PAACAgent, PAACConfig, paac_losses
+from repro.core.agents.dqn import DQNAgent, DQNConfig
+from repro.core.agents.baselines import LaggedPAACAgent, LaggedConfig
+from repro.core.agents.ppo import PPOAgent, PPOConfig
+
+__all__ = [
+    "Agent",
+    "PAACAgent",
+    "PAACConfig",
+    "paac_losses",
+    "DQNAgent",
+    "DQNConfig",
+    "LaggedPAACAgent",
+    "LaggedConfig",
+    "PPOAgent",
+    "PPOConfig",
+]

@@ -1,0 +1,28 @@
+"""Agent API — the framework is algorithm agnostic (paper §3, §6).
+
+An agent supplies:
+* ``act(params, obs, key) -> (action, aux)`` — batched action selection,
+* ``update(params, opt_state, agent_state, batch, key) -> (...)`` — one
+  synchronous learning step from a batch of experiences.
+
+The PAAC orchestrator (``repro.core.framework``) composes either with the
+master/worker rollout. On-policy agents (PAAC-A2C) consume the fresh
+trajectory; off-policy agents (DQN) route it through replay memory —
+exercising the paper's claim that the framework covers on-policy,
+off-policy, value-based and policy-gradient algorithms.
+"""
+from __future__ import annotations
+
+import abc
+
+
+class Agent(abc.ABC):
+    on_policy: bool = True
+
+    @abc.abstractmethod
+    def act_fn(self):
+        """Returns (params, obs) -> (logits, value) used by the master."""
+
+    @abc.abstractmethod
+    def make_train_step(self, env, optimizer, lr_schedule):
+        """Returns a jittable train_step closure."""

@@ -1,0 +1,118 @@
+"""DQN inside the PAAC framework — the paper's off-policy/value-based claim.
+
+The same master/worker machinery drives ε-greedy actors; experiences go to
+replay memory and the synchronous update is a double-batched Q-learning step
+with a periodically-synced target network (Mnih et al. 2015). The policy
+head's logits are reused as Q-values (the framework's heads are just output
+layers; §3: "the policy function can be represented implicitly, as in value
+based methods").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.agents.base import Agent
+from repro.core.agents.replay import replay_add, replay_init, replay_sample
+from repro.models import policy_apply
+
+
+class DQNConfig(NamedTuple):
+    gamma: float = 0.99
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_steps: int = 10_000
+    batch_size: int = 128
+    target_sync: int = 100
+    t_max: int = 5  # env steps per framework iteration (buffer fill rate)
+
+
+class DQNAgent(Agent):
+    on_policy = False
+
+    def __init__(self, cfg, hp: DQNConfig = DQNConfig()):
+        self.cfg = cfg
+        self.hp = hp
+
+    def act_fn(self):
+        cfg = self.cfg
+
+        def fn(params, obs):
+            q, _, _ = policy_apply(params, cfg, obs)
+            return q, jnp.max(q, axis=-1)  # greedy value as "V"
+
+        return fn
+
+    def init_state(self, capacity: int, obs_shape, params, obs_dtype=jnp.float32):
+        return {
+            "replay": replay_init(capacity, obs_shape, obs_dtype),
+            "target": params,
+            "updates": jnp.zeros((), jnp.int32),
+        }
+
+    def make_train_step(self, env, optimizer, lr_schedule):
+        cfg, hp = self.cfg, self.hp
+
+        def q_of(params, obs):
+            q, _, _ = policy_apply(params, cfg, obs)
+            return q
+
+        def eps_at(step):
+            frac = jnp.clip(step / hp.eps_steps, 0.0, 1.0)
+            return hp.eps_start + (hp.eps_end - hp.eps_start) * frac
+
+        def loss_fn(params, target_params, batch):
+            q = q_of(params, batch["obs"])
+            q_a = jnp.take_along_axis(q, batch["action"][:, None], axis=1)[:, 0]
+            q_next = q_of(target_params, batch["next_obs"])
+            target = batch["reward"] + hp.gamma * (
+                1.0 - batch["done"].astype(jnp.float32)
+            ) * jnp.max(q_next, axis=-1)
+            td = jax.lax.stop_gradient(target) - q_a
+            return jnp.mean(jnp.square(td)), {"q_mean": jnp.mean(q_a)}
+
+        def train_step(params, opt_state, agent_state, env_state, obs, key, step):
+            # ---- acting: ε-greedy master over all actors (lines 4-10) -----
+            def body(carry, _):
+                env_state, obs, agent_state, key = carry
+                key, k_eps, k_act, k_env = jax.random.split(key, 4)
+                q = q_of(params, obs)
+                greedy = jnp.argmax(q, axis=-1)
+                rand = jax.random.randint(k_act, greedy.shape, 0, q.shape[-1])
+                explore = jax.random.uniform(k_eps, greedy.shape) < eps_at(step)
+                action = jnp.where(explore, rand, greedy)
+                env_state, next_obs, reward, done = env.step(env_state, action, k_env)
+                replay = replay_add(
+                    agent_state["replay"], obs, action, reward, next_obs, done
+                )
+                agent_state = dict(agent_state, replay=replay)
+                return (env_state, next_obs, agent_state, key), (reward, done)
+
+            (env_state, obs, agent_state, key), (rewards, dones) = jax.lax.scan(
+                body, (env_state, obs, agent_state, key), None, length=hp.t_max
+            )
+
+            # ---- synchronous batched update from replay --------------------
+            key, k_s = jax.random.split(key)
+            batch = replay_sample(agent_state["replay"], k_s, hp.batch_size)
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, agent_state["target"], batch
+            )
+            lr = lr_schedule(step)
+            params, opt_state = optimizer.update(grads, opt_state, params, lr)
+
+            updates = agent_state["updates"] + 1
+            sync = (updates % hp.target_sync) == 0
+            target = jax.tree_util.tree_map(
+                lambda t, p: jnp.where(sync, p, t), agent_state["target"], params
+            )
+            agent_state = dict(agent_state, target=target, updates=updates)
+            metrics = dict(metrics)
+            metrics["loss"] = loss
+            metrics["reward_sum"] = jnp.sum(rewards)
+            metrics["episodes"] = jnp.sum(dones)
+            return params, opt_state, agent_state, env_state, obs, key, metrics
+
+        return train_step

@@ -1,0 +1,52 @@
+"""Device-resident circular replay memory (Gorila/DQN-style substrate).
+
+The paper positions multiple parallel actors as an *on-line experience
+memory* (§3); this module provides the classic *off-line* one so the
+framework also hosts off-policy algorithms (its algorithm-agnosticism
+claim). Fixed-capacity ring buffer, pure-functional add/sample.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def replay_init(capacity: int, obs_shape, obs_dtype=jnp.float32) -> Dict:
+    return {
+        "obs": jnp.zeros((capacity,) + tuple(obs_shape), obs_dtype),
+        "action": jnp.zeros((capacity,), jnp.int32),
+        "reward": jnp.zeros((capacity,), jnp.float32),
+        "next_obs": jnp.zeros((capacity,) + tuple(obs_shape), obs_dtype),
+        "done": jnp.zeros((capacity,), bool),
+        "ptr": jnp.zeros((), jnp.int32),
+        "size": jnp.zeros((), jnp.int32),
+    }
+
+
+def replay_add(buf: Dict, obs, action, reward, next_obs, done) -> Dict:
+    """Add a batch of transitions (E, ...) at the ring pointer."""
+    E = action.shape[0]
+    cap = buf["action"].shape[0]
+    idx = (buf["ptr"] + jnp.arange(E)) % cap
+    return {
+        "obs": buf["obs"].at[idx].set(obs),
+        "action": buf["action"].at[idx].set(action.astype(jnp.int32)),
+        "reward": buf["reward"].at[idx].set(reward),
+        "next_obs": buf["next_obs"].at[idx].set(next_obs),
+        "done": buf["done"].at[idx].set(done),
+        "ptr": (buf["ptr"] + E) % cap,
+        "size": jnp.minimum(buf["size"] + E, cap),
+    }
+
+
+def replay_sample(buf: Dict, key, batch_size: int) -> Dict:
+    idx = jax.random.randint(key, (batch_size,), 0, jnp.maximum(buf["size"], 1))
+    return {
+        "obs": buf["obs"][idx],
+        "action": buf["action"][idx],
+        "reward": buf["reward"][idx],
+        "next_obs": buf["next_obs"][idx],
+        "done": buf["done"][idx],
+    }

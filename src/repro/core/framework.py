@@ -1,0 +1,131 @@
+"""PAAC framework orchestrator — paper Algorithm 1 end to end.
+
+``ParallelRL`` wires environments + agent + optimizer into a single jitted
+``train_step`` and runs the outer ``until N >= N_max`` loop (line 3/20) on
+the host, tracking throughput (timesteps/s — the paper's Fig. 2/4 metric)
+and episode returns.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.agents.base import Agent
+from repro.core.agents.dqn import DQNAgent
+from repro.core.agents.baselines import LaggedPAACAgent
+from repro.models import init_policy
+from repro.optim import make_optimizer
+from repro.utils import get_logger
+
+log = get_logger("framework")
+
+
+@dataclass
+class RunResult:
+    steps: int
+    episodes: float
+    mean_metrics: Dict[str, float]
+    episode_reward_rate: List[float] = field(default_factory=list)
+    timesteps_per_sec: float = 0.0
+
+
+class ParallelRL:
+    """The paper's master/worker framework, compiled to one program/iteration."""
+
+    def __init__(
+        self,
+        env,
+        agent: Agent,
+        *,
+        optimizer: str = "rmsprop",
+        lr_schedule: Optional[Callable] = None,
+        seed: int = 0,
+        replay_capacity: int = 50_000,
+    ):
+        self.env = env
+        self.agent = agent
+        self.optimizer = make_optimizer(optimizer)
+        if lr_schedule is None:
+            from repro.optim import constant
+
+            lr_schedule = constant(0.0007 * env.n_envs)  # paper §5.2 rule
+        self.lr_schedule = lr_schedule
+
+        key = jax.random.PRNGKey(seed)
+        self.key, k_init, k_env = jax.random.split(key, 3)
+        self.params = init_policy(k_init, agent.cfg)
+        self.opt_state = self.optimizer.init(self.params)
+        self.env_state = env.reset(k_env)
+        self.obs = env.observe(self.env_state)
+
+        self._has_agent_state = isinstance(agent, (DQNAgent, LaggedPAACAgent))
+        if isinstance(agent, DQNAgent):
+            self.agent_state = agent.init_state(
+                replay_capacity, env.obs_shape, self.params, self.obs.dtype
+            )
+        elif isinstance(agent, LaggedPAACAgent):
+            self.agent_state = agent.init_state(self.params)
+        else:
+            self.agent_state = None
+
+        self._train_step = jax.jit(
+            agent.make_train_step(env, self.optimizer, self.lr_schedule)
+        )
+        self.total_steps = 0
+        self._steps_per_iter = env.n_envs * agent.hp.t_max
+
+    def run(self, iterations: int, log_every: int = 0) -> RunResult:
+        """Run `iterations` framework iterations (each = n_e·t_max timesteps)."""
+        acc: Dict[str, float] = {}
+        episodes = 0.0
+        t0 = time.perf_counter()
+        step_arr = jnp.asarray(self.total_steps, jnp.int32)
+        for i in range(iterations):
+            if self._has_agent_state:
+                (
+                    self.params,
+                    self.opt_state,
+                    self.agent_state,
+                    self.env_state,
+                    self.obs,
+                    self.key,
+                    metrics,
+                ) = self._train_step(
+                    self.params, self.opt_state, self.agent_state,
+                    self.env_state, self.obs, self.key, step_arr,
+                )
+            else:
+                (
+                    self.params,
+                    self.opt_state,
+                    self.env_state,
+                    self.obs,
+                    self.key,
+                    metrics,
+                ) = self._train_step(
+                    self.params, self.opt_state, self.env_state, self.obs,
+                    self.key, step_arr,
+                )
+            self.total_steps += self._steps_per_iter
+            step_arr = step_arr + 1
+            for k, v in metrics.items():
+                acc[k] = acc.get(k, 0.0) + float(v)
+            episodes += float(metrics.get("episodes", 0.0))
+            if log_every and (i + 1) % log_every == 0:
+                log.info(
+                    "iter %d steps %d reward_sum %.3f loss %.4f",
+                    i + 1, self.total_steps,
+                    acc.get("reward_sum", 0.0), float(metrics.get("loss", 0.0)),
+                )
+        dt = time.perf_counter() - t0
+        mean = {k: v / iterations for k, v in acc.items()}
+        return RunResult(
+            steps=self.total_steps,
+            episodes=episodes,
+            mean_metrics=mean,
+            timesteps_per_sec=self._steps_per_iter * iterations / max(dt, 1e-9),
+        )

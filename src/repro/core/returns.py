@@ -1,0 +1,73 @@
+"""Return estimation — paper Algorithm 1 lines 11–15.
+
+``n_step_returns`` is the exact recursion the paper batches over actors:
+
+    R_{t_max+1} = V(s_{t_max+1})        (0 through terminals)
+    R_t = r_t + γ · (1 - done_t) · R_{t+1}
+
+vectorized over all ``n_e`` actors — the time dimension is sequential (a
+``lax.scan``), the actor dimension is data-parallel. This is the paper's
+insight in miniature: parallelism comes from the batch, not the recursion.
+``repro/kernels/nstep_returns.py`` is the Pallas twin (batch-tiled VMEM).
+
+GAE (Schulman et al. 2015) is provided as a beyond-paper option.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def n_step_returns(
+    rewards: jnp.ndarray,  # (E, T) or (T,)
+    dones: jnp.ndarray,  # (E, T) bool
+    bootstrap: jnp.ndarray,  # (E,) — V(s_{T+1})
+    gamma: float,
+) -> jnp.ndarray:
+    """Discounted n-step returns per actor. Returns (E, T)."""
+    rewards = rewards.astype(jnp.float32)
+    not_done = 1.0 - dones.astype(jnp.float32)
+
+    def step(carry, xs):
+        r, nd = xs
+        carry = r + gamma * nd * carry
+        return carry, carry
+
+    # scan over time, reversed (time axis last -> move to front)
+    _, out = jax.lax.scan(
+        step,
+        bootstrap.astype(jnp.float32),
+        (rewards.T, not_done.T),
+        reverse=True,
+    )
+    return out.T  # (E, T)
+
+
+def gae_advantages(
+    rewards: jnp.ndarray,  # (E, T)
+    dones: jnp.ndarray,  # (E, T)
+    values: jnp.ndarray,  # (E, T)
+    bootstrap: jnp.ndarray,  # (E,)
+    gamma: float,
+    lam: float = 0.95,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Generalized advantage estimation. Returns (advantages, returns)."""
+    rewards = rewards.astype(jnp.float32)
+    values = values.astype(jnp.float32)
+    not_done = 1.0 - dones.astype(jnp.float32)
+    next_values = jnp.concatenate([values[:, 1:], bootstrap[:, None]], axis=1)
+    deltas = rewards + gamma * not_done * next_values - values
+
+    def step(carry, xs):
+        delta, nd = xs
+        carry = delta + gamma * lam * nd * carry
+        return carry, carry
+
+    _, adv = jax.lax.scan(
+        step, jnp.zeros_like(bootstrap, jnp.float32), (deltas.T, not_done.T),
+        reverse=True,
+    )
+    adv = adv.T
+    return adv, adv + values

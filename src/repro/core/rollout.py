@@ -1,0 +1,59 @@
+"""The master loop — paper Algorithm 1 lines 4–10.
+
+One ``lax.scan`` iteration = one framework timestep:
+
+  1. the *master* evaluates the policy for ALL ``n_e`` environments in one
+     batched forward (line 5-6),
+  2. actions are sampled per environment (the policy "may be sampled
+     differently for each environment" — independent categorical draws),
+  3. the *workers* apply all actions in parallel (line 7-10) — here the
+     vmapped env step fused into the same XLA program.
+
+Because environments are JAX-native, acting, stepping and (in the agents)
+learning compile into a single device program per PAAC iteration.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Transition(NamedTuple):
+    obs: jnp.ndarray  # (T, E, *obs_shape)
+    action: jnp.ndarray  # (T, E)
+    reward: jnp.ndarray  # (T, E)
+    done: jnp.ndarray  # (T, E)
+    value: jnp.ndarray  # (T, E) — V(s_t) computed during acting (line 6)
+    logp: jnp.ndarray  # (T, E) — log π(a_t|s_t) at acting time
+
+
+def rollout(
+    act_fn: Callable,  # (params, obs) -> (logits (E,A), value (E,))
+    env,
+    params,
+    env_state,
+    obs,
+    key,
+    t_max: int,
+):
+    """Collect t_max steps from all n_e environments.
+
+    Returns (env_state, last_obs, key, traj: Transition [time-major]).
+    """
+
+    def step(carry, _):
+        env_state, obs, key = carry
+        key, k_act, k_env = jax.random.split(key, 3)
+        logits, value = act_fn(params, obs)
+        action = jax.random.categorical(k_act, logits)
+        logp = jax.nn.log_softmax(logits)[jnp.arange(logits.shape[0]), action]
+        env_state, next_obs, reward, done = env.step(env_state, action, k_env)
+        tr = Transition(obs, action, reward, done, value, logp)
+        return (env_state, next_obs, key), tr
+
+    (env_state, obs, key), traj = jax.lax.scan(
+        step, (env_state, obs, key), None, length=t_max
+    )
+    return env_state, obs, key, traj

@@ -1,0 +1,3 @@
+from repro.data.specs import input_specs, step_kind
+
+__all__ = ["input_specs", "step_kind"]

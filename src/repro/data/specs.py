@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct input stand-ins for every (architecture × input shape).
+
+These drive the multi-pod dry-run: weak-type-correct, shardable, no device
+allocation. The modality front-ends ([audio] frames, [vlm] patches) are
+stubs — we emit precomputed embeddings of the right shape, per the spec
+carve-out.
+
+Batch layout per shape kind:
+
+* ``train``   — a PAAC trajectory batch: the environment is a token
+  environment, one sequence = one actor's ``t_max``-step trajectory
+  (paper Algorithm 1 line 4-10), so the train step receives tokens
+  (B, S+1) [obs + actions], per-step rewards and episode-done flags.
+* ``prefill`` — batched policy evaluation over full contexts.
+* ``decode``  — the master's batched action selection (paper §3): ONE new
+  token per actor against a KV/state cache of ``seq_len``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def step_kind(shape_name: str) -> str:
+    return INPUT_SHAPES[shape_name].kind
+
+
+def _text_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Token positions available after the multimodal prefix."""
+    return seq_len - cfg.prefix_len
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one (arch, shape) pair as ShapeDtypeStructs."""
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    sd = jax.ShapeDtypeStruct
+
+    if shp.kind == "train":
+        T = _text_len(cfg, S)
+        specs = {
+            "tokens": sd((B, T + 1), I32),
+            "rewards": sd((B, T), F32),
+            "dones": sd((B, T), jnp.bool_),
+        }
+        if cfg.modality == "vision":
+            specs["prefix"] = sd((B, cfg.prefix_len, cfg.frontend_dim or cfg.d_model), F32)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = sd(
+                (B, cfg.encoder_seq_len, cfg.frontend_dim or cfg.d_model), F32
+            )
+        return specs
+
+    if shp.kind == "prefill":
+        T = _text_len(cfg, S)
+        specs = {"tokens": sd((B, T), I32)}
+        if cfg.modality == "vision":
+            specs["prefix"] = sd((B, cfg.prefix_len, cfg.frontend_dim or cfg.d_model), F32)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = sd(
+                (B, cfg.encoder_seq_len, cfg.frontend_dim or cfg.d_model), F32
+            )
+        return specs
+
+    # decode: one token per actor; the cache spec is produced separately via
+    # jax.eval_shape(init_policy_cache, ...) in the launcher.
+    return {"token": sd((B, 1), I32)}

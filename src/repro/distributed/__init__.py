@@ -1,0 +1,4 @@
+from repro.distributed.constraints import constrain, axis_context
+from repro.distributed.sharding import param_specs, input_sharding, SHARDING_MODES
+
+__all__ = ["constrain", "axis_context", "param_specs", "input_sharding", "SHARDING_MODES"]

@@ -1,0 +1,66 @@
+"""Activation sharding constraints that degrade to no-ops off-mesh.
+
+Model code calls ``constrain(x, "data", "model", None, ...)`` with *logical*
+axis names. When a mesh context is active (set by the launcher / dry-run via
+``axis_context``), this becomes ``jax.lax.with_sharding_constraint``;
+in single-device unit tests it is a no-op, so model code is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_context(mesh: Mesh):
+    """Enable sharding constraints for model code within this context."""
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def _resolve(mesh: Mesh, axis):
+    """Map a logical axis to mesh axes actually present on this mesh.
+
+    "data" maps to ("pod", "data") when a pod axis exists, so model code
+    never needs to know whether it is running single- or multi-pod.
+    """
+    if axis is None:
+        return None
+    if axis == "data" and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return axis if axis in mesh.axis_names else None
+
+
+def mesh_axis_size(axis: str) -> int:
+    """Size of a mesh axis in the active context (1 when off-mesh)."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return 1
+    sizes = dict(mesh.shape)
+    if axis == "data":
+        return sizes.get("data", 1) * sizes.get("pod", 1)
+    return sizes.get(axis, 1)
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint(x, P(*axes)) if a mesh is active, else x."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    spec = P(*[_resolve(mesh, a) for a in axes])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,197 @@
+"""Parameter / cache / input sharding rules (logical-axis based).
+
+Two modes:
+
+* ``"tp"``       — tensor parallel over "model" only; params replicated over
+                   the data axis. Right for sub-1B models (mamba2-370m).
+* ``"fsdp_tp"``  — 2D: tensor parallel over "model" PLUS parameter sharding
+                   over "data" (FSDP/ZeRO-style — the contraction-dim shard
+                   makes XLA all-gather weights per layer and reduce-scatter
+                   grads). Required for the 100B+ archs whose fp32 optimizer
+                   state cannot replicate over the data axis.
+
+Rules are path-based over the plain-dict param trees produced by
+``repro.models``. Scan-stacked layers carry extra leading axes; a rule
+specifies the spec for the *trailing* dims and leading axes get None.
+Any dim that does not divide its mesh axis is left unsharded (e.g. kv=2
+heads against a 16-way model axis; batch=1 at long_500k).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+SHARDING_MODES = ("tp", "fsdp_tp", "zero1")
+# "zero1": parameters tensor-parallel only (replicated over data — no
+# per-layer weight gathers in fwd/bwd), optimizer state sharded over data
+# (ZeRO-1). XLA inserts one grad reduce-scatter + one updated-param
+# all-gather per step instead of per-layer-use gathers. Right for dense
+# archs whose params fit replicated-over-data (e.g. <=33B bf16 on v5e);
+# the 100B+ MoE archs still need fsdp_tp.
+
+# parameter-name classes --------------------------------------------------
+_UP_PROJ = {"wq", "wk", "wv", "wuq", "wukv", "wi", "wg", "w_z", "w_x", "w_dt"}
+_DOWN_PROJ = {"wo", "out_proj"}
+_SMALL_OUT = {"wdq", "wdkv", "w_B", "w_C"}  # fsdp-in, unsharded out
+_HEAD_VECS = {"A_log", "D", "dt_bias"}  # per-SSM-head vectors -> "model"
+_REPLICATED = {"scale", "bias", "b", "conv_B", "conv_C", "conv_b"}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    # works for both Mesh and AbstractMesh
+    return dict(mesh.shape)
+
+
+def _data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _data_size(mesh: Mesh) -> int:
+    s = _axis_sizes(mesh)
+    return s.get("data", 1) * s.get("pod", 1)
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def _base_spec(path: str, name: str, shape, mesh: Mesh, mode: str):
+    """Spec for the trailing dims of one leaf (no scan axes)."""
+    sizes = _axis_sizes(mesh)
+    msize = sizes.get("model", 1)
+    dsize = _data_size(mesh)
+    data = _data_axes(mesh)
+    fsdp = mode == "fsdp_tp"
+
+    def m(dim):  # model axis if divisible
+        return "model" if _fits(dim, msize) else None
+
+    def d(dim):  # (pod,)data axes if divisible
+        return data if fsdp and _fits(dim, dsize) else None
+
+    if name in _REPLICATED:
+        return (None,) * min(len(shape), 1)
+    if name == "embed":
+        return (m(shape[-2]) or None, d(shape[-1]))
+    if name == "conv_x":
+        return (None, m(shape[-1]))
+    if name in _HEAD_VECS:
+        return (m(shape[-1]),)
+    if "moe/" in path or path.endswith("moe"):
+        if name in ("wi", "wg"):  # (E, d, ff)
+            return (m(shape[-3]), d(shape[-2]), None)
+        if name == "wo":  # (E, ff, d)
+            return (m(shape[-3]), None, d(shape[-1]))
+        if name == "w" and "router" in path:
+            return (None, None)
+    if "heads" in path:
+        if "policy" in path and name == "w":
+            return (d(shape[-2]), m(shape[-1]))
+        return (None,) * min(len(shape), 2)
+    if "frontend_proj" in path:
+        return (None, None)
+    if name == "w":
+        # generic linear inside a named module: infer from parent name
+        parent = path.split("/")[-2] if "/" in path else ""
+        if parent in _UP_PROJ:
+            return (d(shape[-2]), m(shape[-1]))
+        if parent in _DOWN_PROJ:
+            return (m(shape[-2]), d(shape[-1]))
+        if parent in _SMALL_OUT:
+            return (d(shape[-2]), None)
+        return (None, None)
+    return (None,) * min(len(shape), len(shape))
+
+
+def param_specs(params_tree, mesh: Mesh, mode: str = "fsdp_tp"):
+    """PartitionSpec pytree matching ``params_tree`` (arrays or SDS)."""
+    assert mode in SHARDING_MODES
+
+    def leaf_spec(path, leaf):
+        pstr = _path_str(path)
+        name = pstr.split("/")[-1]
+        parent_path = "/".join(pstr.split("/")[:-1])
+        shape = leaf.shape
+        base = _base_spec(parent_path + "/" + name, name, shape, mesh, mode)
+        base = tuple(base)[: len(shape)]
+        pad = len(shape) - len(base)
+        return P(*((None,) * pad + base))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh):
+    """KV/state cache specs: batch -> data axes, head-ish dims -> model.
+
+    Cache leaves look like (L, B, S, Hkv, D) / (L, B, S, rank) /
+    (L, B, H, P, N) / (L, B, K-1, C). We shard dim 1 (batch) over data when
+    divisible, and any later dim divisible by the model axis that represents
+    heads/channels — conservatively only dims whose name implies heads would
+    be ideal; shapes suffice here: we try dim -2 for 5D (heads) and dim -1
+    for conv channels.
+    """
+    sizes = _axis_sizes(mesh)
+    msize = sizes.get("model", 1)
+    dsize = _data_size(mesh)
+    data = _data_axes(mesh)
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        name = _path_str(path).split("/")[-1]
+        spec = [None] * len(shape)
+        # batch dim: caches are (L, B, ...) or (L, G, B, ...) for hybrid groups
+        bdim = 1
+        if len(shape) >= 3 and shape[1] < shape[0] and name in ():
+            bdim = 1
+        if len(shape) > bdim and _fits(shape[bdim], dsize):
+            spec[bdim] = data
+        elif len(shape) > bdim + 1 and _fits(shape[bdim + 1], dsize):
+            spec[bdim + 1] = data  # hybrid: (G, every?, B, ...)
+        if name in ("k", "v") and len(shape) >= 4 and _fits(shape[-2], msize):
+            spec[-2] = "model"
+        if name == "state" and _fits(shape[-3], msize):
+            spec[-3] = "model"  # (.., H, P, N)
+        if name == "conv_x" and _fits(shape[-1], msize):
+            spec[-1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def input_sharding(batch_tree, mesh: Mesh):
+    """Batch inputs: dim 0 over (pod, data) when divisible, else replicated."""
+    dsize = _data_size(mesh)
+    data = _data_axes(mesh)
+
+    def leaf_spec(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if shape and _fits(shape[0], dsize):
+            spec[0] = data
+        return P(*spec)
+
+    return jax.tree_util.tree_map(leaf_spec, batch_tree)
+
+
+def to_named(tree_of_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,19 @@
+from repro.envs.base import VectorEnv
+from repro.envs.atari_like import AtariLike
+from repro.envs.cartpole import CartPole
+from repro.envs.catch import Catch
+from repro.envs.gridworld import GridWorld
+from repro.envs.host_env import HostEnvPool
+from repro.envs.token_env import TokenEnv
+from repro.envs.wrappers import FrameStack
+
+__all__ = [
+    "VectorEnv",
+    "AtariLike",
+    "CartPole",
+    "Catch",
+    "GridWorld",
+    "HostEnvPool",
+    "TokenEnv",
+    "FrameStack",
+]

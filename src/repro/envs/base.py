@@ -1,0 +1,69 @@
+"""Vectorized pure-JAX environment API.
+
+The paper maintains ``n_e`` environment instances stepped by ``n_w`` worker
+threads (§3). Here environments are JAX programs: the whole vector of
+``n_e`` instances is one state pytree (leading axis n_e) and ``step`` is
+traced/compiled together with action selection — the "workers" are the
+vector lanes of the same XLA program (DESIGN.md §2).
+
+Contract (all functions pure, jit/vmap/shard-safe):
+
+* ``reset(key) -> state``          state pytree, leaves (n_e, ...)
+* ``observe(state) -> obs``        (n_e, *obs_shape)
+* ``step(state, actions, key) -> (state, obs, reward, done)``
+    - auto-resets finished instances (paper §5.1 restarts on terminal)
+    - reward: (n_e,) f32 — done: (n_e,) bool flags the transition that ended
+      an episode (reward is the pre-reset reward)
+"""
+from __future__ import annotations
+
+import abc
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VectorEnv(abc.ABC):
+    """Base class: subclasses implement single-instance dynamics; this class
+    vectorizes them over n_e with vmap and handles auto-reset."""
+
+    obs_shape: Tuple[int, ...]
+    num_actions: int
+
+    def __init__(self, n_envs: int):
+        self.n_envs = n_envs
+
+    # -- single-instance dynamics (to be implemented) -----------------------
+    @abc.abstractmethod
+    def _reset_one(self, key):  # -> state
+        ...
+
+    @abc.abstractmethod
+    def _observe_one(self, state):  # -> obs
+        ...
+
+    @abc.abstractmethod
+    def _step_one(self, state, action, key):  # -> (state, reward, done)
+        ...
+
+    # -- vectorized API ------------------------------------------------------
+    def reset(self, key):
+        return jax.vmap(self._reset_one)(jax.random.split(key, self.n_envs))
+
+    def observe(self, state):
+        return jax.vmap(self._observe_one)(state)
+
+    def step(self, state, actions, key):
+        ks = jax.random.split(key, 2 * self.n_envs).reshape(2, self.n_envs, -1)
+        new_state, reward, done = jax.vmap(self._step_one)(state, actions, ks[0])
+        # auto-reset finished instances
+        reset_state = jax.vmap(self._reset_one)(ks[1])
+        new_state = jax.tree_util.tree_map(
+            lambda r, n: jnp.where(
+                done.reshape((self.n_envs,) + (1,) * (n.ndim - 1)), r, n
+            ),
+            reset_state, new_state,
+        )
+        obs = self.observe(new_state)
+        return new_state, obs, reward.astype(jnp.float32), done

@@ -1,0 +1,58 @@
+"""CartPole with standard Gym dynamics (pure JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import VectorEnv
+
+
+class CartPole(VectorEnv):
+    obs_shape = (4,)
+    num_actions = 2
+
+    def __init__(self, n_envs: int, max_steps: int = 200):
+        super().__init__(n_envs)
+        self.max_steps = max_steps
+        self.gravity = 9.8
+        self.masscart = 1.0
+        self.masspole = 0.1
+        self.length = 0.5
+        self.force_mag = 10.0
+        self.tau = 0.02
+        self.theta_limit = 12 * 2 * jnp.pi / 360
+        self.x_limit = 2.4
+
+    def _reset_one(self, key):
+        s = jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
+        return {"s": s, "t": jnp.zeros((), jnp.int32)}
+
+    def _observe_one(self, state):
+        return state["s"].astype(jnp.float32)
+
+    def _step_one(self, state, action, key):
+        x, x_dot, theta, theta_dot = state["s"]
+        force = jnp.where(action == 1, self.force_mag, -self.force_mag)
+        costheta, sintheta = jnp.cos(theta), jnp.sin(theta)
+        total_mass = self.masscart + self.masspole
+        polemass_length = self.masspole * self.length
+        temp = (force + polemass_length * theta_dot**2 * sintheta) / total_mass
+        thetaacc = (self.gravity * sintheta - costheta * temp) / (
+            self.length * (4.0 / 3.0 - self.masspole * costheta**2 / total_mass)
+        )
+        xacc = temp - polemass_length * thetaacc * costheta / total_mass
+        s = jnp.stack(
+            [
+                x + self.tau * x_dot,
+                x_dot + self.tau * xacc,
+                theta + self.tau * theta_dot,
+                theta_dot + self.tau * thetaacc,
+            ]
+        )
+        t = state["t"] + 1
+        fail = (
+            (jnp.abs(s[0]) > self.x_limit)
+            | (jnp.abs(s[2]) > self.theta_limit)
+        )
+        done = fail | (t >= self.max_steps)
+        return {"s": s, "t": t}, jnp.asarray(1.0), done

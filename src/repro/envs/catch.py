@@ -1,0 +1,37 @@
+"""Catch (bsuite-style): a ball falls down a rows×cols board; the paddle on
+the bottom row must catch it. Reward ±1 on the final row. Obs: flat board."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import VectorEnv
+
+
+class Catch(VectorEnv):
+    def __init__(self, n_envs: int, rows: int = 10, cols: int = 5):
+        super().__init__(n_envs)
+        self.rows, self.cols = rows, cols
+        self.obs_shape = (rows * cols,)
+        self.num_actions = 3  # left, stay, right
+
+    def _reset_one(self, key):
+        ball_col = jax.random.randint(key, (), 0, self.cols)
+        return {
+            "ball": jnp.array([0, 0], jnp.int32).at[1].set(ball_col),
+            "paddle": jnp.asarray(self.cols // 2, jnp.int32),
+        }
+
+    def _observe_one(self, state):
+        board = jnp.zeros((self.rows, self.cols), jnp.float32)
+        board = board.at[state["ball"][0], state["ball"][1]].set(1.0)
+        board = board.at[self.rows - 1, state["paddle"]].set(1.0)
+        return board.reshape(-1)
+
+    def _step_one(self, state, action, key):
+        paddle = jnp.clip(state["paddle"] + action - 1, 0, self.cols - 1)
+        ball = state["ball"] + jnp.array([1, 0])
+        done = ball[0] >= self.rows - 1
+        caught = ball[1] == paddle
+        reward = jnp.where(done, jnp.where(caught, 1.0, -1.0), 0.0)
+        return {"ball": ball, "paddle": paddle}, reward, done

@@ -1,0 +1,47 @@
+"""GridWorld: N×N grid, agent navigates to a goal.
+
+Reward: +1 at goal (episode ends), -0.01 per step, timeout at ``max_steps``.
+Observation: one-hot x/y of agent and goal (4N floats). Actions: 4 moves.
+A fast-converging sanity environment for the PAAC learning tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import VectorEnv
+
+
+class GridWorld(VectorEnv):
+    def __init__(self, n_envs: int, size: int = 5, max_steps: int = 50):
+        super().__init__(n_envs)
+        self.size = size
+        self.max_steps = max_steps
+        self.obs_shape = (4 * size,)
+        self.num_actions = 4
+
+    def _reset_one(self, key):
+        k1, k2 = jax.random.split(key)
+        pos = jax.random.randint(k1, (2,), 0, self.size)
+        goal = jax.random.randint(k2, (2,), 0, self.size)
+        return {"pos": pos, "goal": goal, "t": jnp.zeros((), jnp.int32)}
+
+    def _observe_one(self, state):
+        S = self.size
+        return jnp.concatenate(
+            [
+                jax.nn.one_hot(state["pos"][0], S),
+                jax.nn.one_hot(state["pos"][1], S),
+                jax.nn.one_hot(state["goal"][0], S),
+                jax.nn.one_hot(state["goal"][1], S),
+            ]
+        ).astype(jnp.float32)
+
+    def _step_one(self, state, action, key):
+        moves = jnp.array([[0, 1], [0, -1], [1, 0], [-1, 0]])
+        pos = jnp.clip(state["pos"] + moves[action], 0, self.size - 1)
+        at_goal = jnp.all(pos == state["goal"])
+        t = state["t"] + 1
+        reward = jnp.where(at_goal, 1.0, -0.01)
+        done = at_goal | (t >= self.max_steps)
+        return {"pos": pos, "goal": state["goal"], "t": t}, reward, done

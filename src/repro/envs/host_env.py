@@ -1,0 +1,79 @@
+"""Host-side environment worker pool — the paper's n_w workers, literally.
+
+The JAX-native environments in this package fuse stepping into the XLA
+program (DESIGN.md §2), which is faster but only possible for environments
+expressible in JAX. For *external* environments (a C++ emulator like ALE, a
+network simulator, a real system), this module reproduces the paper's §3
+architecture exactly: ``n_e`` environment instances are partitioned among
+``n_w`` Python worker threads; the master hands each worker its slice of
+the batched action vector; workers step their environments in parallel and
+write observations/rewards into shared pinned buffers.
+
+This path is NOT used by the dry-run or benchmarks (it is host-bound by
+construction — the paper's Fig. 2 "50% env time" regime); it exists so the
+framework can drive non-JAX environments with zero changes to the agents.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HostEnvPool:
+    """Paper §3: n_e external env instances stepped by n_w workers.
+
+    env_fns: callables creating gym-style envs with reset() -> obs and
+    step(action) -> (obs, reward, done, info).
+    """
+
+    def __init__(self, env_fns: Sequence[Callable], n_workers: int = 8,
+                 obs_shape: Tuple[int, ...] = (), obs_dtype=np.float32):
+        self.envs = [fn() for fn in env_fns]
+        self.n_envs = len(self.envs)
+        self.n_workers = min(n_workers, self.n_envs)
+        self.obs_shape = tuple(obs_shape)
+        # shared output buffers (the paper's shared memory between master
+        # and workers)
+        self._obs = np.zeros((self.n_envs,) + self.obs_shape, obs_dtype)
+        self._reward = np.zeros((self.n_envs,), np.float32)
+        self._done = np.zeros((self.n_envs,), bool)
+        self._pool = cf.ThreadPoolExecutor(max_workers=self.n_workers)
+        self._slices = np.array_split(np.arange(self.n_envs), self.n_workers)
+
+    def reset(self) -> jnp.ndarray:
+        for i, env in enumerate(self.envs):
+            self._obs[i] = env.reset()
+        return jnp.asarray(self._obs)
+
+    def _work(self, idxs: np.ndarray, actions: np.ndarray):
+        for i in idxs:
+            obs, r, done, _ = self.envs[i].step(int(actions[i]))
+            if done:  # paper §5.1: restart on terminal
+                obs = self.envs[i].reset()
+            self._obs[i] = obs
+            self._reward[i] = r
+            self._done[i] = done
+
+    def step(self, actions) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Apply the master's batched actions; workers run in parallel."""
+        actions = np.asarray(actions)
+        futures = [
+            self._pool.submit(self._work, idxs, actions) for idxs in self._slices
+        ]
+        for f in futures:
+            f.result()
+        return (
+            jnp.asarray(self._obs),
+            jnp.asarray(self._reward),
+            jnp.asarray(self._done),
+        )
+
+    def close(self):
+        self._pool.shutdown(wait=False)
+        for env in self.envs:
+            if hasattr(env, "close"):
+                env.close()

@@ -1,0 +1,47 @@
+"""TokenEnv: a token-manipulation game for LLM policies.
+
+This is how the assigned transformer architectures plug into PAAC: the
+observation is the token history, the action is the next token, and the
+reward is programmatic — exactly the RLHF-style generation setting, which
+is the modern instance of the paper's master/actor pattern (batched action
+selection = batched decode).
+
+Game ("k-back echo"): at each step the correct action is the token emitted
+``k`` steps ago (the prompt seeds the first k tokens). Reward +1 for the
+correct token, 0 otherwise. Episodes run ``horizon`` steps. An optimal
+policy is learnable by any causal model with ≥k context, so small models
+solve it quickly — giving a real learning-signal test for every token arch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import VectorEnv
+
+
+class TokenEnv(VectorEnv):
+    def __init__(self, n_envs: int, vocab: int = 64, ctx: int = 32, k: int = 2,
+                 horizon: int = 64):
+        super().__init__(n_envs)
+        self.vocab = vocab
+        self.ctx = ctx
+        self.k = k
+        self.horizon = horizon
+        self.obs_shape = (ctx,)
+        self.num_actions = vocab
+
+    def _reset_one(self, key):
+        prompt = jax.random.randint(key, (self.ctx,), 0, self.vocab)
+        return {"hist": prompt, "t": jnp.zeros((), jnp.int32)}
+
+    def _observe_one(self, state):
+        return state["hist"]
+
+    def _step_one(self, state, action, key):
+        target = state["hist"][-self.k]
+        reward = (action == target).astype(jnp.float32)
+        hist = jnp.concatenate([state["hist"][1:], action[None].astype(jnp.int32)])
+        t = state["t"] + 1
+        done = t >= self.horizon
+        return {"hist": hist, "t": t}, reward, done

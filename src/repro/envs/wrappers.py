@@ -1,0 +1,50 @@
+"""Environment wrappers (paper §5.1 pipeline pieces)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import VectorEnv
+
+
+class FrameStack(VectorEnv):
+    """Stack the last ``n`` observations along a trailing channel axis.
+
+    Converts (n_e, H, W) frames into (n_e, H, W, n) — the input format of the
+    paper's CNNs (84×84×4).
+    """
+
+    def __init__(self, env: VectorEnv, n: int = 4):
+        super().__init__(env.n_envs)
+        self.env = env
+        self.n = n
+        self.obs_shape = tuple(env.obs_shape) + (n,)
+        self.num_actions = env.num_actions
+
+    def reset(self, key):
+        inner = self.env.reset(key)
+        frame = self.env.observe(inner)
+        stack = jnp.repeat(frame[..., None], self.n, axis=-1)
+        return {"inner": inner, "stack": stack}
+
+    def observe(self, state):
+        return state["stack"]
+
+    def step(self, state, actions, key):
+        inner, obs, reward, done = self.env.step(state["inner"], actions, key)
+        stack = jnp.concatenate([state["stack"][..., 1:], obs[..., None]], axis=-1)
+        # reset stack for finished episodes (avoid cross-episode leakage)
+        fresh = jnp.repeat(obs[..., None], self.n, axis=-1)
+        mask = done.reshape((-1,) + (1,) * (stack.ndim - 1))
+        stack = jnp.where(mask, fresh, stack)
+        return {"inner": inner, "stack": stack}, stack, reward, done
+
+    # single-instance hooks unused (we override the vector API)
+    def _reset_one(self, key):
+        raise NotImplementedError
+
+    def _observe_one(self, state):
+        raise NotImplementedError
+
+    def _step_one(self, state, action, key):
+        raise NotImplementedError

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* ``nstep_returns``     — Algorithm 1's batched return recursion
+* ``flash_attention``   — blocked online-softmax prefill attention
+* ``decode_attention``  — flash-decoding against long KV caches
+* ``ssd_scan``          — fused chunked Mamba2/SSD scan
+
+Each kernel module pairs with ``ops.py`` (jit'd dispatch) and ``ref.py``
+(pure-jnp oracle); tests sweep shapes/dtypes and assert allclose.
+"""
+from repro.kernels.ops import (
+    decode_attention,
+    flash_attention,
+    nstep_returns,
+    ssd_scan,
+)
+
+__all__ = ["nstep_returns", "flash_attention", "decode_attention", "ssd_scan"]

@@ -1,0 +1,66 @@
+"""Pallas kernel: batched n-step discounted returns (Algorithm 1, 13–15).
+
+The recursion R_t = r_t + γ·(1-done_t)·R_{t+1} is sequential in time but
+embarrassingly parallel over actors — PAAC's central observation. The
+kernel tiles the actor dimension into VMEM blocks (grid over E/block_e) and
+walks t_max backwards inside the block; one HBM round-trip per tile instead
+of t_max tiny host-side ops.
+
+VMEM budget: (2·block_e·T + 2·block_e) fp32 — block_e=256, T=4096 → 8 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, nd_ref, boot_ref, out_ref, *, gamma: float, T: int):
+    carry = boot_ref[...].astype(jnp.float32)  # (block_e,)
+
+    def body(i, carry):
+        t = T - 1 - i
+        r_t = pl.load(r_ref, (slice(None), pl.dslice(t, 1)))[:, 0]
+        nd_t = pl.load(nd_ref, (slice(None), pl.dslice(t, 1)))[:, 0]
+        carry = r_t.astype(jnp.float32) + gamma * nd_t.astype(jnp.float32) * carry
+        pl.store(out_ref, (slice(None), pl.dslice(t, 1)), carry[:, None])
+        return carry
+
+    jax.lax.fori_loop(0, T, body, carry)
+
+
+def nstep_returns_pallas(
+    rewards: jnp.ndarray,  # (E, T)
+    dones: jnp.ndarray,  # (E, T) bool
+    bootstrap: jnp.ndarray,  # (E,)
+    gamma: float,
+    *,
+    block_e: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    E, T = rewards.shape
+    block_e = min(block_e, E)
+    pad = (-E) % block_e
+    nd = 1.0 - dones.astype(jnp.float32)
+    r = rewards.astype(jnp.float32)
+    b = bootstrap.astype(jnp.float32)
+    if pad:
+        r = jnp.pad(r, ((0, pad), (0, 0)))
+        nd = jnp.pad(nd, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad),))
+    grid = ((E + pad) // block_e,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, gamma=gamma, T=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, T), lambda e: (e, 0)),
+            pl.BlockSpec((block_e, T), lambda e: (e, 0)),
+            pl.BlockSpec((block_e,), lambda e: (e,)),
+        ],
+        out_specs=pl.BlockSpec((block_e, T), lambda e: (e, 0)),
+        out_shape=jax.ShapeDtypeStruct((E + pad, T), jnp.float32),
+        interpret=interpret,
+    )(r, nd, b)
+    return out[:E]

@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function is the direct mathematical definition, materializing whatever
+intermediate tensors it likes — tests sweep shapes/dtypes and
+``assert_allclose`` kernels (interpret mode) against these.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def nstep_returns_ref(rewards, dones, bootstrap, gamma: float):
+    """Paper Algorithm 1 lines 11-15. rewards/dones: (E, T); bootstrap: (E,)."""
+    E, T = rewards.shape
+    nd = 1.0 - dones.astype(jnp.float32)
+    out = []
+    carry = bootstrap.astype(jnp.float32)
+    for t in range(T - 1, -1, -1):
+        carry = rewards[:, t].astype(jnp.float32) + gamma * nd[:, t] * carry
+        out.append(carry)
+    return jnp.stack(out[::-1], axis=1)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D). Returns (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, Dv = v.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, scale=None):
+    """q: (B, H, D); caches: (B, S, Hkv, D); pos: scalar int (attend <= pos)."""
+    B, H, D = q.shape
+    _, S, Hkv, Dv = v_cache.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, Dv).astype(q.dtype)
+
+
+def mla_decode_attention_ref(q_lat, q_rope, c_cache, kr_cache, pos, scale):
+    """Latent-space MLA decode. q_lat: (B,H,R); q_rope: (B,H,Rr);
+    c_cache: (B,S,R); kr_cache: (B,S,Rr). Returns (B,H,R)."""
+    s = jnp.einsum("bhr,bkr->bhk", q_lat.astype(jnp.float32),
+                   c_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,bkr->bhk", q_rope.astype(jnp.float32),
+                       kr_cache.astype(jnp.float32))
+    s = s * scale
+    valid = jnp.arange(c_cache.shape[1]) <= pos
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkr->bhr", p, c_cache.astype(jnp.float32))
+    return out.astype(q_lat.dtype)
+
+
+def ssd_scan_ref(x, dt, A_log, B_mat, C_mat, D_vec, *, chunk: int = None):
+    """Sequential SSD recurrence (exact). x: (B,S,H,P); dt: (B,S,H);
+    B_mat/C_mat: (B,S,N); A_log/D_vec: (H,). Returns (y, final_state)."""
+    Bsz, S, H, P = x.shape
+    N = B_mat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    lam = jnp.exp(-jnp.exp(A_log)[None, None, :] * dtf)  # (B,S,H)
+    Bf = B_mat.astype(jnp.float32)
+    Cf = C_mat.astype(jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, lam_t, B_t, C_t = inp
+        state = state * lam_t[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt_t, x_t, B_t
+        )
+        y_t = jnp.einsum("bhpn,bn->bhp", state, C_t)
+        return state, y_t
+
+    s0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    state, ys = jax.lax.scan(
+        step,
+        s0,
+        (
+            xf.transpose(1, 0, 2, 3),
+            dtf.transpose(1, 0, 2),
+            lam.transpose(1, 0, 2),
+            Bf.transpose(1, 0, 2),
+            Cf.transpose(1, 0, 2),
+        ),
+    )
+    y = ys.transpose(1, 0, 2, 3) + D_vec[None, None, :, None] * xf
+    return y.astype(x.dtype), state

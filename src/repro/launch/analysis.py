@@ -1,0 +1,135 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch, shape, mesh), in seconds (see spec §ROOFLINE):
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = wire_bytes_per_chip / link_bw
+
+``compiled.cost_analysis()`` operates on the SPMD-partitioned per-device
+module, so flops/bytes are already per chip. Collective bytes are parsed
+from the optimized HLO text: for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute we take the result shape
+bytes and convert to per-chip wire bytes with ring-algorithm factors
+(all-reduce 2(N-1)/N, all-gather (N-1)/N of the FULL gathered tensor,
+reduce-scatter (N-1)/N, all-to-all (N-1)/N, permute 1.0), N = group size
+from replica_groups.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    return 1
+
+
+def _wire_factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, float]:
+    """Sum per-chip wire bytes per collective type from optimized HLO."""
+    out = {op: 0.0 for op in _COLLECTIVES}
+    counts = {op: 0 for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^\s]+)\s+([\w\-]+)", stripped)
+        if not m:
+            continue
+        op_name = m.group(2)
+        base = None
+        for op in _COLLECTIVES:
+            if op_name == op or op_name.startswith(op + "-start") or op_name.startswith(op + "."):
+                base = op
+                break
+        if base is None:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        n = _group_size(stripped)
+        out[base] += nbytes * _wire_factor(base, n)
+        counts[base] += 1
+    out["total_wire_bytes"] = sum(out[op] for op in _COLLECTIVES)
+    out["counts"] = counts  # type: ignore
+    return out
+
+
+def roofline_terms(
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    wire_bytes_per_chip: float,
+) -> Dict[str, float]:
+    compute = flops_per_chip / PEAK_FLOPS_BF16
+    memory = bytes_per_chip / HBM_BW
+    collective = wire_bytes_per_chip / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms
+
+
+def active_params(cfg, params_tree) -> float:
+    """Parameter count weighted by MoE activation (top-k of E experts)."""
+    import jax
+
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        size = 1
+        for d in leaf.shape:
+            size *= d
+        if cfg.num_experts and "/moe/" in pstr and pstr.split("/")[-2] in ("moe",) or (
+            cfg.num_experts and "moe" in pstr and pstr.split("/")[-1] in ("wi", "wg", "wo")
+        ):
+            size = size * cfg.num_experts_per_tok / cfg.num_experts
+        total += size
+    return total
+
+
+def model_flops(cfg, params_tree, tokens: int) -> float:
+    """MODEL_FLOPS = 6 · N_active · D (the spec's useful-compute yardstick)."""
+    return 6.0 * active_params(cfg, params_tree) * tokens

@@ -1,0 +1,255 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) pair.
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices stand in for 2 TPU v5e pods; ``.lower().compile()``
+must succeed and yields ``memory_analysis()`` / ``cost_analysis()`` plus the
+optimized HLO that the roofline analysis (EXPERIMENTS.md §Roofline) reads.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    python -m repro.launch.dryrun --all            # every assigned pair
+    python -m repro.launch.dryrun --all --multi-pod
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.data.specs import input_specs  # noqa: E402
+from repro.distributed.constraints import axis_context  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    cache_specs,
+    input_sharding,
+    param_specs,
+    to_named,
+)
+from repro.launch.analysis import model_flops, roofline_terms  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+)
+from repro.models import init_policy, init_policy_cache  # noqa: E402
+
+SWA_WINDOW = 8192  # sliding-window variant used for long_500k on attn archs
+
+
+def adjust_cfg(cfg, shape_name: str):
+    """Per-shape config adjustments (documented in DESIGN.md §4)."""
+    if shape_name == "long_500k":
+        if not cfg.supports_long_context:
+            return None  # skipped (seamless enc-dec; DESIGN.md §4)
+        if cfg.family not in ("ssm",):
+            cfg = cfg.replace(sliding_window=SWA_WINDOW)
+    return cfg
+
+
+def skip_reason(cfg, shape_name: str):
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return "enc-dec speech model: no 500k autoregressive decode (DESIGN.md §4)"
+    return None
+
+
+def _sds_tree(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+               sharding_mode: str = "fsdp_tp", mla_absorb: bool = False,
+               donate: bool = True, save_hlo: str = "", cfg_overrides=None):
+    """Lower + compile one pair. Returns a report dict (or skip record)."""
+    cfg0 = get_config(arch)
+    reason = skip_reason(cfg0, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+    cfg = adjust_cfg(cfg0, shape_name)
+    if mla_absorb and cfg.attention == "mla":
+        cfg = cfg.replace(mla_absorb=True)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shp = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    with axis_context(mesh):
+        params_sds = _sds_tree(lambda: init_policy(jax.random.PRNGKey(0), cfg))
+        p_shard = to_named(param_specs(params_sds, mesh, sharding_mode), mesh)
+        batch_sds = input_specs(cfg, shape_name)
+        b_shard = to_named(input_sharding(batch_sds, mesh), mesh)
+        repl = NamedSharding(mesh, P())
+
+        if shp.kind == "train":
+            step_fn, opt = build_train_step(cfg, n_e=shp.global_batch)
+            opt_sds = _sds_tree(opt.init, params_sds)
+            # zero1: params replicated over data ("tp" specs) but optimizer
+            # state sharded over data ("fsdp_tp" specs) — ZeRO-1
+            opt_mode = "fsdp_tp" if sharding_mode == "zero1" else sharding_mode
+            o_shard = to_named(param_specs(opt_sds, mesh, opt_mode), mesh)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, b_shard, repl),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(
+                params_sds, opt_sds, batch_sds, jax.ShapeDtypeStruct((), jnp.int32)
+            )
+            tokens = shp.global_batch * (shp.seq_len - cfg.prefix_len)
+        elif shp.kind == "prefill":
+            step_fn = build_prefill_step(cfg)
+            jitted = jax.jit(step_fn, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_sds, batch_sds)
+            tokens = shp.global_batch * (shp.seq_len - cfg.prefix_len)
+        else:  # decode
+            step_fn = build_serve_step(cfg)
+            cache_sds = _sds_tree(
+                lambda: init_policy_cache(cfg, shp.global_batch, shp.seq_len)
+            )
+            c_shard = to_named(cache_specs(cache_sds, mesh), mesh)
+            key_sds = _sds_tree(lambda: jax.random.key_data(jax.random.PRNGKey(0)))
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, c_shard, b_shard["token"], repl, repl),
+                out_shardings=(None, None, c_shard),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(
+                params_sds, cache_sds, batch_sds["token"],
+                jax.ShapeDtypeStruct((), jnp.int32), key_sds,
+            )
+            tokens = shp.global_batch  # one new token per actor
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_report = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_report = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    # trip-count-aware static analysis (XLA cost_analysis counts while
+    # bodies once — see hlo_analysis.py docstring); raw numbers kept below
+    static = analyze_hlo(hlo)
+    flops = static["flops"]
+    byac = static["bytes"]
+    coll = {
+        k.replace("wire_", ""): v for k, v in static.items() if k.startswith("wire_")
+    }
+    coll["total_wire_bytes"] = static["collective_wire_bytes"]
+    terms = roofline_terms(flops, byac, coll["total_wire_bytes"])
+    mf6 = model_flops(cfg, params_sds, tokens)  # 6·N_active·tokens
+    # 6ND counts fwd+bwd (train); inference is fwd-only -> 2ND
+    useful = mf6 if shp.kind == "train" else mf6 / 3.0
+
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "sharding_mode": sharding_mode,
+        "mla_absorb": bool(mla_absorb and cfg0.attention == "mla"),
+        "kind": shp.kind,
+        "tokens_per_step": tokens,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_chip": flops,
+        "bytes_per_chip": byac,
+        "collectives": coll,
+        "collective_counts": static.get("collective_counts", {}),
+        "raw_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "note": "XLA counts while bodies once; see hlo_analysis.py",
+        },
+        "memory_analysis": mem_report,
+        "roofline": terms,
+        "model_flops_global": useful,
+        "useful_flops_ratio": (useful / (flops * chips)) if flops else None,
+    }
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES) + ["all"], default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sharding-mode", default="fsdp_tp", choices=("tp", "fsdp_tp"))
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.arch == "all" or args.all) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.shape == "all" or args.all) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                if args.mla_absorb:
+                    tag += "_absorb"
+                try:
+                    rep = lower_pair(
+                        arch, shape, multi_pod=mp,
+                        sharding_mode=args.sharding_mode,
+                        mla_absorb=args.mla_absorb,
+                    )
+                except Exception:
+                    failures += 1
+                    rep = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "error": traceback.format_exc(limit=20),
+                    }
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rep, f, indent=2, default=str)
+                if "error" in rep:
+                    print(f"FAIL {tag}")
+                    print(rep["error"].splitlines()[-1])
+                elif "skipped" in rep:
+                    print(f"SKIP {tag}: {rep['skipped']}")
+                else:
+                    r = rep["roofline"]
+                    print(
+                        f"OK   {tag}: compile={rep['compile_s']}s "
+                        f"flops/chip={rep['flops_per_chip']:.3e} "
+                        f"bytes/chip={rep['bytes_per_chip']:.3e} "
+                        f"wire={rep['collectives']['total_wire_bytes']:.3e} "
+                        f"bottleneck={r['bottleneck']}"
+                    )
+    if failures:
+        raise SystemExit(f"{failures} pair(s) failed")
+
+
+if __name__ == "__main__":
+    main()

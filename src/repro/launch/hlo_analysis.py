@@ -1,0 +1,322 @@
+"""Trip-count-aware static analysis of optimized (SPMD-partitioned) HLO.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+but our trunks are ``lax.scan``s over layers — so XLA's aggregate FLOPs/bytes
+under-count 40–80 layer models by ~the layer count (verified empirically in
+EXPERIMENTS.md §Dry-run notes). This module re-derives per-chip costs from
+the HLO text with loop multipliers:
+
+* builds the computation call graph (fusion ``calls=``, while ``body=`` /
+  ``condition=``, ``to_apply=``),
+* extracts while trip counts from the condition computation's s32 constant,
+* FLOPs: every ``dot`` (2 · prod(result) · contraction), multiplied along
+  the call chain,
+* HBM bytes: operands + result of top-level compute instructions (fusions
+  count as one unit — the roofline assumption that fused ops make one HBM
+  round trip),
+* collectives: wire bytes with ring factors × loop multipliers.
+
+This is a static model, not a simulator; EXPERIMENTS.md records both these
+corrected numbers and XLA's raw ones.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "u1": 1, "pred": 1, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|u4|s4|pred)"
+    r"\[([0-9,]*)\]"
+)
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops that plausibly make an HBM round trip (fusions count once as a unit;
+# bare elementwise ops are excluded — the TPU backend would fuse them)
+_BYTE_OPS = {
+    "fusion", "dot", "convolution", "reduce", "sort", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "copy", "transpose", "concatenate",
+    "pad", "slice", "select-and-scatter", "reduce-window", "reverse",
+    "cholesky", "triangular-solve",
+}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+class Instruction:
+    __slots__ = ("name", "type_str", "op", "operands", "attrs", "line")
+
+    def __init__(self, name, type_str, op, operands, attrs, line):
+        self.name = name
+        self.type_str = type_str
+        self.op = op
+        self.operands = operands
+        self.attrs = attrs
+        self.line = line
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+([\w\-]+)\((.*?)\)(.*)$"
+)
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)(?:\.clone)?\s*\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instruction]] = {}
+        self.entry: Optional[str] = None
+        self.shape_of: Dict[str, str] = {}
+        self._parse(text)
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and line.rstrip().endswith("{"):
+                m = _COMP_START_RE.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+            if line.strip() == "}":
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, type_str, op, operand_str, attrs = m.groups()
+            operands = _OPERAND_RE.findall(operand_str)
+            instr = Instruction(name, type_str, op, operands, attrs, line)
+            self.computations[cur].append(instr)
+            self.shape_of[name] = type_str
+
+    # -- trip counts ---------------------------------------------------------
+    def trip_count(self, cond_comp: str) -> int:
+        """Largest s32 constant in the condition computation (scan bound)."""
+        best = 1
+        for instr in self.computations.get(cond_comp, []):
+            if instr.op == "constant" and instr.type_str.startswith("s32"):
+                m = re.search(r"constant\((-?\d+)\)", instr.line)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+    # -- cost traversal ------------------------------------------------------
+    def analyze(self) -> Dict[str, float]:
+        flops = 0.0
+        bytes_hbm = 0.0
+        coll_wire = defaultdict(float)
+        coll_counts = defaultdict(int)
+        visited_stack = []
+
+        def called_comps(instr) -> List[Tuple[str, float]]:
+            out = []
+            m = re.search(r"calls=%?([\w.\-]+)", instr.attrs)
+            if m:
+                out.append((m.group(1), 1.0))
+            m = re.search(r"body=%?([\w.\-]+)", instr.attrs)
+            if m:
+                body = m.group(1)
+                mc = re.search(r"condition=%?([\w.\-]+)", instr.attrs)
+                trips = self.trip_count(mc.group(1)) if mc else 1
+                out.append((body, float(trips)))
+            m = re.search(r"to_apply=%?([\w.\-]+)", instr.attrs)
+            if m:
+                out.append((m.group(1), 1.0))
+            for m in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)([^,}]+)", instr.attrs):
+                for nm in re.findall(r"%?([\w.\-]+)", m.group(1)):
+                    out.append((nm, 1.0))
+            return out
+
+        def dot_flops(instr) -> float:
+            _, _ = 0, 0
+            res_elems, _ = _shape_elems_bytes(instr.type_str)
+            # contraction size from lhs shape and lhs_contracting_dims
+            if not instr.operands:
+                return 0.0
+            lhs_shape = self.shape_of.get(instr.operands[0], "")
+            dims_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+            mshape = _SHAPE_RE.search(lhs_shape)
+            if not (dims_m and mshape):
+                return 0.0
+            dims = [int(d) for d in dims_m.group(1).split(",") if d]
+            lhs_dims = [int(d) for d in mshape.group(2).split(",") if d]
+            k = 1
+            for d in dims:
+                if d < len(lhs_dims):
+                    k *= lhs_dims[d]
+            return 2.0 * res_elems * k
+
+        def conv_flops(instr) -> float:
+            res_elems, _ = _shape_elems_bytes(instr.type_str)
+            if len(instr.operands) < 2:
+                return 0.0
+            ker = self.shape_of.get(instr.operands[1], "")
+            m = _SHAPE_RE.search(ker)
+            if not m:
+                return 0.0
+            kdims = [int(d) for d in m.group(2).split(",") if d]
+            if not kdims:
+                return 0.0
+            kelems = 1
+            for d in kdims:
+                kelems *= d
+            # divide by output features (last dim of kernel in HWIO)
+            return 2.0 * res_elems * (kelems / max(kdims[-1], 1))
+
+        _PASSTHROUGH = {
+            "parameter", "convert", "bitcast", "copy", "constant", "reshape",
+            "transpose", "tuple", "get-tuple-element",
+        }
+
+        def fusion_projected_bytes(comp_name: str) -> Optional[float]:
+            """TPU-projection for two XLA:CPU float-normalization artifacts:
+
+            * (convert-wrapped) dynamic-update-slice fusions: count in-place
+              semantics — 2 x update bytes (read-modify-write of the touched
+              slice), not whole-buffer traffic. bf16 loop carries get f32
+              convert pairs on CPU that break aliasing; a TPU build has none.
+            * pure dtype-convert fusions (only converts/copies of bf16
+              weights): count zero — the consumer's operand read is already
+              counted at its own instruction.
+            """
+            comp_instrs = self.computations.get(comp_name, [])
+            if not comp_instrs:
+                return None
+            dus = [i for i in comp_instrs if i.op == "dynamic-update-slice"]
+            if dus:
+                total = 0.0
+                for d in dus:
+                    if len(d.operands) < 2:
+                        return None
+                    _, ub = _shape_elems_bytes(self.shape_of.get(d.operands[1], ""))
+                    total += 2.0 * ub
+                return total if total > 0 else None
+            rest = [i for i in comp_instrs if i.op not in _PASSTHROUGH]
+            if not rest:
+                return 0.0  # pure dtype/layout churn
+            if all(i.op in ("dynamic-slice",) for i in rest):
+                # fused slice-of-stacked-weights: reads the slice, not the
+                # whole (L, ...) stack — count read+write of the slice only
+                total = 0.0
+                for d in rest:
+                    _, rb = _shape_elems_bytes(d.type_str)
+                    total += 2.0 * rb
+                return total
+            return None
+
+        def walk(comp: str, mult: float, count_bytes: bool):
+            if comp in visited_stack:  # recursion guard
+                return
+            visited_stack.append(comp)
+            nonlocal flops, bytes_hbm
+            for instr in self.computations.get(comp, []):
+                op = instr.op
+                if op == "dot":
+                    flops += mult * dot_flops(instr)
+                elif op == "convolution":
+                    flops += mult * conv_flops(instr)
+                base = None
+                for c in _COLLECTIVES:
+                    if op == c or op.startswith(c + "-start"):
+                        base = c
+                        break
+                if base:
+                    _, nb = _shape_elems_bytes(instr.type_str)
+                    n = _group_size(instr.line)
+                    coll_wire[base] += mult * nb * _wire_factor(base, n)
+                    coll_counts[base] += int(mult)
+                if count_bytes and op in _BYTE_OPS:
+                    _, rb = _shape_elems_bytes(instr.type_str)
+                    dus_b = None
+                    if op == "fusion":
+                        m = re.search(r"calls=%?([\w.\-]+)", instr.attrs)
+                        if m:
+                            dus_b = fusion_projected_bytes(m.group(1))
+                    if dus_b is not None:
+                        bytes_hbm += mult * dus_b
+                    elif op in ("dynamic-slice", "slice", "gather"):
+                        # reads only the sliced region, writes the result
+                        bytes_hbm += mult * 2 * rb
+                    elif op == "dynamic-update-slice" and len(instr.operands) >= 2:
+                        _, ub = _shape_elems_bytes(
+                            self.shape_of.get(instr.operands[1], "")
+                        )
+                        bytes_hbm += mult * 2 * ub
+                    else:
+                        ob = 0
+                        for o in set(instr.operands):  # dedupe repeated reads
+                            _, b = _shape_elems_bytes(self.shape_of.get(o, ""))
+                            ob += b
+                        bytes_hbm += mult * (rb + ob)
+                for sub, m in called_comps(instr):
+                    # fusions: traverse for dot flops but not byte accounting
+                    sub_bytes = count_bytes and op in ("while", "conditional", "call")
+                    walk(sub, mult * m, sub_bytes)
+            visited_stack.pop()
+
+        if self.entry:
+            walk(self.entry, 1.0, True)
+        out = {
+            "flops": flops,
+            "bytes": bytes_hbm,
+            "collective_wire_bytes": float(sum(coll_wire.values())),
+        }
+        for k, v in coll_wire.items():
+            out[f"wire_{k}"] = v
+        out["collective_counts"] = dict(coll_counts)
+        return out
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def _wire_factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    return 1.0
+
+
+def analyze_hlo(text: str) -> Dict[str, float]:
+    return HloModule(text).analyze()

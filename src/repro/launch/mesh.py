@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Target: TPU v5e, 256 chips per pod. Single pod: (data=16, model=16).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips — the "pod" axis extends
+data parallelism across the ICI/DCN boundary (PAAC's synchronous gradient
+all-reduce spans it; see DESIGN.md §5).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke paths (constraints become no-ops)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# Hardware constants for the roofline (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

@@ -1,0 +1,84 @@
+"""Serving launcher: batched prefill + decode loop.
+
+This is the paper's master in isolation — batched action selection for all
+actors — i.e. modern batched LLM inference. Prefill builds the KV/state
+cache for a batch of prompts; the decode loop then emits one token per
+actor per step through ``serve_step``.
+
+Example:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
+        --batch 8 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.steps import build_prefill_step, build_serve_step
+from repro.models import init_policy, init_policy_cache
+from repro.utils import get_logger
+
+log = get_logger("serve")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS, default="qwen2-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params = init_policy(key, cfg)
+
+    B, S = args.batch, args.prompt_len
+    max_len = S + args.gen
+    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    prefix = None
+    if cfg.modality == "vision":
+        prefix = jnp.ones((B, cfg.prefix_len, cfg.frontend_dim or cfg.d_model))
+    if cfg.is_encoder_decoder:
+        prefix = jnp.ones((B, cfg.encoder_seq_len, cfg.frontend_dim or cfg.d_model))
+
+    # prefill: cache sized for generation headroom
+    t0 = time.perf_counter()
+    from repro.models import policy_prefill
+
+    logits, values, cache = jax.jit(
+        lambda p, t: policy_prefill(p, cfg, t, prefix, max_len=max_len)
+    )(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    log.info("prefill %.3fs (%.0f tok/s)", t_prefill, B * S / t_prefill)
+
+    serve_step = jax.jit(build_serve_step(cfg), donate_argnums=(1,))
+    token = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    toks = [token]
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        key, sub = jax.random.split(key)
+        token, value, cache = serve_step(
+            params, cache, token, jnp.asarray(S + i, jnp.int32),
+            jax.random.key_data(sub),
+        )
+        toks.append(token)
+    jax.block_until_ready(token)
+    dt = time.perf_counter() - t0
+    out = jnp.concatenate(toks, axis=1)
+    log.info("decode %d tokens x %d actors: %.3fs (%.0f tok/s)",
+             args.gen, B, dt, args.gen * B / dt)
+    log.info("sample actor 0 tokens: %s", out[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

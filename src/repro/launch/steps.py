@@ -1,0 +1,55 @@
+"""Step builders shared by the dry-run, the trainer and the server.
+
+* ``build_train_step(cfg)``   — PAAC synchronous update (Algorithm 1 16-18)
+  over a trajectory batch; the lowered unit for ``train_4k``.
+* ``build_prefill_step(cfg)`` — batched full-context policy evaluation;
+  lowered for ``prefill_32k``.
+* ``build_serve_step(cfg)``   — the master's batched action selection
+  (paper §3): ONE token per actor against the cache; lowered for
+  ``decode_32k`` / ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.agents.paac import PAACAgent, PAACConfig
+from repro.models import (
+    init_policy,
+    init_policy_cache,
+    policy_apply,
+    policy_decode,
+    policy_prefill,
+)
+from repro.optim import make_optimizer, paac_scaled_lr
+
+
+def build_train_step(cfg, *, optimizer: str = "rmsprop", n_e: int = 256):
+    """Returns (train_step(params, opt_state, batch, step), optimizer)."""
+    agent = PAACAgent(cfg, PAACConfig())
+    opt = make_optimizer(optimizer)
+    step = agent.make_llm_train_step(opt, paac_scaled_lr(n_e))
+    return step, opt
+
+
+def build_prefill_step(cfg):
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        prefix = batch.get("prefix", batch.get("frames"))
+        logits, values, cache = policy_prefill(params, cfg, tokens, prefix)
+        return logits[:, -1], values[:, -1], cache
+
+    return prefill_step
+
+
+def build_serve_step(cfg):
+    def serve_step(params, cache, token, pos, key_data):
+        """One master step: sample π for every actor (batched decode)."""
+        key = jax.random.wrap_key_data(key_data)
+        logits, value, cache = policy_decode(params, cfg, cache, token, pos)
+        action = jax.random.categorical(key, logits)
+        return action[:, None].astype(jnp.int32), value, cache
+
+    return serve_step

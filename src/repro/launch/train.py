@@ -1,0 +1,110 @@
+"""Training launcher.
+
+Two modes:
+
+* ``--mode rl`` (default): full PAAC RL (Algorithm 1) against a JAX token
+  environment — rollout with the current policy, synchronous update.
+  Works at reduced scale on CPU; on a pod the same code runs the
+  production mesh (actions/envs sharded over the data axes).
+* ``--mode synthetic``: the sharded trajectory train step on synthetic
+  batches — the profiling configuration matching the dry-run's train_4k.
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
+        --iterations 20
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --reduced \
+        --mode synthetic --iterations 5
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core import ParallelRL
+from repro.core.agents import PAACAgent, PAACConfig
+from repro.envs import TokenEnv
+from repro.launch.steps import build_train_step
+from repro.models import init_policy
+from repro.optim import constant
+from repro.utils import get_logger
+
+log = get_logger("train")
+
+
+def run_rl(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    env = TokenEnv(args.n_envs, vocab=min(cfg.vocab_size, 64), ctx=args.ctx,
+                   k=2, horizon=64)
+    cfg = cfg.replace(num_actions=env.vocab)
+    agent = PAACAgent(cfg, PAACConfig(t_max=args.t_max, entropy_beta=0.01))
+    rl = ParallelRL(env, agent, lr_schedule=constant(args.lr), seed=args.seed)
+    for epoch in range(args.epochs):
+        res = rl.run(args.iterations, log_every=max(args.iterations // 4, 1))
+        log.info(
+            "epoch %d steps=%d mean_reward/iter=%.3f tps=%.0f",
+            epoch, res.steps, res.mean_metrics.get("reward_sum", 0.0),
+            res.timesteps_per_sec,
+        )
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, rl.total_steps, rl.params)
+        log.info("checkpoint saved to %s", args.checkpoint)
+    return rl
+
+
+def run_synthetic(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    B, T = args.n_envs, args.t_max
+    key = jax.random.PRNGKey(args.seed)
+    params = init_policy(key, cfg)
+    step_fn, opt = build_train_step(cfg, n_e=B)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    batch = {
+        "tokens": jax.random.randint(key, (B, T + 1), 0, cfg.vocab_size),
+        "rewards": jax.random.uniform(key, (B, T)),
+        "dones": jnp.zeros((B, T), bool),
+    }
+    t0 = time.perf_counter()
+    for i in range(args.iterations):
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             jnp.asarray(i, jnp.int32))
+    jax.block_until_ready(params)
+    dt = time.perf_counter() - t0
+    log.info(
+        "synthetic: %d iters, %.1f tokens/s, loss=%.4f",
+        args.iterations, args.iterations * B * T / dt, float(metrics["loss"]),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS + ["paac_vector"],
+                    default="mamba2-370m")
+    ap.add_argument("--mode", choices=("rl", "synthetic"), default="rl")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--iterations", type=int, default=50)
+    ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--n-envs", type=int, default=16)
+    ap.add_argument("--t-max", type=int, default=8)
+    ap.add_argument("--ctx", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args()
+    if args.mode == "rl":
+        run_rl(args)
+    else:
+        run_synthetic(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Shared model building blocks: initializers, linear layers, norms, RoPE.
+
+Parameters are plain nested dicts of jnp arrays (no flax). Every module is a
+pair of functions: ``init_*(key, ...) -> params`` and an apply function.
+Scanned layer stacks hold parameters stacked along a leading layer axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float = 1.0):
+    """LeCun-normal style init used for all projection matrices."""
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+def init_linear(key, in_dim: int, out_dim: int, dtype, bias: bool = False, scale: float = 1.0):
+    p = {"w": dense_init(key, in_dim, out_dim, dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(dim: int, dtype):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for rotary embedding over `dim` channels."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary position embedding (halves convention).
+
+    x: (B, S, H, D) or (B, S, D); positions: (S,) or (B, S).
+    """
+    dim = x.shape[-1]
+    inv_freq = rope_frequencies(dim, theta)  # (dim/2,)
+    pos = positions.astype(jnp.float32)
+    angles = jnp.einsum("...s,f->...sf", pos, inv_freq)  # (S, d/2) or (B, S, d/2)
+    if angles.ndim == 2:  # (S, d/2) -> broadcast over batch
+        angles = angles[None]
+    if x.ndim == 4:  # head axis present
+        angles = angles[:, :, None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset: int = 0) -> jnp.ndarray:
+    """Boolean (q_len, kv_len) mask; True = attend."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    return k_pos <= q_pos
+
+
+def sliding_window_mask(q_len: int, kv_len: int, window: int, q_offset: int = 0) -> jnp.ndarray:
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    return (k_pos <= q_pos) & (k_pos > q_pos - window)

@@ -1,0 +1,56 @@
+"""The paper's policy/value CNNs.
+
+``arch_nips``  — Mnih et al. 2013 network adapted to actor-critic (paper §5.1):
+    conv 16x8x8 s4, conv 32x4x4 s2, dense 256.
+``arch_nature`` — Mnih et al. 2015 adaptation:
+    conv 32x8x8 s4, conv 64x4x4 s2, conv 64x3x3 s1, dense 512.
+
+Input: (B, 84, 84, 4) stacked grayscale frames in [0, 1] (paper §5.1
+pre-processing: action repeat 4, per-pixel max of the two latest frames,
+84x84 rescale).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dtype_of, init_linear, linear, split_keys
+
+
+def init_cnn(key, cfg):
+    dtype = dtype_of(cfg.param_dtype)
+    ks = split_keys(key, len(cfg.cnn_spec) + 1)
+    p = {"convs": []}
+    in_ch = cfg.obs_shape[-1]
+    size = cfg.obs_shape[0]
+    for i, (feat, kern, stride) in enumerate(cfg.cnn_spec):
+        std = 1.0 / math.sqrt(kern * kern * in_ch)
+        p["convs"].append(
+            {
+                "w": (jax.random.normal(ks[i], (kern, kern, in_ch, feat)) * std).astype(dtype),
+                "b": jnp.zeros((feat,), dtype),
+            }
+        )
+        in_ch = feat
+        size = (size - kern) // stride + 1
+    if cfg.cnn_spec:
+        flat = size * size * in_ch
+    else:  # pure-MLP trunk on flattened observations (vector envs)
+        flat = int(math.prod(cfg.obs_shape))
+    p["dense"] = init_linear(ks[-1], flat, cfg.cnn_dense, dtype, bias=True)
+    return p
+
+
+def cnn_forward(p, cfg, obs):
+    """obs: (B, H, W, C) float -> (B, cnn_dense)."""
+    x = obs.astype(dtype_of(cfg.compute_dtype))
+    for conv, (feat, kern, stride) in zip(p["convs"], cfg.cnn_spec):
+        x = jax.lax.conv_general_dilated(
+            x, conv["w"], window_strides=(stride, stride), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + conv["b"]
+        x = jax.nn.relu(x)
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(linear(p["dense"], x))

@@ -1,0 +1,33 @@
+"""PAAC two-headed output (paper §4).
+
+A single trunk feeds two output layers: a softmax policy head (one logit per
+action — for token-manipulation environments the action space is the
+vocabulary) and a single linear value node.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.models.common import dtype_of, init_linear, linear, split_keys
+
+
+def init_heads(key, cfg):
+    dtype = dtype_of(cfg.param_dtype)
+    ks = split_keys(key, 2)
+    p = {"value": init_linear(ks[1], cfg.d_model, 1, dtype, bias=True)}
+    if not cfg.tie_policy_head:
+        p["policy"] = init_linear(ks[0], cfg.d_model, cfg.actions(), dtype)
+    return p
+
+
+def apply_heads(p, cfg, hidden, embed=None):
+    """hidden: (..., d_model) -> (logits (..., A) fp32, value (...,) fp32)."""
+    if cfg.tie_policy_head:
+        logits = hidden @ embed.T
+    else:
+        logits = linear(p["policy"], hidden)
+    axes = ("data",) + (None,) * (logits.ndim - 2) + ("model",)
+    logits = constrain(logits.astype(jnp.float32), *axes)
+    value = linear(p["value"], hidden).astype(jnp.float32)[..., 0]
+    return logits, value

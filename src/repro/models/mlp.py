@@ -1,0 +1,29 @@
+"""Feed-forward blocks: SwiGLU (llama-style) and GELU (classic)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_linear, linear, split_keys
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, kind: str = "swiglu"):
+    ks = split_keys(key, 3)
+    if kind == "swiglu":
+        return {
+            "wi": init_linear(ks[0], d_model, d_ff, dtype),
+            "wg": init_linear(ks[1], d_model, d_ff, dtype),
+            "wo": init_linear(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "wi": init_linear(ks[0], d_model, d_ff, dtype),
+        "wo": init_linear(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp_forward(p, x):
+    if "wg" in p:
+        h = jax.nn.silu(linear(p["wi"], x)) * linear(p["wg"], x)
+    else:
+        h = jax.nn.gelu(linear(p["wi"], x))
+    return linear(p["wo"], h)

@@ -1,0 +1,151 @@
+"""Mixture-of-Experts block (DeepSeek-V2 / DBRX style).
+
+TPU-native design decisions:
+
+* **Sort/scatter dispatch, not one-hot einsum.** The classic GShard dispatch
+  einsum multiplies by a (tokens, E, C) one-hot tensor; XLA counts those as
+  real FLOPs and they rival the expert matmuls themselves at 160-expert
+  scale, wrecking both the roofline accounting and HBM. We instead compute
+  per-token top-k, sort assignments by expert, and scatter tokens into a
+  fixed (E, C, d) buffer (capacity drop, like GShard), so dispatch costs
+  gathers/scatters only and the expert matmuls are dense MXU einsums.
+* **Group-local routing.** Tokens are routed in groups of ``group_size``
+  (default 4096) along the sequence, so capacity buffers stay VMEM/HBM
+  friendly at 32k sequence length; for decode (S==1) the batch is one group.
+* Router runs in fp32 (standard practice for MoE numerical stability).
+* Shared experts (DeepSeek-V2) are a plain dense MLP applied to every token.
+* Aux load-balance loss (Switch style) is returned for the training loss.
+
+Sharding: expert weights are laid out (E, in, out) and sharded E→"model"
+(expert parallel) with the contraction dim sharded over "data" (FSDP); the
+scatter into the (G, E, C, d) buffer is constrained to (data, model, -, -) so
+GSPMD lowers the dispatch to an all-to-all over the model axis.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.models.common import dense_init, init_linear, linear, split_keys
+from repro.models.mlp import init_mlp, mlp_forward
+
+
+def init_moe(key, cfg, dtype):
+    ks = split_keys(key, 5)
+    E, d, ff = cfg.num_experts, cfg.d_model, cfg.expert_ff()
+    p = {
+        "router": {"w": dense_init(ks[0], d, E, jnp.float32)},  # router in fp32
+        "wi": (jax.random.normal(ks[1], (E, d, ff)) / math.sqrt(d)).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (E, d, ff)) / math.sqrt(d)).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (E, ff, d)) / math.sqrt(ff)).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, ff * cfg.num_shared_experts, dtype, "swiglu")
+    return p
+
+
+def _route_group(tokens, router_logits, k: int, capacity: int, E: int):
+    """Route one group of tokens. tokens: (T, d); logits: (T, E) fp32.
+
+    Returns (expert_in (E, C, d), slot (T, k), weights (T, k), aux_loss,
+    inv_tok (E*C,), w_slot (E*C,)) — inv_tok/w_slot drive the scatter-add
+    combine (which token each slot holds and its combine weight).
+    """
+    T, d = tokens.shape
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (T, E)
+    top_w, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    assign_frac = jnp.mean(
+        (jax.nn.one_hot(top_e, E, dtype=jnp.float32)).sum(axis=1), axis=0
+    )  # (E,)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(assign_frac * mean_prob)
+
+    # flatten assignments and sort by expert id
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+    sorted_w = top_w.reshape(-1)[order]
+    # rank of each assignment within its expert
+    start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")  # (E,)
+    rank = jnp.arange(T * k) - start[sorted_e]
+    slot_sorted = jnp.where(rank < capacity, sorted_e * capacity + rank, E * capacity)
+    # slot-major metadata: which token each slot holds + its combine weight
+    # (overflow assignments drop; empty slots point at the zero row T)
+    inv_tok = jnp.full((E * capacity,), T, jnp.int32)
+    inv_tok = inv_tok.at[slot_sorted].set(sorted_tok.astype(jnp.int32), mode="drop")
+    w_slot = jnp.zeros((E * capacity,), jnp.float32)
+    w_slot = w_slot.at[slot_sorted].set(sorted_w, mode="drop")
+    # dispatch as ONE slot-indexed gather (not gather-then-scatter): the
+    # output is expert-parallel-sharded, so each shard gathers only its own
+    # slots from the (replicated-over-model) token block — no all-reduce
+    # (§Perf pair-3 iteration 4)
+    tokens_pad = jnp.concatenate([tokens, jnp.zeros((1, d), tokens.dtype)])
+    buf = tokens_pad[inv_tok]  # (E*C, d)
+    # map back: slot for (token, j) in original order (kept for tests)
+    slot = jnp.full((T * k,), E * capacity, jnp.int32)
+    slot = slot.at[order].set(slot_sorted.astype(jnp.int32), mode="drop")
+    return buf.reshape(E, capacity, d), slot.reshape(T, k), top_w, aux, inv_tok, w_slot
+
+
+def moe_forward(
+    p,
+    cfg,
+    x: jnp.ndarray,  # (B, S, d)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    group_size = cfg.moe_group_size
+    capacity_factor = cfg.moe_capacity_factor
+
+    # grouping: sequence chunks for train/prefill, batch for single-token decode
+    if S >= group_size:
+        g = group_size
+        assert S % g == 0, f"seq {S} not divisible by group {g}"
+        xg = x.reshape(B * (S // g), g, d)
+    else:
+        xg = x.reshape(1, B * S, d) if S == 1 else x.reshape(B, S, d)
+    G, T, _ = xg.shape
+    capacity = max(int(math.ceil(T * k * capacity_factor / E)), 1)
+
+    logits = (xg.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))  # (G,T,E)
+    expert_in, slot, top_w, aux, inv_tok, w_slot = jax.vmap(
+        partial(_route_group, k=k, capacity=capacity, E=E)
+    )(xg, logits)
+    # expert_in: (G, E, C, d) — constraining E to "model" makes GSPMD lower
+    # the dispatch scatter as an all-to-all over the expert-parallel axis
+    expert_in = constrain(expert_in, "data", "model", None, None)
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["wi"])
+    hg = jnp.einsum("gecd,edf->gecf", expert_in, p["wg"])
+    h = jax.nn.silu(h) * hg
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["wo"])  # (G, E, C, d)
+
+    # combine: scatter-add each slot's weighted output into its token row.
+    # Each expert-parallel shard contributes its local slots and GSPMD
+    # combines with ONE psum of (G, T, d) — a take_along_axis gather here
+    # would instead all-reduce the k-times-larger (G, T*k, d) tensor
+    # (§Perf pair-3 iteration 3).
+    out_flat = out_e.reshape(G, E * capacity, d)
+    weighted = out_flat * w_slot[..., None].astype(out_flat.dtype)
+
+    def combine_one(flat, inv):
+        y = jnp.zeros((T + 1, d), flat.dtype)
+        return y.at[inv].add(flat, mode="drop")[:T]
+
+    y = jax.vmap(combine_one)(weighted, inv_tok)
+    y = constrain(y, "data", None, None)
+    y = y.reshape(B, S, d)
+
+    if "shared" in p:
+        y = y + mlp_forward(p["shared"], x)
+    return y, jnp.mean(aux)

@@ -1,0 +1,207 @@
+"""Mamba2 block via State-Space Duality (SSD), arXiv:2405.21060.
+
+TPU adaptation: the CUDA selective-scan is replaced by the **chunked SSD
+algorithm** — intra-chunk work is dense (C·Bᵀ ∘ decay-mask)·X matmuls that
+map onto the MXU, and only the O(S/Q) inter-chunk state carry is a
+``lax.scan``. ``repro/kernels/ssd_scan.py`` is the fused Pallas twin of the
+chunk recurrence; this module is the reference / dry-run path.
+
+Projections are kept **separate** (w_z, w_x, w_B, w_C, w_dt instead of one
+fused in_proj) so the inner dimension shards cleanly over the "model" axis:
+z/x/dt are per-inner-channel (tensor parallel), B/C are small shared state
+projections (replicated). This is the TPU-native layout; fusing them (as the
+CUDA kernel does) would interleave shard boundaries.
+
+Decode is the O(1) recurrent form: state (B, H, P, N) plus (K-1)-deep causal
+conv ring buffers — this is why SSM/hybrid archs run ``long_500k``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.models.common import dense_init, init_rmsnorm, linear, rmsnorm, split_keys
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg, dtype):
+    d_inner, H, P, N = _dims(cfg)
+    K = cfg.ssm_conv
+    ks = split_keys(key, 8)
+    # dt bias initialised so softplus(dt_bias) spans [1e-3, 1e-1]
+    dt = jnp.exp(
+        jax.random.uniform(ks[6], (H,)) * (math.log(0.1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "w_z": {"w": dense_init(ks[0], cfg.d_model, d_inner, dtype)},
+        "w_x": {"w": dense_init(ks[1], cfg.d_model, d_inner, dtype)},
+        "w_B": {"w": dense_init(ks[2], cfg.d_model, N, dtype)},
+        "w_C": {"w": dense_init(ks[3], cfg.d_model, N, dtype)},
+        "w_dt": {"w": dense_init(ks[4], cfg.d_model, H, dtype)},
+        "conv_x": (jax.random.normal(ks[5], (K, d_inner)) / math.sqrt(K)).astype(dtype),
+        "conv_B": (jax.random.normal(ks[5], (K, N)) / math.sqrt(K)).astype(dtype),
+        "conv_C": (jax.random.normal(ks[5], (K, N)) / math.sqrt(K)).astype(dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": init_rmsnorm(d_inner, dtype),
+        "out_proj": {"w": dense_init(ks[7], d_inner, cfg.d_model, dtype,
+                                     scale=1.0 / math.sqrt(2 * max(cfg.num_layers, 1)))},
+    }
+
+
+def _causal_conv(x, w):
+    """x: (B, S, C); w: (K, C) depthwise causal conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, *, chunk: int):
+    """Chunked SSD scan (reference implementation, fp32 internals).
+
+    x: (B, S, H, P); dt: (B, S, H) post-softplus; A_log: (H,);
+    B, C: (B, S, N) (single group, shared across heads); D: (H,).
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, f"seq {S} % chunk {chunk} != 0"
+    nc = S // chunk
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a_log = -jnp.exp(A_log)[None, None, :] * dtf  # (B,S,H), negative
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    xc = xf.reshape(Bsz, nc, chunk, H, P)
+    dtc = dtf.reshape(Bsz, nc, chunk, H)
+    ac = a_log.reshape(Bsz, nc, chunk, H)
+    Bc = Bf.reshape(Bsz, nc, chunk, N)
+    Cc = Cf.reshape(Bsz, nc, chunk, N)
+
+    cum = jnp.cumsum(ac, axis=2)  # inclusive (B,nc,Q,H)
+    total = cum[:, :, -1, :]  # (B,nc,H)
+
+    # intra-chunk: Y[i] = sum_{j<=i} exp(cum_i - cum_j) (C_i . B_j) dt_j x_j
+    scores = jnp.einsum("bcis,bcjs->bcij", Cc, Bc, preferred_element_type=jnp.float32)
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    iu = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(iu[None, None, :, :, None], jnp.exp(dec), 0.0)
+    G = scores[..., None] * L  # (B,nc,Q,Q,H)
+    xdt = xc * dtc[..., None]  # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", G, xdt)
+
+    # chunk-final states: S_c = sum_j exp(total - cum_j) B_j ⊗ (dt_j x_j)
+    w_state = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bcjh,bcjs,bcjhp->bchps", w_state, Bc, xdt)
+
+    # inter-chunk carry: state entering each chunk
+    def carry_fn(s, inp):
+        s_chunk, lam = inp  # (B,H,P,N), (B,H)
+        s_next = s * jnp.exp(lam)[:, :, None, None] + s_chunk
+        return s_next, s
+
+    s0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    s_final, s_in = jax.lax.scan(
+        carry_fn,
+        s0,
+        (S_chunk.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    s_in = s_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # inter-chunk output: Y_inter[i] = exp(cum_i) C_i . S_in
+    y_inter = jnp.einsum("bcih,bcis,bchps->bcihp", jnp.exp(cum), Cc, s_in)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    y = y + D[None, None, :, None] * xf
+    return y.astype(x.dtype), s_final
+
+
+def mamba2_forward(p, cfg, x, *, return_state: bool = False):
+    """Full-sequence Mamba2 block. x: (B, S, d_model)."""
+    Bsz, S, _ = x.shape
+    d_inner, H, P, N = _dims(cfg)
+    z = linear(p["w_z"], x)
+    xr = linear(p["w_x"], x)
+    Br = linear(p["w_B"], x)
+    Cr = linear(p["w_C"], x)
+    dt = linear(p["w_dt"], x)
+    xs = jax.nn.silu(_causal_conv(xr, p["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(Br, p["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(Cr, p["conv_C"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, state = ssd_chunked(
+        xs.reshape(Bsz, S, H, P), dt, p["A_log"], Bm, Cm, p["D"],
+        chunk=min(cfg.ssm_chunk, S),
+    )
+    y = y.reshape(Bsz, S, d_inner) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = linear(p["out_proj"], y)
+    if return_state:
+        K = cfg.ssm_conv
+        tails = (xr[:, -(K - 1):, :], Br[:, -(K - 1):, :], Cr[:, -(K - 1):, :])
+        return out, (state, tails)
+    return out
+
+
+def init_mamba2_cache(cfg, batch: int, dtype):
+    d_inner, H, P, N = _dims(cfg)
+    K = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, K - 1, d_inner), dtype),
+        "conv_B": jnp.zeros((batch, K - 1, N), dtype),
+        "conv_C": jnp.zeros((batch, K - 1, N), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def _conv_step(buf, new, w):
+    """Ring conv step. buf: (B, K-1, C); new: (B, C); w: (K, C)."""
+    win = jnp.concatenate([buf, new[:, None, :]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", win, w)
+    return out, win[:, 1:, :]
+
+
+def mamba2_decode(p, cfg, x, cache):
+    """Single-token recurrent step. x: (B, 1, d_model)."""
+    Bsz = x.shape[0]
+    d_inner, H, P, N = _dims(cfg)
+    x0 = x[:, 0, :]
+    z = linear(p["w_z"], x0)
+    xr = linear(p["w_x"], x0)
+    Br = linear(p["w_B"], x0)
+    Cr = linear(p["w_C"], x0)
+    dt = linear(p["w_dt"], x0)
+    xs, ncx = _conv_step(cache["conv_x"], xr, p["conv_x"])
+    Bm, ncB = _conv_step(cache["conv_B"], Br, p["conv_B"])
+    Cm, ncC = _conv_step(cache["conv_C"], Cr, p["conv_C"])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    lam = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dt)  # (B,H)
+    xh = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm.astype(jnp.float32))
+    state = cache["state"] * lam[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype) * jax.nn.silu(z)[:, None, :]
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    new_cache = {
+        "conv_x": ncx.astype(cache["conv_x"].dtype),
+        "conv_B": ncB.astype(cache["conv_B"].dtype),
+        "conv_C": ncC.astype(cache["conv_C"].dtype),
+        "state": state,
+    }
+    return linear(p["out_proj"], y), new_cache

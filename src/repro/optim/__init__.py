@@ -1,0 +1,11 @@
+from repro.optim.optimizer import Optimizer, make_optimizer, clip_by_global_norm
+from repro.optim.schedules import constant, linear_anneal, paac_scaled_lr
+
+__all__ = [
+    "Optimizer",
+    "make_optimizer",
+    "clip_by_global_norm",
+    "constant",
+    "linear_anneal",
+    "paac_scaled_lr",
+]

@@ -1,0 +1,141 @@
+"""Optimizers (no optax): the paper's shared-statistics RMSProp, Adam, SGD.
+
+The paper (§5.1) trains with RMSProp (decay 0.99, ε=0.1) and global-norm
+gradient clipping at 40 (Pascanu et al. 2012). "Shared statistics" in
+A3C/PAAC means a single copy of the second-moment accumulator updated
+synchronously — which is exactly what a single optimizer state is here
+(PAAC's single-parameter-copy invariant; contrast A3C's per-thread RMSProp).
+
+Optimizer state lives in fp32 and is sharded like the parameters (see
+repro.distributed.sharding), giving ZeRO-style state sharding for free in
+``fsdp_tp`` mode.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_global_norm
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Paper §5.1: gradient clipping with threshold 40."""
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (new_params, new_state)
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+def make_optimizer(
+    kind: str = "rmsprop",
+    *,
+    decay: float = 0.99,
+    eps: float = 0.1,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    momentum: float = 0.0,
+    clip_norm: Optional[float] = 40.0,
+) -> Optimizer:
+    """Build an optimizer. Defaults follow the paper's hyperparameters."""
+
+    def maybe_clip(grads):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        return grads
+
+    if kind == "rmsprop":
+
+        def init(params):
+            return {
+                "sq": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            }
+
+        def update(grads, state, params, lr):
+            grads = maybe_clip(grads)
+            sq = jax.tree_util.tree_map(
+                lambda s, g: decay * s + (1.0 - decay) * jnp.square(_f32(g)),
+                state["sq"], grads,
+            )
+            new_params = jax.tree_util.tree_map(
+                lambda p, g, s: (
+                    _f32(p) - lr * _f32(g) / (jnp.sqrt(s) + eps)
+                ).astype(p.dtype),
+                params, grads, sq,
+            )
+            return new_params, {"sq": sq}
+
+        return Optimizer(init, update)
+
+    if kind == "adam":
+
+        def init(params):
+            zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+            return {
+                "m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "t": jnp.zeros((), jnp.int32),
+            }
+
+        def update(grads, state, params, lr):
+            grads = maybe_clip(grads)
+            t = state["t"] + 1
+            m = jax.tree_util.tree_map(
+                lambda m_, g: beta1 * m_ + (1 - beta1) * _f32(g), state["m"], grads
+            )
+            v = jax.tree_util.tree_map(
+                lambda v_, g: beta2 * v_ + (1 - beta2) * jnp.square(_f32(g)),
+                state["v"], grads,
+            )
+            bc1 = 1 - beta1 ** t.astype(jnp.float32)
+            bc2 = 1 - beta2 ** t.astype(jnp.float32)
+            new_params = jax.tree_util.tree_map(
+                lambda p, m_, v_: (
+                    _f32(p) - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + 1e-8)
+                ).astype(p.dtype),
+                params, m, v,
+            )
+            return new_params, {"m": m, "v": v, "t": t}
+
+        return Optimizer(init, update)
+
+    if kind == "sgd":
+
+        def init(params):
+            if momentum:
+                return {
+                    "mom": jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params
+                    )
+                }
+            return {}
+
+        def update(grads, state, params, lr):
+            grads = maybe_clip(grads)
+            if momentum:
+                mom = jax.tree_util.tree_map(
+                    lambda m_, g: momentum * m_ + _f32(g), state["mom"], grads
+                )
+                new_params = jax.tree_util.tree_map(
+                    lambda p, m_: (_f32(p) - lr * m_).astype(p.dtype), params, mom
+                )
+                return new_params, {"mom": mom}
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: (_f32(p) - lr * _f32(g)).astype(p.dtype), params, grads
+            )
+            return new_params, state
+
+        return Optimizer(init, update)
+
+    raise ValueError(f"unknown optimizer {kind}")

@@ -1,0 +1,29 @@
+"""Learning-rate schedules.
+
+``paac_scaled_lr`` implements the paper's §5.2 batch-size rule: the base
+learning rate is scaled linearly with the number of actors,
+``α = 0.0007 · n_e`` — the paper shows this holds up to n_e ≈ 128 and
+diverges at 256 (we reproduce that sweep in benchmarks/fig34_ne_scaling.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_anneal(lr: float, total_steps: int, floor: float = 0.0):
+    """A3C-style anneal to `floor` over `total_steps`."""
+
+    def fn(step):
+        frac = jnp.clip(1.0 - step / total_steps, 0.0, 1.0)
+        return jnp.asarray(floor + (lr - floor) * frac, jnp.float32)
+
+    return fn
+
+
+def paac_scaled_lr(n_e: int, base: float = 0.0007):
+    """Paper §5.2: learning rate scaled with actor count."""
+    return constant(base * n_e)

@@ -1,0 +1,19 @@
+from repro.utils.tree import (
+    tree_size,
+    tree_bytes,
+    tree_global_norm,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+)
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_global_norm",
+    "tree_zeros_like",
+    "tree_add",
+    "tree_scale",
+    "get_logger",
+]

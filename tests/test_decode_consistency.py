@@ -1,0 +1,111 @@
+"""Incremental decode == full forward, for every architecture family.
+
+This is the core serving invariant: the master's batched action selection
+(decode with cache) must produce the same policy as the training-time
+teacher-forced forward.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import (
+    init_policy,
+    init_policy_cache,
+    policy_apply,
+    policy_decode,
+    policy_prefill,
+)
+
+B, S = 2, 16
+
+
+def _cfg(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.num_experts:
+        # ample capacity so no tokens drop (grouping differs between paths)
+        cfg = cfg.replace(moe_capacity_factor=16.0)
+    return cfg
+
+
+def _prefix(cfg, key):
+    if cfg.modality == "vision":
+        return jax.random.normal(key, (B, cfg.prefix_len, cfg.frontend_dim))
+    if cfg.is_encoder_decoder:
+        return jax.random.normal(key, (B, cfg.encoder_seq_len, cfg.frontend_dim))
+    return None
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_forward(arch, key):
+    cfg = _cfg(arch)
+    params = init_policy(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    pre = _prefix(cfg, key)
+    logits_full, values_full, _ = policy_apply(params, cfg, toks, pre)
+    if cfg.modality == "vision":
+        pytest.skip("vlm decode starts from prefill (prefix); covered below")
+    cache = init_policy_cache(cfg, B, S)
+    if cfg.is_encoder_decoder:
+        # decode needs the cross cache -> go through prefill for 1 token
+        _, _, cache = policy_prefill(params, cfg, toks[:, :1], pre, max_len=S)
+        start = 1
+    else:
+        start = 0
+    err = 0.0
+    for t in range(start, S):
+        lg, vl, cache = policy_decode(params, cfg, cache, toks[:, t:t + 1], t)
+        err = max(err, float(jnp.abs(lg - logits_full[:, t]).max()))
+        err = max(err, float(jnp.abs(vl - values_full[:, t]).max()))
+    assert err < 5e-4, err
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "minicpm3-4b", "pixtral-12b",
+                                  "seamless-m4t-large-v2", "deepseek-v2-236b"])
+def test_prefill_resume(arch, key):
+    cfg = _cfg(arch)
+    params = init_policy(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    pre = _prefix(cfg, key)
+    logits_full, _, _ = policy_apply(params, cfg, toks, pre)
+    off = cfg.prefix_len if cfg.modality == "vision" else 0
+    half = S // 2
+    lg_p, _, cache = policy_prefill(params, cfg, toks[:, :half], pre, max_len=off + S)
+    err = float(jnp.abs(lg_p[:, -1] - logits_full[:, off + half - 1]).max())
+    for t in range(half, S):
+        lg, _, cache = policy_decode(params, cfg, cache, toks[:, t:t + 1], off + t)
+        err = max(err, float(jnp.abs(lg - logits_full[:, off + t]).max()))
+    assert err < 5e-4, err
+
+
+def test_sliding_window_ring_decode(key):
+    """Ring-buffer cache (window < S) matches windowed full attention."""
+    cfg = get_config("qwen2-7b").reduced().replace(sliding_window=8)
+    params = init_policy(key, cfg)
+    toks = jax.random.randint(key, (B, 24), 0, cfg.vocab_size)
+    logits_full, _, _ = policy_apply(params, cfg, toks)
+    cache = init_policy_cache(cfg, B, 24)
+    assert cache["layers"]["attn"]["k"].shape[2] == 8  # O(window) memory
+    err = 0.0
+    for t in range(24):
+        lg, _, cache = policy_decode(params, cfg, cache, toks[:, t:t + 1], t)
+        err = max(err, float(jnp.abs(lg - logits_full[:, t]).max()))
+    assert err < 5e-4, err
+
+
+def test_mla_absorb_matches_naive(key):
+    """The absorbed MLA decode (perf variant) equals the naive expansion."""
+    cfg = get_config("minicpm3-4b").reduced()
+    params = init_policy(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    outs = {}
+    for absorb in (False, True):
+        c = cfg.replace(mla_absorb=absorb)
+        cache = init_policy_cache(c, B, S)
+        logs = []
+        for t in range(S):
+            lg, _, cache = policy_decode(params, c, cache, toks[:, t:t + 1], t)
+            logs.append(lg)
+        outs[absorb] = jnp.stack(logs, 1)
+    err = float(jnp.abs(outs[True] - outs[False]).max())
+    assert err < 5e-4, err

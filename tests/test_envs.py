@@ -1,0 +1,91 @@
+"""Environment invariants: shapes, auto-reset, reward ranges, determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.envs import AtariLike, CartPole, Catch, FrameStack, GridWorld, TokenEnv
+
+ENVS = [
+    lambda n: GridWorld(n, size=4, max_steps=12),
+    lambda n: Catch(n, rows=6, cols=5),
+    lambda n: CartPole(n, max_steps=20),
+    lambda n: TokenEnv(n, vocab=16, ctx=8, k=2, horizon=10),
+    lambda n: FrameStack(AtariLike(n, lives=1), n=4),
+]
+
+
+@pytest.mark.parametrize("make_env", ENVS)
+def test_env_contract(make_env, key):
+    n = 5
+    env = make_env(n)
+    state = env.reset(key)
+    obs = env.observe(state)
+    assert obs.shape == (n,) + tuple(env.obs_shape)
+    for i in range(30):
+        key, k_act, k_step = jax.random.split(key, 3)
+        actions = jax.random.randint(k_act, (n,), 0, env.num_actions)
+        state, obs, reward, done = env.step(state, actions, k_step)
+        assert obs.shape == (n,) + tuple(env.obs_shape)
+        assert reward.shape == (n,) and reward.dtype == jnp.float32
+        assert done.shape == (n,) and done.dtype == bool
+        assert not bool(jnp.isnan(obs).any()) if jnp.issubdtype(obs.dtype, jnp.floating) else True
+
+
+def test_env_step_is_jittable(key):
+    env = GridWorld(8, size=4)
+    state = env.reset(key)
+    step = jax.jit(env.step)
+    actions = jnp.zeros((8,), jnp.int32)
+    state, obs, r, d = step(state, actions, key)
+    assert obs.shape == (8, 16)
+
+
+def test_gridworld_goal_reward(key):
+    env = GridWorld(1, size=3, max_steps=50)
+    state = env.reset(key)
+    # place agent next to goal deterministically
+    state = {
+        "pos": jnp.array([[0, 0]]),
+        "goal": jnp.array([[0, 1]]),
+        "t": jnp.zeros((1,), jnp.int32),
+    }
+    state2, obs, reward, done = env.step(state, jnp.array([0]), key)  # move +y
+    assert float(reward[0]) == 1.0
+    assert bool(done[0])
+
+
+def test_token_env_echo_reward(key):
+    env = TokenEnv(1, vocab=8, ctx=6, k=2, horizon=10)
+    state = env.reset(key)
+    target = state["hist"][:, -2]  # correct action: token from k=2 back
+    _, _, reward, _ = env.step(state, target, key)
+    assert float(reward[0]) == 1.0
+    state = env.reset(key)
+    wrong = (state["hist"][:, -2] + 1) % 8
+    _, _, reward, _ = env.step(state, wrong, key)
+    assert float(reward[0]) == 0.0
+
+
+def test_auto_reset(key):
+    env = Catch(4, rows=4, cols=3)
+    state = env.reset(key)
+    done_seen = False
+    for _ in range(10):
+        key, k = jax.random.split(key)
+        state, obs, r, done = env.step(state, jnp.ones((4,), jnp.int32), k)
+        if bool(done.any()):
+            done_seen = True
+            # after auto-reset, the ball is back near the top for done envs
+            assert int(state["ball"][jnp.argmax(done), 0]) <= 1
+    assert done_seen
+
+
+def test_framestack_shapes(key):
+    env = FrameStack(AtariLike(3, lives=1), n=4)
+    state = env.reset(key)
+    obs = env.observe(state)
+    assert obs.shape == (3, 84, 84, 4)
+    state, obs2, r, d = env.step(state, jnp.zeros((3,), jnp.int32), key)
+    # newest frame at the end; stack shifted
+    np.testing.assert_allclose(obs[..., 1:][0], np.asarray(obs2[..., :-1])[0])

@@ -1,0 +1,30 @@
+"""Paper Table-1 evaluation protocol (best-of-3 actors, 30 runs)."""
+import jax
+
+from repro.configs import get_config
+from repro.core import ParallelRL
+from repro.core.agents import PAACAgent, PAACConfig
+from repro.core.evaluation import evaluate
+from repro.envs import GridWorld
+from repro.optim import constant
+
+
+def test_evaluate_protocol_and_training_gain():
+    env = GridWorld(10, size=4, max_steps=20)
+    cfg = get_config("paac_vector").replace(
+        obs_shape=env.obs_shape, num_actions=env.num_actions
+    )
+    agent = PAACAgent(cfg, PAACConfig(t_max=5))
+    rl = ParallelRL(env, agent, lr_schedule=constant(0.01), seed=0)
+    act = agent.act_fn()
+    key = jax.random.PRNGKey(42)
+
+    before = evaluate(act, env, rl.params, key, n_runs=10, n_actor_seeds=3,
+                      max_steps=25)
+    assert len(before["per_seed"]) == 3
+    assert before["best_of_k"] >= before["mean"]
+
+    rl.run(250)
+    after = evaluate(act, env, rl.params, key, n_runs=10, n_actor_seeds=3,
+                     max_steps=25)
+    assert after["best_of_k"] > before["best_of_k"]

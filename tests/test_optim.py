@@ -1,0 +1,77 @@
+"""Optimizer + checkpoint unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.optim import clip_by_global_norm, linear_anneal, make_optimizer, paac_scaled_lr
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 100.0), "b": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(grads, 40.0)
+    total = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree_util.tree_leaves(clipped)))
+    np.testing.assert_allclose(total, 40.0, rtol=1e-5)
+    small = {"a": jnp.ones((4,))}
+    clipped, _ = clip_by_global_norm(small, 40.0)
+    np.testing.assert_allclose(clipped["a"], small["a"])  # untouched below threshold
+
+
+def test_rmsprop_decreases_quadratic():
+    opt = make_optimizer("rmsprop", eps=1e-8, clip_norm=None)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params, 0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_adam_decreases_quadratic():
+    opt = make_optimizer("adam", clip_norm=None)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params, 0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_rmsprop_shared_statistics_single_copy():
+    """One statistics tree (the paper's single synchronous copy)."""
+    opt = make_optimizer("rmsprop")
+    params = {"w": jnp.zeros((3,))}
+    state = opt.init(params)
+    assert set(state) == {"sq"}
+    assert state["sq"]["w"].dtype == jnp.float32
+
+
+def test_schedules():
+    assert float(paac_scaled_lr(32)(0)) == pytest.approx(0.0224)  # paper §5.1!
+    s = linear_anneal(1.0, 100)
+    assert float(s(0)) == 1.0
+    assert float(s(50)) == pytest.approx(0.5)
+    assert float(s(200)) == 0.0
+
+
+def test_bf16_params_update_in_fp32():
+    opt = make_optimizer("rmsprop")
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    new_params, _ = opt.update({"w": jnp.ones((4,), jnp.bfloat16)}, state, params, 0.1)
+    assert new_params["w"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    tree = {
+        "a": jax.random.normal(key, (4, 5)),
+        "nested": {"b": jnp.arange(7), "c": jnp.ones((2,), jnp.bfloat16)},
+    }
+    save_checkpoint(str(tmp_path), 42, tree)
+    assert latest_step(str(tmp_path)) == 42
+    restored = restore_checkpoint(str(tmp_path), 42, jax.eval_shape(lambda: tree))
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )

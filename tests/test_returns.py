@@ -1,0 +1,86 @@
+"""Properties of the return estimators (hypothesis) — system invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core.returns import gae_advantages, n_step_returns
+
+hypothesis.settings.register_profile("ci", deadline=None, max_examples=25)
+hypothesis.settings.load_profile("ci")
+
+
+@given(
+    rewards=hnp.arrays(np.float32, (4, 7), elements=st.floats(-5, 5, width=32)),
+    dones=hnp.arrays(np.bool_, (4, 7)),
+    bootstrap=hnp.arrays(np.float32, (4,), elements=st.floats(-5, 5, width=32)),
+    gamma=st.floats(0.5, 0.999),
+)
+def test_nstep_recursion_invariant(rewards, dones, bootstrap, gamma):
+    """R_t = r_t + gamma*(1-done_t)*R_{t+1} holds pointwise."""
+    R = np.asarray(n_step_returns(jnp.asarray(rewards), jnp.asarray(dones),
+                                  jnp.asarray(bootstrap), gamma))
+    nxt = np.concatenate([R[:, 1:], bootstrap[:, None]], axis=1)
+    expect = rewards + gamma * (1.0 - dones.astype(np.float32)) * nxt
+    np.testing.assert_allclose(R, expect, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    rewards=hnp.arrays(np.float32, (3, 9), elements=st.floats(0, 1, width=32)),
+    gamma=st.floats(0.5, 0.99),
+)
+def test_nstep_bounds_nonneg_rewards(rewards, gamma):
+    """With r in [0,1], no terminals, zero bootstrap: 0 <= R_t <= 1/(1-gamma)."""
+    R = np.asarray(
+        n_step_returns(jnp.asarray(rewards), jnp.zeros((3, 9), bool),
+                       jnp.zeros((3,)), gamma)
+    )
+    assert (R >= -1e-5).all()
+    assert (R <= 1.0 / (1.0 - gamma) + 1e-4).all()
+
+
+@given(
+    dones_col=st.integers(0, 6),
+)
+def test_terminal_cuts_credit(dones_col):
+    """Rewards after a terminal never flow into returns before it."""
+    E, T = 1, 7
+    rewards = np.zeros((E, T), np.float32)
+    rewards[0, -1] = 100.0
+    dones = np.zeros((E, T), bool)
+    dones[0, dones_col] = True
+    R = np.asarray(n_step_returns(jnp.asarray(rewards), jnp.asarray(dones),
+                                  jnp.zeros((E,)), 0.9))
+    if dones_col < T - 1:
+        assert abs(R[0, 0]) < 1e-5  # reward at T-1 blocked by terminal
+    else:
+        assert R[0, 0] > 0
+
+
+def test_gae_lambda1_equals_nstep():
+    """GAE(lambda=1) returns == n-step discounted returns."""
+    key = jax.random.PRNGKey(0)
+    E, T = 4, 11
+    rewards = jax.random.normal(key, (E, T))
+    dones = jax.random.bernoulli(key, 0.2, (E, T))
+    values = jax.random.normal(key, (E, T))
+    boot = jax.random.normal(key, (E,))
+    adv, rets = gae_advantages(rewards, dones, values, boot, 0.95, lam=1.0)
+    nstep = n_step_returns(rewards, dones, boot, 0.95)
+    np.testing.assert_allclose(rets, nstep, rtol=1e-4, atol=1e-4)
+
+
+def test_gae_lambda0_is_td():
+    key = jax.random.PRNGKey(1)
+    E, T = 2, 6
+    rewards = jax.random.normal(key, (E, T))
+    dones = jnp.zeros((E, T), bool)
+    values = jax.random.normal(key, (E, T))
+    boot = jax.random.normal(key, (E,))
+    adv, _ = gae_advantages(rewards, dones, values, boot, 0.9, lam=0.0)
+    nxt = jnp.concatenate([values[:, 1:], boot[:, None]], axis=1)
+    td = rewards + 0.9 * nxt - values
+    np.testing.assert_allclose(adv, td, rtol=1e-5, atol=1e-5)
