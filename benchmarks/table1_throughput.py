@@ -12,16 +12,22 @@ projected hours to the paper's N_max = 1.15e8 timesteps.
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.configs import get_config
+from repro.configs import PipelineConfig, get_config
 from repro.core import ParallelRL
 from repro.core.agents import PAACAgent, PAACConfig
 from repro.envs import AtariLike, FrameStack
 from repro.optim import constant
+from repro.pipeline import PipelinedRL
 
 PAPER_NMAX = 1.15e8
 
 
-def run(n_e: int = 32, iters: int = 8):
+def run(n_e: int = 32, iters: int = 8, pipelined: bool = True):
+    """Per-arch steps/s for the synchronous backend and (optionally) the
+    asynchronous pipeline on the same JAX-native env. On a single shared
+    device the pipelined column mainly measures overlap overhead (both
+    halves are compute-bound); the host-env win is measured by
+    ``fig2_time_split.run_pipelined_host``."""
     results = {}
     for arch in ("paac_nips", "paac_nature"):
         env = FrameStack(AtariLike(n_e), n=4)
@@ -37,11 +43,26 @@ def run(n_e: int = 32, iters: int = 8):
         tps = res.timesteps_per_sec
         hours = PAPER_NMAX / max(tps, 1e-9) / 3600
         results[arch] = tps
+        derived = (
+            f"steps_per_s={tps:.0f};proj_hours_to_115M={hours:.1f};"
+            f"loss={res.mean_metrics['loss']:.4f}"
+        )
+        if pipelined:
+            env_p = FrameStack(AtariLike(n_e), n=4)
+            prl = PipelinedRL(env_p, agent, optimizer="rmsprop",
+                              lr_schedule=constant(0.0224),
+                              pipeline=PipelineConfig(queue_depth=2))
+            prl.run(2)
+            pres = prl.run(iters)
+            results[arch + "_pipelined"] = pres.timesteps_per_sec
+            derived += (
+                f";steps_per_s_pipelined={pres.timesteps_per_sec:.0f}"
+                f";pipelined_ratio={pres.timesteps_per_sec / max(tps, 1e-9):.2f}"
+            )
         emit(
             f"table1_throughput/{arch}/ne={n_e}",
             1e6 * n_e * 5 / max(tps, 1e-9),
-            f"steps_per_s={tps:.0f};proj_hours_to_115M={hours:.1f};"
-            f"loss={res.mean_metrics['loss']:.4f}",
+            derived,
         )
     drop = 100 * (1 - results["paac_nature"] / results["paac_nips"])
     emit("table1_throughput/nature_vs_nips_drop", 0.0,

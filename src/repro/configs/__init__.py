@@ -3,6 +3,7 @@ from repro.configs.base import (
     INPUT_SHAPES,
     ArchConfig,
     InputShape,
+    PipelineConfig,
     get_config,
     list_archs,
 )
@@ -38,6 +39,7 @@ ASSIGNED_ARCHS = [
 __all__ = [
     "ArchConfig",
     "InputShape",
+    "PipelineConfig",
     "INPUT_SHAPES",
     "get_config",
     "list_archs",

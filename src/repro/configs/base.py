@@ -37,6 +37,31 @@ INPUT_SHAPES: Dict[str, InputShape] = {
 
 
 # ---------------------------------------------------------------------------
+# Pipeline (asynchronous actor/learner) config — repro.pipeline
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    """Knobs for the asynchronous actor/learner pipeline (``repro.pipeline``).
+
+    ``queue_depth`` bounds the trajectory queue between the actor and the
+    learner: depth d lets the actor run at most d rollouts ahead (depth 1 is
+    classic double buffering — rollout i+1 is collected while rollout i is
+    consumed). ``rho_bar`` is the V-trace/GA3C-style clip on the per-step
+    importance ratio ρ_t = π_learner(a|s)/π_behaviour(a|s) that keeps
+    queue-stale data stable; a very large value disables the correction.
+    ``lockstep`` forces the actor to wait for the learner's latest params
+    before each rollout — synchronous semantics through the pipelined code
+    path (used by equivalence tests).
+    """
+
+    queue_depth: int = 2
+    rho_bar: float = 1.0
+    lockstep: bool = False
+
+
+# ---------------------------------------------------------------------------
 # Architecture config
 # ---------------------------------------------------------------------------
 

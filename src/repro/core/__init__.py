@@ -1,6 +1,10 @@
 """The paper's primary contribution: the synchronous parallel-actor
 framework (master batched action selection + parallel workers + one
-synchronous update), algorithm-agnostic per §3."""
+synchronous update), algorithm-agnostic per §3.
+
+The asynchronous actor/learner variant — bounded trajectory queue,
+double-buffered rollouts, importance-corrected learner — lives in
+``repro.pipeline`` and mirrors ``ParallelRL``'s API."""
 from repro.core.evaluation import evaluate
 from repro.core.framework import ParallelRL, RunResult
 from repro.core.returns import gae_advantages, n_step_returns

@@ -39,23 +39,54 @@ class PAACConfig(NamedTuple):
     moe_aux_coef: float = 0.01
 
 
-def paac_losses(logits, values, actions, returns, beta, value_coef):
+def paac_losses(logits, values, actions, returns, beta, value_coef,
+                weights=None):
     """Equations (10) and (11), averaged over the n_e·t_max batch.
 
     logits: (N, A) fp32; values/returns: (N,); actions: (N,) int.
+    weights: optional (N,) per-sample importance weights (stop-gradient),
+    used by the asynchronous pipeline's staleness correction; ``None`` is the
+    paper's on-policy case (all ones).
     """
     logp = jax.nn.log_softmax(logits)
     logp_a = jnp.take_along_axis(logp, actions[:, None], axis=1)[:, 0]
     adv = jax.lax.stop_gradient(returns - values)
-    policy_loss = -jnp.mean(adv * logp_a)
+    if weights is None:
+        w = 1.0
+    else:
+        w = jax.lax.stop_gradient(weights)
+    policy_loss = -jnp.mean(w * adv * logp_a)
     entropy = -jnp.mean(jnp.sum(jnp.exp(logp) * logp, axis=-1))
-    value_loss = jnp.mean(jnp.square(returns - values))
+    value_loss = jnp.mean(w * jnp.square(returns - values))
     total = policy_loss - beta * entropy + value_coef * value_loss
     return total, {
         "policy_loss": policy_loss,
         "value_loss": value_loss,
         "entropy": entropy,
     }
+
+
+def trajectory_forward(params, cfg, hp, traj, bootstrap):
+    """Recompute the learning-pass forward over a time-major ``Transition``.
+
+    Shared by the fused synchronous train step and the pipelined learner
+    (``repro.pipeline.learner``) so the two backends optimize the same
+    quantities. Returns ``(logits, values, actions, returns)`` flattened to
+    the n_e·t_max batch the paper's equations average over.
+    """
+    T, E = traj.action.shape
+    obs = traj.obs.reshape((T * E,) + traj.obs.shape[2:])
+    if cfg.family == "cnn":
+        logits, values, _ = policy_apply(params, cfg, obs)
+    else:
+        lg, vl, _ = policy_apply(params, cfg, obs)
+        logits, values = lg[:, -1], vl[:, -1]
+    returns = n_step_returns(
+        traj.reward.T, traj.done.T, bootstrap, hp.gamma
+    )  # (E, T)
+    returns = returns.T.reshape(T * E)
+    actions = traj.action.reshape(T * E)
+    return logits, values, actions, returns
 
 
 class PAACAgent(Agent):
@@ -89,18 +120,9 @@ class PAACAgent(Agent):
         def loss_fn(params, traj, bootstrap):
             # recompute forward over the whole n_e·t_max batch (one big
             # batched pass — the paper's batched learning)
-            T, E = traj.action.shape
-            obs = traj.obs.reshape((T * E,) + traj.obs.shape[2:])
-            if cfg.family == "cnn":
-                logits, values, _ = policy_apply(params, cfg, obs)
-            else:
-                lg, vl, _ = policy_apply(params, cfg, obs)
-                logits, values = lg[:, -1], vl[:, -1]
-            returns = n_step_returns(
-                traj.reward.T, traj.done.T, bootstrap, hp.gamma
-            )  # (E, T)
-            returns = returns.T.reshape(T * E)
-            actions = traj.action.reshape(T * E)
+            logits, values, actions, returns = trajectory_forward(
+                params, cfg, hp, traj, bootstrap
+            )
             return paac_losses(
                 logits, values, actions, returns, hp.entropy_beta, hp.value_coef
             )

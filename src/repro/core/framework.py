@@ -4,6 +4,19 @@
 ``train_step`` and runs the outer ``until N >= N_max`` loop (line 3/20) on
 the host, tracking throughput (timesteps/s — the paper's Fig. 2/4 metric)
 and episode returns.
+
+Two environment regimes:
+
+* JAX-native ``VectorEnv`` — acting, stepping and learning fuse into one
+  XLA program per iteration (the fast path).
+* ``HostEnvPool`` — external gym-style envs stepped by host worker threads
+  (paper §3 literally). Here one iteration is a host-side rollout (jitted
+  acting, threaded env stepping) followed by a jitted update. This is the
+  paper's Fig. 2 "env time on the critical path" regime; the asynchronous
+  pipeline (``repro.pipeline``) exists to overlap exactly that stall.
+
+The run-loop metrics accounting is shared with ``repro.pipeline`` through
+``MetricsAccumulator`` so both backends report identical ``RunResult``s.
 """
 from __future__ import annotations
 
@@ -17,6 +30,7 @@ import jax.numpy as jnp
 from repro.core.agents.base import Agent
 from repro.core.agents.dqn import DQNAgent
 from repro.core.agents.baselines import LaggedPAACAgent
+from repro.envs.host_env import HostEnvPool
 from repro.models import init_policy
 from repro.optim import make_optimizer
 from repro.utils import get_logger
@@ -31,6 +45,62 @@ class RunResult:
     mean_metrics: Dict[str, float]
     episode_reward_rate: List[float] = field(default_factory=list)
     timesteps_per_sec: float = 0.0
+    # pipeline accounting (0 for the synchronous backend): time the actor
+    # spent blocked on a full queue / waiting for params, and time the
+    # learner spent blocked on an empty queue.
+    actor_idle_s: float = 0.0
+    learner_idle_s: float = 0.0
+
+
+class MetricsAccumulator:
+    """Shared run-loop accounting: per-iteration metric dicts → RunResult.
+
+    Used by both the synchronous ``ParallelRL`` loop and the pipelined
+    learner loop so the two backends report identical metric semantics
+    (mean-per-iteration metrics, episode counts, timesteps/s over the run's
+    wall-clock).
+    """
+
+    def __init__(self):
+        self.acc: Dict[str, float] = {}
+        self.episodes = 0.0
+        self.iters = 0
+        self._t0 = time.perf_counter()
+
+    def update(self, metrics: Dict) -> None:
+        self.iters += 1
+        for k, v in metrics.items():
+            self.acc[k] = self.acc.get(k, 0.0) + float(v)
+        self.episodes += float(metrics.get("episodes", 0.0))
+
+    def result(self, steps: int, steps_per_iter: int, **extra) -> RunResult:
+        dt = time.perf_counter() - self._t0
+        mean = {k: v / max(self.iters, 1) for k, v in self.acc.items()}
+        return RunResult(
+            steps=steps,
+            episodes=self.episodes,
+            mean_metrics=mean,
+            timesteps_per_sec=steps_per_iter * self.iters / max(dt, 1e-9),
+            **extra,
+        )
+
+
+def init_rl_common(env, agent, optimizer: str, lr_schedule, seed: int):
+    """Shared constructor half of ``ParallelRL`` and ``PipelinedRL``.
+
+    Returns ``(optimizer, lr_schedule, key, k_env, params, opt_state)``. The
+    RNG layout here is load-bearing: both backends must split the seed key
+    identically so a lock-stepped pipeline reproduces the synchronous run
+    bit-for-bit.
+    """
+    opt = make_optimizer(optimizer)
+    if lr_schedule is None:
+        from repro.optim import constant
+
+        lr_schedule = constant(0.0007 * env.n_envs)  # paper §5.2 rule
+    key, k_init, k_env = jax.random.split(jax.random.PRNGKey(seed), 3)
+    params = init_policy(k_init, agent.cfg)
+    return opt, lr_schedule, key, k_env, params, opt.init(params)
 
 
 class ParallelRL:
@@ -48,44 +118,79 @@ class ParallelRL:
     ):
         self.env = env
         self.agent = agent
-        self.optimizer = make_optimizer(optimizer)
-        if lr_schedule is None:
-            from repro.optim import constant
+        (self.optimizer, self.lr_schedule, self.key, k_env, self.params,
+         self.opt_state) = init_rl_common(env, agent, optimizer, lr_schedule,
+                                          seed)
 
-            lr_schedule = constant(0.0007 * env.n_envs)  # paper §5.2 rule
-        self.lr_schedule = lr_schedule
+        self._host = isinstance(env, HostEnvPool)
+        if self._host:
+            from repro.core.agents.paac import PAACAgent
 
-        key = jax.random.PRNGKey(seed)
-        self.key, k_init, k_env = jax.random.split(key, 3)
-        self.params = init_policy(k_init, agent.cfg)
-        self.opt_state = self.optimizer.init(self.params)
-        self.env_state = env.reset(k_env)
-        self.obs = env.observe(self.env_state)
-
-        self._has_agent_state = isinstance(agent, (DQNAgent, LaggedPAACAgent))
-        if isinstance(agent, DQNAgent):
-            self.agent_state = agent.init_state(
-                replay_capacity, env.obs_shape, self.params, self.obs.dtype
-            )
-        elif isinstance(agent, LaggedPAACAgent):
-            self.agent_state = agent.init_state(self.params)
-        else:
+            # exact type: subclasses/look-alikes (LaggedPAACAgent, PPOAgent,
+            # DQNAgent) need their own update step, which the shared host
+            # learner step would silently replace with the plain PAAC loss
+            if type(agent) is not PAACAgent:
+                raise NotImplementedError(
+                    "HostEnvPool currently drives plain PAACAgent "
+                    f"(got {type(agent).__name__})"
+                )
+            self._has_agent_state = False
             self.agent_state = None
+            self.env_state = None
+            self.obs = env.reset()
+            from repro.pipeline.actor import collect_host, make_host_act_step
 
-        self._train_step = jax.jit(
-            agent.make_train_step(env, self.optimizer, self.lr_schedule)
-        )
+            self._collect_host = collect_host
+            self._act = make_host_act_step(agent.act_fn())
+            # shared with the pipelined learner: same jitted update step,
+            # with the importance correction inert (behaviour == learner).
+            from repro.pipeline.learner import make_learner_step
+
+            self._update_step = jax.jit(
+                make_learner_step(agent, self.optimizer, self.lr_schedule,
+                                  rho_bar=1e9),
+                donate_argnums=(1,),
+            )
+            self._train_step = None
+        else:
+            self.env_state = env.reset(k_env)
+            self.obs = env.observe(self.env_state)
+
+            self._has_agent_state = isinstance(agent, (DQNAgent, LaggedPAACAgent))
+            if isinstance(agent, DQNAgent):
+                self.agent_state = agent.init_state(
+                    replay_capacity, env.obs_shape, self.params, self.obs.dtype
+                )
+            elif isinstance(agent, LaggedPAACAgent):
+                self.agent_state = agent.init_state(self.params)
+            else:
+                self.agent_state = None
+
+            self._train_step = jax.jit(
+                agent.make_train_step(env, self.optimizer, self.lr_schedule)
+            )
         self.total_steps = 0
         self._steps_per_iter = env.n_envs * agent.hp.t_max
 
+    # -- one iteration on the HostEnvPool path -------------------------------
+    def _host_iteration(self, step_arr):
+        self.obs, self.key, traj, last_obs = self._collect_host(
+            self._act, self.env, self.params, self.obs, self.key,
+            self.agent.hp.t_max,
+        )
+        self.params, self.opt_state, metrics = self._update_step(
+            self.params, self.opt_state, traj, last_obs, step_arr
+        )
+        return metrics
+
     def run(self, iterations: int, log_every: int = 0) -> RunResult:
         """Run `iterations` framework iterations (each = n_e·t_max timesteps)."""
-        acc: Dict[str, float] = {}
-        episodes = 0.0
-        t0 = time.perf_counter()
+        acc = MetricsAccumulator()
         step_arr = jnp.asarray(self.total_steps, jnp.int32)
         for i in range(iterations):
-            if self._has_agent_state:
+            if self._host:
+                metrics = self._host_iteration(step_arr)
+            elif self._has_agent_state:
                 (
                     self.params,
                     self.opt_state,
@@ -112,20 +217,12 @@ class ParallelRL:
                 )
             self.total_steps += self._steps_per_iter
             step_arr = step_arr + 1
-            for k, v in metrics.items():
-                acc[k] = acc.get(k, 0.0) + float(v)
-            episodes += float(metrics.get("episodes", 0.0))
+            acc.update(metrics)
             if log_every and (i + 1) % log_every == 0:
                 log.info(
                     "iter %d steps %d reward_sum %.3f loss %.4f",
                     i + 1, self.total_steps,
-                    acc.get("reward_sum", 0.0), float(metrics.get("loss", 0.0)),
+                    acc.acc.get("reward_sum", 0.0),
+                    float(metrics.get("loss", 0.0)),
                 )
-        dt = time.perf_counter() - t0
-        mean = {k: v / iterations for k, v in acc.items()}
-        return RunResult(
-            steps=self.total_steps,
-            episodes=episodes,
-            mean_metrics=mean,
-            timesteps_per_sec=self._steps_per_iter * iterations / max(dt, 1e-9),
-        )
+        return acc.result(self.total_steps, self._steps_per_iter)

@@ -57,3 +57,20 @@ def rollout(
         step, (env_state, obs, key), None, length=t_max
     )
     return env_state, obs, key, traj
+
+
+def make_collect_fn(act_fn: Callable, env, t_max: int) -> Callable:
+    """Standalone jittable rollout collector.
+
+    Returns ``collect(params, env_state, obs, key) -> (env_state, last_obs,
+    key, traj)`` — exactly the acting half of Algorithm 1, detached from the
+    learning half so an asynchronous actor (``repro.pipeline``) can run it on
+    its own thread while the learner consumes the previous trajectory. The
+    key evolution is identical to the fused train step's, so a lock-stepped
+    pipeline reproduces the synchronous trajectory stream bit-for-bit.
+    """
+
+    def collect(params, env_state, obs, key):
+        return rollout(act_fn, env, params, env_state, obs, key, t_max)
+
+    return collect

@@ -9,9 +9,13 @@ architecture exactly: ``n_e`` environment instances are partitioned among
 the batched action vector; workers step their environments in parallel and
 write observations/rewards into shared pinned buffers.
 
-This path is NOT used by the dry-run or benchmarks (it is host-bound by
-construction — the paper's Fig. 2 "50% env time" regime); it exists so the
-framework can drive non-JAX environments with zero changes to the agents.
+This path is host-bound by construction — the paper's Fig. 2 "50% env
+time" regime. ``ParallelRL`` drives it synchronously (host rollout, then
+jitted update) and the asynchronous pipeline (``repro.pipeline``) overlaps
+the env stall with learning; ``benchmarks/fig2_time_split.py``'s
+``run_pipelined_host`` measures the recovered throughput. Workers release
+the GIL while stepping external processes, which is exactly what makes the
+overlap real.
 """
 from __future__ import annotations
 
@@ -43,10 +47,18 @@ class HostEnvPool:
         self._done = np.zeros((self.n_envs,), bool)
         self._pool = cf.ThreadPoolExecutor(max_workers=self.n_workers)
         self._slices = np.array_split(np.arange(self.n_envs), self.n_workers)
+        self._closed = False
+
+    def _reset_slice(self, idxs: np.ndarray):
+        for i in idxs:
+            self._obs[i] = self.envs[i].reset()
 
     def reset(self) -> jnp.ndarray:
-        for i, env in enumerate(self.envs):
-            self._obs[i] = env.reset()
+        """Reset all envs, partitioned over the worker pool like ``step``."""
+        futures = [self._pool.submit(self._reset_slice, idxs)
+                   for idxs in self._slices]
+        for f in futures:
+            f.result()
         return jnp.asarray(self._obs)
 
     def _work(self, idxs: np.ndarray, actions: np.ndarray):
@@ -58,22 +70,37 @@ class HostEnvPool:
             self._reward[i] = r
             self._done[i] = done
 
-    def step(self, actions) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        """Apply the master's batched actions; workers run in parallel."""
+    def step_host(self, actions) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Apply the master's batched actions; workers run in parallel.
+
+        Returns views of the shared host buffers (valid until the next call)
+        — the zero-device-op path used by the pipeline's actor thread.
+        """
         actions = np.asarray(actions)
         futures = [
             self._pool.submit(self._work, idxs, actions) for idxs in self._slices
         ]
         for f in futures:
             f.result()
-        return (
-            jnp.asarray(self._obs),
-            jnp.asarray(self._reward),
-            jnp.asarray(self._done),
-        )
+        return self._obs, self._reward, self._done
+
+    def step(self, actions) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """``step_host`` with outputs staged onto the device."""
+        obs, reward, done = self.step_host(actions)
+        return jnp.asarray(obs), jnp.asarray(reward), jnp.asarray(done)
 
     def close(self):
-        self._pool.shutdown(wait=False)
+        """Shut the worker pool down and close all envs. Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        self._pool.shutdown(wait=True)
         for env in self.envs:
             if hasattr(env, "close"):
                 env.close()
+
+    def __enter__(self) -> "HostEnvPool":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

@@ -9,9 +9,17 @@ Two modes:
 * ``--mode synthetic``: the sharded trajectory train step on synthetic
   batches — the profiling configuration matching the dry-run's train_4k.
 
+``--pipeline`` swaps the synchronous ``ParallelRL`` backend for the
+asynchronous actor/learner pipeline (``repro.pipeline.PipelinedRL``):
+rollout i+1 is collected while the learner consumes rollout i, with
+``--queue-depth`` bounding staleness and ``--rho-bar`` clipping the
+off-policy importance correction.
+
 Examples:
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
         --iterations 20
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
+        --iterations 20 --pipeline --queue-depth 2 --rho-bar 1.0
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --reduced \
         --mode synthetic --iterations 5
 """
@@ -44,13 +52,28 @@ def run_rl(args):
                    k=2, horizon=64)
     cfg = cfg.replace(num_actions=env.vocab)
     agent = PAACAgent(cfg, PAACConfig(t_max=args.t_max, entropy_beta=0.01))
-    rl = ParallelRL(env, agent, lr_schedule=constant(args.lr), seed=args.seed)
+    if args.pipeline:
+        from repro.configs import PipelineConfig
+        from repro.pipeline import PipelinedRL
+
+        rl = PipelinedRL(
+            env, agent, lr_schedule=constant(args.lr), seed=args.seed,
+            pipeline=PipelineConfig(queue_depth=args.queue_depth,
+                                    rho_bar=args.rho_bar),
+        )
+    else:
+        rl = ParallelRL(env, agent, lr_schedule=constant(args.lr),
+                        seed=args.seed)
     for epoch in range(args.epochs):
         res = rl.run(args.iterations, log_every=max(args.iterations // 4, 1))
         log.info(
-            "epoch %d steps=%d mean_reward/iter=%.3f tps=%.0f",
+            "epoch %d steps=%d mean_reward/iter=%.3f tps=%.0f%s",
             epoch, res.steps, res.mean_metrics.get("reward_sum", 0.0),
             res.timesteps_per_sec,
+            (f" staleness={res.mean_metrics.get('staleness', 0.0):.1f}"
+             f" actor_idle={res.actor_idle_s:.2f}s"
+             f" learner_idle={res.learner_idle_s:.2f}s"
+             if args.pipeline else ""),
         )
     if args.checkpoint:
         save_checkpoint(args.checkpoint, rl.total_steps, rl.params)
@@ -99,6 +122,12 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="use the asynchronous actor/learner pipeline backend")
+    ap.add_argument("--queue-depth", type=int, default=2,
+                    help="trajectory queue depth (max rollouts in flight)")
+    ap.add_argument("--rho-bar", type=float, default=1.0,
+                    help="importance-weight clip for stale rollouts (V-trace ρ̄)")
     args = ap.parse_args()
     if args.mode == "rl":
         run_rl(args)

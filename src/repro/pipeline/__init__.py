@@ -1,0 +1,39 @@
+"""Asynchronous actor/learner pipeline — the beyond-paper throughput lever.
+
+The paper's framework (``repro.core``) is fully synchronous: acting,
+stepping and learning serialize into one program per iteration, so the
+accelerator idles whenever the host is on the critical path (Fig. 2's
+"50% env time" regime). Following GA3C (Babaeizadeh et al., 2017) and
+Accelerated Methods (Stooke & Abbeel, 2018), this subsystem decouples the
+two halves behind a bounded queue:
+
+* ``TrajectoryQueue`` — bounded, never-dropping rollout queue with
+  actor/learner idle-time accounting (``repro.pipeline.queue``),
+* ``ActorThread`` / ``ParamSlot`` / ``collect_host`` — double-buffered
+  rollout collection for JAX-native envs and ``HostEnvPool``
+  (``repro.pipeline.actor``),
+* ``make_learner_step`` — PAAC update with truncated-importance staleness
+  correction à la V-trace (``repro.pipeline.learner``),
+* ``PipelinedRL`` — orchestrator mirroring ``ParallelRL``'s API
+  (``repro.pipeline.orchestrator``).
+
+Configure via ``repro.configs.PipelineConfig`` (queue depth, ρ̄, lockstep);
+select from the launcher with ``repro.launch.train --pipeline``.
+"""
+from repro.configs.base import PipelineConfig
+from repro.pipeline.actor import ActorThread, ParamSlot, Rollout, collect_host
+from repro.pipeline.learner import make_learner_step
+from repro.pipeline.orchestrator import PipelinedRL
+from repro.pipeline.queue import CLOSED, TrajectoryQueue
+
+__all__ = [
+    "ActorThread",
+    "CLOSED",
+    "ParamSlot",
+    "PipelineConfig",
+    "PipelinedRL",
+    "Rollout",
+    "TrajectoryQueue",
+    "collect_host",
+    "make_learner_step",
+]

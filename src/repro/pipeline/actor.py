@@ -1,0 +1,194 @@
+"""The pipeline's acting half: rollout collection decoupled from learning.
+
+Two collection paths, mirroring the two environment regimes of
+``repro.core.framework``:
+
+* ``make_collect_fn`` (re-exported from ``repro.core.rollout``) — JAX-native
+  ``VectorEnv``: one jitted program collects a full ``t_max`` rollout.
+* ``collect_host`` — ``HostEnvPool``: jitted batched acting interleaved with
+  threaded host env stepping (paper §3's master/worker loop, run on the
+  actor thread). While the env workers sleep in C/syscalls the GIL is
+  released, so the learner's jitted update runs concurrently — this is the
+  overlap that recovers the paper's Fig. 2 "50% env time".
+
+``ParamSlot`` is the double buffer between learner and actor: the learner
+publishes fresh params (a reference swap — device arrays are immutable) and
+the actor reads the latest snapshot before each rollout. ``Rollout`` is the
+queue payload: the trajectory, the bootstrap observation, and the behaviour
+params version (staleness = learner_version − behaviour_version).
+"""
+from __future__ import annotations
+
+import threading
+from queue import Full
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rollout import Transition, make_collect_fn  # noqa: F401
+
+__all__ = [
+    "ParamSlot",
+    "Rollout",
+    "ActorThread",
+    "collect_host",
+    "make_collect_fn",
+]
+
+
+class ParamSlot:
+    """Versioned single-slot param exchange (learner → actor).
+
+    The learner ``publish``es params after every update; the actor ``read``s
+    whatever is newest when it starts a rollout. ``wait_for`` lets a
+    lock-stepped actor block until the learner has caught up — synchronous
+    semantics through the pipelined code path.
+    """
+
+    def __init__(self, params: Any, version: int = 0):
+        self._params = params
+        self._version = version
+        self._cond = threading.Condition()
+
+    def publish(self, params: Any, version: int) -> None:
+        with self._cond:
+            self._params = params
+            self._version = version
+            self._cond.notify_all()
+
+    def read(self) -> Tuple[Any, int]:
+        with self._cond:
+            return self._params, self._version
+
+    def wait_for(self, version: int, timeout: Optional[float] = None) -> bool:
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._version >= version, timeout=timeout
+            )
+
+    @property
+    def version(self) -> int:
+        with self._cond:
+            return self._version
+
+
+class Rollout(NamedTuple):
+    """Queue payload: one collected rollout plus its provenance."""
+
+    traj: Transition  # time-major (T, E, ...)
+    last_obs: jnp.ndarray  # (E, *obs_shape) — bootstrap observation
+    behavior_version: int  # params version the actor acted with
+
+
+def make_host_act_step(act_fn: Callable) -> Callable:
+    """Fuse one acting step — forward, sample, behaviour logp — into a
+    single jitted program so the host loop pays one dispatch per step."""
+
+    @jax.jit
+    def act_step(params, obs, key):
+        key, k_act = jax.random.split(key)
+        logits, value = act_fn(params, obs)
+        action = jax.random.categorical(k_act, logits)
+        logp = jnp.take_along_axis(
+            jax.nn.log_softmax(logits), action[:, None], axis=1
+        )[:, 0]
+        return action, value, logp, key
+
+    return act_step
+
+
+def collect_host(act_step: Callable, pool, params, obs, key, t_max: int):
+    """Collect ``t_max`` steps from a ``HostEnvPool`` (paper §3 loop).
+
+    ``act_step`` is the jitted fused acting step (``make_host_act_step``);
+    env stepping runs on the pool's worker threads. Returns
+    ``(next_obs, key, traj, last_obs)`` with ``traj`` a time-major
+    ``Transition`` of *host* (numpy) arrays — including the behaviour
+    log-prob the learner's importance correction needs — transferred to the
+    device only when the learner dispatches its update.
+    """
+    # accumulate on the host (numpy): the only device traffic per step is the
+    # fused act_step — extra device ops here would queue behind the learner's
+    # update and stretch the rollout. The trajectory stays host-side; the
+    # H2D transfer happens when the learner dispatches its update.
+    obs_l, act_l, rew_l, done_l, val_l, logp_l = [], [], [], [], [], []
+    obs_np = np.asarray(obs)
+    for _ in range(t_max):
+        action, value, logp, key = act_step(params, obs_np, key)
+        action_np = np.asarray(action)
+        next_obs, reward, done = pool.step_host(action_np)
+        obs_l.append(obs_np)
+        act_l.append(action_np)
+        rew_l.append(reward.copy())
+        done_l.append(done.copy())
+        val_l.append(np.asarray(value))
+        logp_l.append(np.asarray(logp))
+        obs_np = next_obs.copy()
+    traj = Transition(
+        obs=np.stack(obs_l),
+        action=np.stack(act_l),
+        reward=np.stack(rew_l),
+        done=np.stack(done_l),
+        value=np.stack(val_l),
+        logp=np.stack(logp_l),
+    )
+    return obs_np, key, traj, obs_np  # final obs is the bootstrap observation
+
+
+class ActorThread(threading.Thread):
+    """Collects ``iterations`` rollouts and feeds the trajectory queue.
+
+    ``collect(params, key) -> (key, traj, last_obs)`` encapsulates either
+    collection path with env state captured in the closure; the thread owns
+    the acting RNG key. In ``lockstep`` mode the actor waits until the
+    learner has published version i before collecting rollout i (so data is
+    never stale); otherwise it reads the freshest available params and runs
+    ahead up to the queue depth.
+    """
+
+    def __init__(self, collect: Callable, queue, slot: ParamSlot, key,
+                 iterations: int, lockstep: bool = False):
+        super().__init__(name="pipeline-actor", daemon=True)
+        self._collect = collect
+        self._queue = queue
+        self._slot = slot
+        self._key = key
+        self._iterations = iterations
+        self._lockstep = lockstep
+        self._stop_requested = threading.Event()
+        self.wait_s = 0.0  # time blocked waiting for params (lockstep)
+        self.error: Optional[BaseException] = None
+
+    def stop(self) -> None:
+        """Ask the actor to exit at its next blocking point (learner died)."""
+        self._stop_requested.set()
+
+    def run(self) -> None:
+        import time as _time
+
+        try:
+            for i in range(self._iterations):
+                if self._lockstep:
+                    t0 = _time.perf_counter()
+                    while not self._slot.wait_for(i, timeout=0.1):
+                        if self._stop_requested.is_set():
+                            return
+                    self.wait_s += _time.perf_counter() - t0
+                if self._stop_requested.is_set():
+                    return
+                params, version = self._slot.read()
+                self._key, traj, last_obs = self._collect(params, self._key)
+                while True:  # bounded put, interruptible by stop()
+                    try:
+                        self._queue.put(Rollout(traj, last_obs, version),
+                                        timeout=0.1)
+                        break
+                    except Full:
+                        if self._stop_requested.is_set():
+                            return
+        except BaseException as e:  # surfaced by the learner loop
+            self.error = e
+        finally:
+            self._queue.close()

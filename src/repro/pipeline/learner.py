@@ -1,0 +1,71 @@
+"""The pipeline's learning half: importance-corrected PAAC update.
+
+The learner consumes rollouts that may be up to ``queue_depth`` updates
+stale. Following GA3C/V-trace, each step is reweighted by the truncated
+importance ratio
+
+    ρ_t = min(ρ̄, π_learner(a_t|s_t) / π_behaviour(a_t|s_t))
+
+where the behaviour log-prob was recorded at acting time (``Transition.logp``)
+and the learner policy is the recompute under current params. ρ̄ → ∞
+disables the correction, recovering the synchronous PAAC loss exactly when
+the data is on-policy — the equivalence the pipeline tests pin down.
+
+``make_learner_step`` returns a jittable
+``(params, opt_state, traj, last_obs, step) -> (params, opt_state, metrics)``
+— the learning half of ``PAACAgent.make_train_step`` with the rollout
+replaced by a queue payload. The synchronous ``HostEnvPool`` driver in
+``repro.core.framework`` reuses the same step (with ρ̄ huge), so sync and
+pipelined backends differ only in overlap, not in math.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.agents.paac import paac_losses, trajectory_forward
+
+
+def make_learner_step(agent, optimizer, lr_schedule,
+                      rho_bar: float = 1.0) -> Callable:
+    """Build the pipelined learner's jittable update step for a PAAC agent."""
+    cfg, hp = agent.cfg, agent.hp
+    act = agent.act_fn()
+
+    def loss_fn(params, traj, bootstrap):
+        logits, values, actions, returns = trajectory_forward(
+            params, cfg, hp, traj, bootstrap
+        )
+        logp_now = jnp.take_along_axis(
+            jax.nn.log_softmax(logits), actions[:, None], axis=1
+        )[:, 0]
+        rho = jnp.exp(
+            logp_now - traj.logp.reshape(logp_now.shape).astype(jnp.float32)
+        )
+        rho = jax.lax.stop_gradient(rho)
+        weights = jnp.minimum(rho, rho_bar)
+        total, metrics = paac_losses(
+            logits, values, actions, returns, hp.entropy_beta, hp.value_coef,
+            weights=weights,
+        )
+        metrics["rho_mean"] = jnp.mean(rho)
+        metrics["rho_clip_frac"] = jnp.mean((rho > rho_bar).astype(jnp.float32))
+        return total, metrics
+
+    def learner_step(params, opt_state, traj, last_obs, step):
+        _, bootstrap = act(params, last_obs)  # V(s_{tmax+1}) under learner params
+        bootstrap = jax.lax.stop_gradient(bootstrap)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, traj, bootstrap
+        )
+        lr = lr_schedule(step)
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["reward_sum"] = jnp.sum(traj.reward)
+        metrics["episodes"] = jnp.sum(traj.done)
+        return params, opt_state, metrics
+
+    return learner_step

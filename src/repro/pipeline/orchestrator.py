@@ -1,0 +1,184 @@
+"""``PipelinedRL`` — the asynchronous actor/learner backend.
+
+Drop-in alternative to ``repro.core.ParallelRL`` (same constructor shape,
+same ``run(iterations) -> RunResult``) that splits Algorithm 1 across two
+threads joined by a bounded ``TrajectoryQueue``:
+
+    actor thread:   read latest params → collect rollout → queue.put
+    learner thread: queue.get → importance-corrected update → publish params
+
+With queue depth d the actor runs at most d rollouts ahead (depth 1 =
+double buffering: rollout i+1 is collected while the learner consumes
+rollout i). Staleness is bounded by the depth and corrected by the
+learner's truncated importance weights (``PipelineConfig.rho_bar``); in
+``lockstep`` mode the actor always waits for fresh params and the pipeline
+reproduces the synchronous trajectory stream exactly.
+
+The win is wall-clock overlap: on the ``HostEnvPool`` path the env workers
+hold no GIL while stepping, so host env time and the jitted update run
+concurrently instead of serially — the paper's Fig. 2 "50% env time" recovered.
+"""
+from __future__ import annotations
+
+import queue as _stdlib_queue
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PipelineConfig
+from repro.core.framework import MetricsAccumulator, RunResult, init_rl_common
+from repro.core.rollout import make_collect_fn
+from repro.envs.host_env import HostEnvPool
+from repro.pipeline.actor import ActorThread, ParamSlot, Rollout, collect_host
+from repro.pipeline.learner import make_learner_step
+from repro.pipeline.queue import CLOSED, TrajectoryQueue
+from repro.utils import get_logger
+
+log = get_logger("pipeline")
+
+
+class PipelinedRL:
+    """Asynchronous actor/learner pipeline over the PAAC framework."""
+
+    def __init__(
+        self,
+        env,
+        agent,
+        *,
+        optimizer: str = "rmsprop",
+        lr_schedule: Optional[Callable] = None,
+        seed: int = 0,
+        pipeline: PipelineConfig = PipelineConfig(),
+    ):
+        from repro.core.agents.paac import PAACAgent
+
+        # exact type: subclasses (LaggedPAACAgent) and look-alikes (PPOAgent)
+        # carry their own loss/state that make_learner_step would silently drop
+        if type(agent) is not PAACAgent:
+            raise NotImplementedError(
+                f"PipelinedRL drives plain PAACAgent (got {type(agent).__name__}); "
+                "its learner step hard-codes the importance-weighted PAAC loss"
+            )
+        self.env = env
+        self.agent = agent
+        self.pipeline = pipeline
+        # shared with ParallelRL — identical RNG layout so a lock-stepped
+        # pipeline reproduces the synchronous run bit-for-bit.
+        (self.optimizer, self.lr_schedule, self.key, k_env, self.params,
+         self.opt_state) = init_rl_common(env, agent, optimizer, lr_schedule,
+                                          seed)
+
+        self._host = isinstance(env, HostEnvPool)
+        act = agent.act_fn()
+        if self._host:
+            from repro.pipeline.actor import make_host_act_step
+
+            self.env_state = None
+            self.obs = env.reset()
+            self._act = make_host_act_step(act)
+            self._collect_jit = None
+        else:
+            self.env_state = env.reset(k_env)
+            self.obs = env.observe(self.env_state)
+            self._act = None
+            self._collect_jit = jax.jit(make_collect_fn(act, env, agent.hp.t_max))
+
+        # donate the optimizer state (learner-private). Params must NOT be
+        # donated: the actor thread still reads the behaviour snapshot.
+        self._update_step = jax.jit(
+            make_learner_step(agent, self.optimizer, self.lr_schedule,
+                              rho_bar=pipeline.rho_bar),
+            donate_argnums=(1,),
+        )
+        self.total_steps = 0
+        self._steps_per_iter = env.n_envs * agent.hp.t_max
+
+    # -- rollout collection closure (runs on the actor thread) ---------------
+    def _make_collect(self) -> Callable:
+        if self._host:
+            env, act, t_max = self.env, self._act, self.agent.hp.t_max
+
+            def collect(params, key):
+                obs, key, traj, last_obs = collect_host(
+                    act, env, params, self.obs, key, t_max
+                )
+                self.obs = obs
+                return key, traj, last_obs
+
+        else:
+            collect_jit = self._collect_jit
+
+            def collect(params, key):
+                env_state, last_obs, key, traj = collect_jit(
+                    params, self.env_state, self.obs, key
+                )
+                # block so queue depth genuinely bounds in-flight rollouts
+                jax.block_until_ready(traj.reward)
+                self.env_state, self.obs = env_state, last_obs
+                return key, traj, last_obs
+
+        return collect
+
+    def run(self, iterations: int, log_every: int = 0) -> RunResult:
+        """Run `iterations` pipelined iterations (each = n_e·t_max timesteps)."""
+        queue = TrajectoryQueue(self.pipeline.queue_depth)
+        slot = ParamSlot(self.params, version=0)
+        actor = ActorThread(
+            self._make_collect(), queue, slot, self.key, iterations,
+            lockstep=self.pipeline.lockstep,
+        )
+        acc = MetricsAccumulator()
+        actor.start()
+        # same step-counter semantics as ParallelRL.run (lr_schedule parity)
+        step_arr = jnp.asarray(self.total_steps, jnp.int32)
+        completed = 0
+        try:
+            for i in range(iterations):
+                payload = queue.get()
+                if payload is CLOSED:  # actor died early
+                    break
+                assert isinstance(payload, Rollout)
+                self.params, self.opt_state, metrics = self._update_step(
+                    self.params, self.opt_state, payload.traj,
+                    payload.last_obs, step_arr,
+                )
+                slot.publish(self.params, i + 1)
+                step_arr = step_arr + 1
+                self.total_steps += self._steps_per_iter
+                completed += 1
+                metrics = dict(metrics)
+                metrics["staleness"] = float(i - payload.behavior_version)
+                acc.update(metrics)
+                if log_every and (i + 1) % log_every == 0:
+                    log.info(
+                        "iter %d steps %d staleness %.0f reward_sum %.3f "
+                        "loss %.4f",
+                        i + 1, self.total_steps, metrics["staleness"],
+                        acc.acc.get("reward_sum", 0.0),
+                        float(metrics.get("loss", 0.0)),
+                    )
+        finally:
+            # reap the actor on every exit path (normal, learner exception,
+            # KeyboardInterrupt): signal stop, then keep draining so a put
+            # blocked on a full queue can finish and the thread can exit.
+            actor.stop()
+            while actor.is_alive():
+                try:
+                    queue.get(timeout=0.05)
+                except _stdlib_queue.Empty:
+                    pass
+                actor.join(timeout=0.05)
+        if actor.error is not None:
+            raise RuntimeError("pipeline actor failed") from actor.error
+        if completed != iterations:
+            raise RuntimeError(
+                f"pipeline stopped early: {completed}/{iterations} iterations"
+            )
+        self.key = actor._key
+        return acc.result(
+            self.total_steps,
+            self._steps_per_iter,
+            actor_idle_s=queue.put_wait_s + actor.wait_s,
+            learner_idle_s=queue.get_wait_s,
+        )

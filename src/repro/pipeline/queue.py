@@ -1,0 +1,86 @@
+"""Bounded trajectory queue between the actor and the learner.
+
+A thin wrapper over ``queue.Queue`` with the two properties the pipeline
+needs beyond the stdlib:
+
+* **backpressure accounting** — the cumulative time the producer (actor)
+  spent blocked on a full queue and the consumer (learner) spent blocked on
+  an empty one. These are exactly the paper-Fig.2 style "who is on the
+  critical path" numbers the ``fig2_time_split`` benchmark reports for the
+  pipelined backend.
+* **never drops** — depth bounds memory (at most ``depth`` rollouts in
+  flight) by blocking the actor, not by discarding trajectories; every
+  collected rollout is learned from exactly once.
+
+``close()`` wakes a blocked consumer with a ``Closed`` sentinel so the
+learner can drain remaining items and exit cleanly.
+"""
+from __future__ import annotations
+
+import queue as _queue
+import time
+from typing import Any, Optional
+
+
+class Closed:
+    """Sentinel delivered to a consumer after ``close()`` drains."""
+
+
+CLOSED = Closed()
+
+
+class TrajectoryQueue:
+    """Bounded FIFO of rollout payloads with idle-time accounting."""
+
+    def __init__(self, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"queue depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._q: _queue.Queue = _queue.Queue(maxsize=depth)
+        self._closed = False
+        self.put_wait_s = 0.0  # actor idle (queue full)
+        self.get_wait_s = 0.0  # learner idle (queue empty)
+
+    def put(self, item: Any, timeout: Optional[float] = None) -> None:
+        """Blocking put; accumulates the time spent waiting on a full queue.
+        Raises stdlib ``queue.Full`` when ``timeout`` elapses."""
+        if self._closed:
+            raise RuntimeError("put() on a closed TrajectoryQueue")
+        t0 = time.perf_counter()
+        try:
+            self._q.put(item, timeout=timeout)
+        finally:
+            self.put_wait_s += time.perf_counter() - t0
+
+    def get(self, timeout: Optional[float] = None) -> Any:
+        """Blocking get; returns ``CLOSED`` once closed and drained.
+        Raises stdlib ``queue.Empty`` when ``timeout`` elapses first."""
+        t0 = time.perf_counter()
+        deadline = None if timeout is None else t0 + timeout
+        try:
+            while True:
+                # poll in small slices: ``close()`` never blocks, so the
+                # sentinel may be the flag alone rather than a queued item
+                try:
+                    return self._q.get(timeout=0.05)
+                except _queue.Empty:
+                    if self._closed:
+                        return CLOSED
+                    if deadline is not None and time.perf_counter() >= deadline:
+                        raise
+        finally:
+            self.get_wait_s += time.perf_counter() - t0
+
+    def close(self) -> None:
+        """Mark the stream finished; the consumer sees ``CLOSED`` after the
+        remaining items. Never blocks (the flag covers a full queue).
+        Idempotent."""
+        if not self._closed:
+            self._closed = True
+            try:
+                self._q.put_nowait(CLOSED)
+            except _queue.Full:
+                pass  # consumer drains, then sees the flag
+
+    def qsize(self) -> int:
+        return self._q.qsize()

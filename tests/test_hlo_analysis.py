@@ -21,7 +21,10 @@ def test_scan_flops_multiplied_by_trip_count():
         jax.ShapeDtypeStruct((M, M), jnp.float32),
         jax.ShapeDtypeStruct((L, M, M), jnp.float32),
     ).compile()
-    xla_flops = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns one dict per computation
+        ca = ca[0]
+    xla_flops = ca["flops"]
     static = analyze_hlo(compiled.as_text())
     expect = 2.0 * M**3 * L
     # XLA counts the body once; the analyzer must recover the full count

@@ -35,3 +35,40 @@ def test_host_env_pool_steps_in_parallel():
     assert float(np.asarray(rewards).min()) == 1.0  # every env rewarded
     # auto-reset happened for any env that hit done
     pool.close()
+
+
+def test_host_env_pool_parallel_reset_covers_all_envs():
+    n = 10
+    pool = HostEnvPool([lambda s=i: _ToyEnv(s) for i in range(n)],
+                       n_workers=3, obs_shape=(1,))
+    obs = np.asarray(pool.reset())
+    # every env was reset (each _ToyEnv seeds a deterministic first state)
+    expect = np.array([[_ToyEnv(i).reset()[0]] for i in range(n)])
+    np.testing.assert_array_equal(obs, expect)
+    pool.close()
+
+
+def test_host_env_pool_step_host_returns_shared_buffers():
+    n = 4
+    pool = HostEnvPool([lambda s=i: _ToyEnv(s) for i in range(n)],
+                       n_workers=2, obs_shape=(1,))
+    pool.reset()
+    obs, rewards, dones = pool.step_host(np.zeros((n,), np.int64))
+    assert isinstance(obs, np.ndarray) and obs.shape == (n, 1)
+    assert rewards.dtype == np.float32 and dones.dtype == bool
+    pool.close()
+
+
+def test_host_env_pool_context_manager_and_idempotent_close():
+    closed = []
+
+    class ClosableEnv(_ToyEnv):
+        def close(self):
+            closed.append(id(self))
+
+    with HostEnvPool([lambda s=i: ClosableEnv(s) for i in range(4)],
+                     n_workers=2, obs_shape=(1,)) as pool:
+        pool.reset()
+    assert len(closed) == 4
+    pool.close()  # second close is a no-op
+    assert len(closed) == 4

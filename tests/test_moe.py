@@ -1,9 +1,17 @@
-"""MoE routing invariants (hypothesis property tests + unit checks)."""
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings
+"""MoE routing invariants (hypothesis property tests + unit checks).
+
+``hypothesis`` is a dev-extra (see requirements-dev.txt) — skip the module
+cleanly when it isn't installed instead of erroring the whole collection.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.configs import ArchConfig
 from repro.models.moe import _route_group, init_moe, moe_forward

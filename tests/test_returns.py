@@ -1,11 +1,18 @@
-"""Properties of the return estimators (hypothesis) — system invariants."""
-import hypothesis
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings
-from hypothesis.extra import numpy as hnp
+"""Properties of the return estimators (hypothesis) — system invariants.
+
+``hypothesis`` is a dev-extra (see requirements-dev.txt) — skip the module
+cleanly when it isn't installed instead of erroring the whole collection.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis.extra import numpy as hnp  # noqa: E402
 
 from repro.core.returns import gae_advantages, n_step_returns
 

@@ -9,8 +9,9 @@ from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.distributed.sharding import cache_specs, input_sharding, param_specs
 from repro.models import init_policy, init_policy_cache
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# jax 0.4.37 signature: AbstractMesh(((name, size), ...))
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH_MP = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def _params_sds(cfg):
@@ -88,7 +89,11 @@ def test_moe_experts_shard_over_model():
     sds = _params_sds(cfg)
     specs = param_specs(sds, MESH, "fsdp_tp")
     moe_spec = specs["trunk"]["layers"]["moe"]["wi"]
-    assert tuple(moe_spec) == (None, "model", "data", None)
+    # the data dim may be a bare axis name or a (possibly multi-)axis tuple
+    assert tuple(moe_spec) in (
+        (None, "model", "data", None),
+        (None, "model", ("data",), None),
+    )
 
 
 def test_cache_specs_batch_and_heads():
