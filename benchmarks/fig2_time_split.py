@@ -19,9 +19,18 @@ only mitigate, not remove: *external* (host-bound) environments driven via
 synchronous iteration. It reports the sync rollout/update split, the
 pipelined backend's actor-idle vs learner-idle time, and the end-to-end
 timesteps/s speedup from overlapping the two (repro.pipeline).
+
+``run_multi_actor_host`` is the GA3C-style n_actors sweep on top of that:
+N actor replicas, each with its own pool of external envs, feed the single
+learner. Env latency is auto-calibrated so that one actor leaves the
+learner mostly idle (the deep-env-latency regime); adding replicas hides
+more latency until the learner saturates. This is the paper-adjacent claim
+the multi-actor pipeline exists for: throughput scales with n_actors, not
+with one actor's critical path.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -212,6 +221,111 @@ def run_pipelined_host(n_e: int = 16, n_w: int = 8, obs_dim: int = 512,
     return speedup
 
 
+# ---------------------------------------------------------------------------
+# Multi-actor scaling — GA3C-style n_actors sweep on external envs
+# ---------------------------------------------------------------------------
+
+
+def run_multi_actor_host(n_e: int = 8, n_w: int = 8, obs_dim: int = 256,
+                         width: int = 4096, t_max: int = 2, iters: int = 16,
+                         actor_counts=(1, 2, 4), delay: float = 0.0,
+                         warmup: int = 2, target: float = 1.5):
+    """Pipelined throughput vs ``--num-actors`` on per-actor HostEnvPools.
+
+    Each actor replica owns its own pool of ``n_e`` external envs (GA3C's
+    sweep: actors scale emulators). With ``delay=0`` the env latency is
+    auto-calibrated so one actor's rollout takes ≈ ``max(actor_counts)``
+    learner updates — the deep-latency regime where a single actor leaves
+    the learner idle most of the time and each extra replica hides another
+    update's worth of latency. Returns the speedup of the largest actor
+    count over one actor (acceptance target ≥ ``target``).
+    """
+    cfg = get_config("paac_vector").replace(
+        obs_shape=(obs_dim,), num_actions=3, cnn_dense=width, d_model=width
+    )
+    agent = PAACAgent(cfg, PAACConfig(t_max=t_max))
+    envs_per_worker = -(-n_e // n_w)
+    a_max = max(actor_counts)
+
+    def make_pool(d, base_seed=0):
+        return HostEnvPool(
+            [lambda s=base_seed + i: SleepyExternalEnv(s, obs_dim, d)
+             for i in range(n_e)],
+            n_workers=n_w, obs_shape=(obs_dim,),
+        )
+
+    # -- calibrate: measure one learner update on an n_e-wide rollout --------
+    with make_pool(0.0) as pool:
+        rl = ParallelRL(pool, agent, lr_schedule=constant(0.003), seed=0)
+        rl.run(warmup)
+        obs, key, traj, last_obs = collect_host(
+            rl._act, pool, rl.params, rl.obs, rl.key, t_max
+        )
+        params, opt_state = rl.params, rl.opt_state
+        t0 = time.perf_counter()
+        for _ in range(5):
+            params, opt_state, m = rl._update_step(
+                params, opt_state, traj, last_obs, jnp.int32(0)
+            )
+            jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
+        t_upd = (time.perf_counter() - t0) / 5
+    if delay <= 0.0:
+        # one actor's rollout window ≈ a_max updates (+ dispatch slack): the
+        # learner idles (a_max-1)/a_max of the time under a single replica
+        delay = min(
+            max(a_max * (t_upd + 0.01) / (t_max * envs_per_worker), 0.002),
+            0.25,
+        )
+    t_env = delay * t_max * envs_per_worker
+
+    results = {}
+    for n_actors in actor_counts:
+        pools = [make_pool(delay, base_seed=100 * a) for a in range(n_actors)]
+        try:
+            prl = PipelinedRL(
+                pools, agent, lr_schedule=constant(0.003), seed=0,
+                pipeline=PipelineConfig(queue_depth=max(2, n_actors),
+                                        num_actors=n_actors),
+            )
+            prl.run(max(warmup, n_actors))  # compile + fill the pipeline
+            res = prl.run(iters)
+        finally:
+            for p in pools:
+                p.close()
+        results[n_actors] = res.timesteps_per_sec
+        steps = n_e * t_max
+        wall = iters * steps / max(res.timesteps_per_sec, 1e-9)
+        emit(
+            f"fig2_time_split/multi_actor/na={n_actors}",
+            1e6 * steps / max(res.timesteps_per_sec, 1e-9),
+            f"steps_per_s={res.timesteps_per_sec:.0f};"
+            f"env_ms={1e3 * t_env:.0f};update_ms={1e3 * t_upd:.0f};"
+            f"learner_idle%={100 * res.learner_idle_s / max(wall, 1e-9):.0f};"
+            f"staleness={res.mean_metrics.get('staleness', 0.0):.1f}",
+        )
+    a_min = min(actor_counts)
+    speedup = results[a_max] / max(results[a_min], 1e-9)
+    emit(
+        "fig2_time_split/multi_actor_speedup",
+        0.0,
+        f"speedup_{a_max}x_vs_{a_min}x={speedup:.2f}x (target >={target}x)",
+    )
+    return speedup
+
+
 if __name__ == "__main__":
-    run()
-    run_pipelined_host()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=("fig2", "pipelined", "multi"),
+                    default="")
+    ap.add_argument("--num-actors", type=int, nargs="+", default=(1, 2, 4),
+                    help="actor counts for the multi-actor sweep")
+    ap.add_argument("--iters", type=int, default=0,
+                    help="measurement iterations (0 = each benchmark's default)")
+    args = ap.parse_args()
+    if args.only in ("", "fig2"):
+        run(**({"iters": args.iters} if args.iters else {}))
+    if args.only in ("", "pipelined"):
+        run_pipelined_host(**({"iters": args.iters} if args.iters else {}))
+    if args.only in ("", "multi"):
+        run_multi_actor_host(actor_counts=tuple(args.num_actors),
+                             **({"iters": args.iters} if args.iters else {}))

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
-from repro.core.returns import n_step_returns
+from repro.core.returns import n_step_returns, vtrace_returns
 from repro.models.attention import chunked_attention, naive_attention
 
 
@@ -36,6 +36,17 @@ def run():
     t_b = time_call(f_batched, r, d, b, iters=10)
     emit("kernels/nstep_returns_batched", t_b,
          f"actors={E};t_max={T};throughput={E*T/(t_b/1e6):.2e}_returns_per_s")
+
+    # full V-trace (the pipelined learner's targets) vs the plain recursion:
+    # the clipped-importance corrections cost ~2 extra elementwise passes
+    vals = jax.random.normal(key, (E, T))
+    rho = jnp.exp(0.3 * jax.random.normal(key, (E, T)))
+    f_vtrace = jax.jit(
+        lambda r, d, v, b, w: vtrace_returns(r, d, v, b, w, 0.99, 1.0, 1.0)
+    )
+    t_v = time_call(f_vtrace, r, d, vals, b, rho, iters=10)
+    emit("kernels/vtrace_returns_batched", t_v,
+         f"actors={E};t_max={T};nstep_us={t_b:.0f};overhead={t_v/t_b:.2f}x")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,12 @@ def main() -> None:
         "fig2": lambda: fig2_time_split.run(
             n_envs_list=(16, 32, 64) if not args.full else (16, 32, 64, 128)
         ),
+        "fig2_pipelined": lambda: fig2_time_split.run_pipelined_host(
+            iters=12 if not args.full else 40
+        ),
+        "fig2_actors": lambda: fig2_time_split.run_multi_actor_host(
+            iters=16 if not args.full else 48
+        ),
         "fig34": lambda: fig34_ne_scaling.run(
             n_envs_list=(16, 32, 64) if not args.full else (16, 32, 64, 128, 256),
             total_steps=30_000 if not args.full else 120_000,

@@ -22,12 +22,15 @@ from repro.pipeline import PipelinedRL
 PAPER_NMAX = 1.15e8
 
 
-def run(n_e: int = 32, iters: int = 8, pipelined: bool = True):
+def run(n_e: int = 32, iters: int = 8, pipelined: bool = True,
+        pipelined_actors: int = 4):
     """Per-arch steps/s for the synchronous backend and (optionally) the
-    asynchronous pipeline on the same JAX-native env. On a single shared
-    device the pipelined column mainly measures overlap overhead (both
-    halves are compute-bound); the host-env win is measured by
-    ``fig2_time_split.run_pipelined_host``."""
+    asynchronous pipeline on the same JAX-native env — one actor, and
+    ``pipelined_actors`` replicas with the env axis split between them
+    (the actor-count scaling column). On a single shared device the
+    pipelined columns mainly measure overlap overhead (both halves are
+    compute-bound); the host-env win is measured by
+    ``fig2_time_split.run_pipelined_host`` / ``run_multi_actor_host``."""
     results = {}
     for arch in ("paac_nips", "paac_nature"):
         env = FrameStack(AtariLike(n_e), n=4)
@@ -58,6 +61,24 @@ def run(n_e: int = 32, iters: int = 8, pipelined: bool = True):
             derived += (
                 f";steps_per_s_pipelined={pres.timesteps_per_sec:.0f}"
                 f";pipelined_ratio={pres.timesteps_per_sec / max(tps, 1e-9):.2f}"
+            )
+            # actor-count scaling column: env axis split across replicas
+            env_m = FrameStack(AtariLike(n_e), n=4)
+            mrl = PipelinedRL(
+                env_m, agent, optimizer="rmsprop",
+                lr_schedule=constant(0.0224),
+                pipeline=PipelineConfig(queue_depth=pipelined_actors,
+                                        num_actors=pipelined_actors),
+            )
+            mrl.run(pipelined_actors)
+            mres = mrl.run(iters * pipelined_actors)  # same total timesteps
+            results[f"{arch}_pipelined{pipelined_actors}"] = \
+                mres.timesteps_per_sec
+            derived += (
+                f";steps_per_s_actors{pipelined_actors}="
+                f"{mres.timesteps_per_sec:.0f}"
+                f";actors{pipelined_actors}_ratio="
+                f"{mres.timesteps_per_sec / max(tps, 1e-9):.2f}"
             )
         emit(
             f"table1_throughput/{arch}/ne={n_e}",

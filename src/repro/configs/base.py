@@ -45,19 +45,28 @@ INPUT_SHAPES: Dict[str, InputShape] = {
 class PipelineConfig:
     """Knobs for the asynchronous actor/learner pipeline (``repro.pipeline``).
 
-    ``queue_depth`` bounds the trajectory queue between the actor and the
-    learner: depth d lets the actor run at most d rollouts ahead (depth 1 is
-    classic double buffering — rollout i+1 is collected while rollout i is
-    consumed). ``rho_bar`` is the V-trace/GA3C-style clip on the per-step
-    importance ratio ρ_t = π_learner(a|s)/π_behaviour(a|s) that keeps
-    queue-stale data stable; a very large value disables the correction.
-    ``lockstep`` forces the actor to wait for the learner's latest params
-    before each rollout — synchronous semantics through the pipelined code
-    path (used by equivalence tests).
+    ``num_actors`` is the number of actor replicas feeding the learner
+    (GA3C's n_actors sweep): a single env handed to ``PipelinedRL`` is split
+    along the env axis into ``num_actors`` equal shards, or a list of envs
+    gives each replica its own pool. ``queue_depth`` bounds the shared
+    trajectory queue: depth d lets the actors collectively run at most d
+    rollouts ahead (depth 1 is classic double buffering — rollout i+1 is
+    collected while rollout i is consumed). ``rho_bar`` and ``c_bar`` are the
+    V-trace clips (Espeholt et al. 2018) on the importance ratio
+    ρ_t = π_learner(a|s)/π_behaviour(a|s): ρ̄ bounds each step's TD-error
+    correction, c̄ bounds the product that propagates corrections backwards
+    through the n-step targets — what keeps queues deeper than 2 unbiased.
+    ``float("inf")`` for both disables the correction exactly (the
+    synchronous PAAC update, bit-for-bit). ``lockstep`` forces the (single)
+    actor to wait for the learner's latest params before each rollout —
+    synchronous semantics through the pipelined code path (used by
+    equivalence tests); it requires ``num_actors == 1``.
     """
 
     queue_depth: int = 2
     rho_bar: float = 1.0
+    c_bar: float = 1.0
+    num_actors: int = 1
     lockstep: bool = False
 
 

@@ -66,6 +66,23 @@ def paac_losses(logits, values, actions, returns, beta, value_coef,
     }
 
 
+def trajectory_logits_values(params, cfg, traj):
+    """One batched learning-pass forward over a time-major ``Transition``.
+
+    Returns ``(logits (N, A), values (N,))`` flattened time-major to the
+    n_e·t_max batch (index = t·n_e + e). The pipelined V-trace learner uses
+    this directly (it builds its own targets from the importance ratios).
+    """
+    T, E = traj.action.shape
+    obs = traj.obs.reshape((T * E,) + traj.obs.shape[2:])
+    if cfg.family == "cnn":
+        logits, values, _ = policy_apply(params, cfg, obs)
+    else:
+        lg, vl, _ = policy_apply(params, cfg, obs)
+        logits, values = lg[:, -1], vl[:, -1]
+    return logits, values
+
+
 def trajectory_forward(params, cfg, hp, traj, bootstrap):
     """Recompute the learning-pass forward over a time-major ``Transition``.
 
@@ -75,12 +92,7 @@ def trajectory_forward(params, cfg, hp, traj, bootstrap):
     the n_e·t_max batch the paper's equations average over.
     """
     T, E = traj.action.shape
-    obs = traj.obs.reshape((T * E,) + traj.obs.shape[2:])
-    if cfg.family == "cnn":
-        logits, values, _ = policy_apply(params, cfg, obs)
-    else:
-        lg, vl, _ = policy_apply(params, cfg, obs)
-        logits, values = lg[:, -1], vl[:, -1]
+    logits, values = trajectory_logits_values(params, cfg, traj)
     returns = n_step_returns(
         traj.reward.T, traj.done.T, bootstrap, hp.gamma
     )  # (E, T)

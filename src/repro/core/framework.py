@@ -45,11 +45,14 @@ class RunResult:
     mean_metrics: Dict[str, float]
     episode_reward_rate: List[float] = field(default_factory=list)
     timesteps_per_sec: float = 0.0
-    # pipeline accounting (0 for the synchronous backend): time the actor
-    # spent blocked on a full queue / waiting for params, and time the
-    # learner spent blocked on an empty queue.
+    # pipeline accounting (0 for the synchronous backend): time the actors
+    # spent blocked on a full queue / waiting for params (merged across
+    # replicas), and time the learner spent blocked on an empty queue.
+    # ``per_actor_idle_s[i]`` attributes the merged actor idle time to
+    # replica i; it sums to ``actor_idle_s`` exactly.
     actor_idle_s: float = 0.0
     learner_idle_s: float = 0.0
+    per_actor_idle_s: List[float] = field(default_factory=list)
 
 
 class MetricsAccumulator:
@@ -143,12 +146,14 @@ class ParallelRL:
             self._collect_host = collect_host
             self._act = make_host_act_step(agent.act_fn())
             # shared with the pipelined learner: same jitted update step,
-            # with the importance correction inert (behaviour == learner).
+            # with infinite V-trace clips — the correction compiled out
+            # exactly (behaviour == learner here), so a lock-stepped pipeline
+            # matches this driver bit-for-bit.
             from repro.pipeline.learner import make_learner_step
 
             self._update_step = jax.jit(
                 make_learner_step(agent, self.optimizer, self.lr_schedule,
-                                  rho_bar=1e9),
+                                  rho_bar=float("inf"), c_bar=float("inf")),
                 donate_argnums=(1,),
             )
             self._train_step = None

@@ -1,4 +1,4 @@
-"""Return estimation — paper Algorithm 1 lines 11–15.
+"""Return estimation — paper Algorithm 1 lines 11–15, and V-trace.
 
 ``n_step_returns`` is the exact recursion the paper batches over actors:
 
@@ -9,6 +9,13 @@ vectorized over all ``n_e`` actors — the time dimension is sequential (a
 ``lax.scan``), the actor dimension is data-parallel. This is the paper's
 insight in miniature: parallelism comes from the batch, not the recursion.
 ``repro/kernels/nstep_returns.py`` is the Pallas twin (batch-tiled VMEM).
+
+``vtrace_returns`` is the full IMPALA V-trace estimator (Espeholt et al.
+2018) the asynchronous pipeline uses for queue-stale data: the n-step
+targets with truncated-importance corrections folded into the recursion
+(ρ̄ clips each step's TD error, the c̄ product discounts how far corrections
+propagate backwards). On-policy data with ρ̄, c̄ ≥ 1 recovers
+``n_step_returns`` exactly; ``repro/kernels/vtrace.py`` is the Pallas twin.
 
 GAE (Schulman et al. 2015) is provided as a beyond-paper option.
 """
@@ -43,6 +50,59 @@ def n_step_returns(
         reverse=True,
     )
     return out.T  # (E, T)
+
+
+def vtrace_returns(
+    rewards: jnp.ndarray,  # (E, T)
+    dones: jnp.ndarray,  # (E, T) bool
+    values: jnp.ndarray,  # (E, T) — V(s_t) under the *learner* params
+    bootstrap: jnp.ndarray,  # (E,) — V(s_{T+1}) under the learner params
+    rho: jnp.ndarray,  # (E, T) — π_learner(a|s) / π_behaviour(a|s), unclipped
+    gamma: float,
+    rho_bar: float = 1.0,
+    c_bar: float = 1.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full V-trace targets (Espeholt et al. 2018, eqs. 1–4), per actor.
+
+    With ρ_t = min(ρ̄, rho_t), c_t = min(c̄, rho_t) and the terminal-aware
+    discount γ_t = γ·(1-done_t):
+
+        δ_t  = ρ_t · (r_t + γ_t·V(s_{t+1}) - V(s_t))
+        v_t  = V(s_t) + δ_t + γ_t·c_t·(v_{t+1} - V(s_{t+1}))
+        adv_t = ρ_t · (r_t + γ_t·v_{t+1} - V(s_t))
+
+    Returns ``(vs, pg_adv)``, both (E, T): the value targets and the policy-
+    gradient advantages (the ρ_t factor is already folded into ``pg_adv``).
+    On-policy behaviour (rho == 1) with ρ̄, c̄ ≥ 1 makes the recursion
+    telescope into the paper's n-step returns; c̄ → 0 collapses it to
+    one-step importance-weighted TD.
+    """
+    rewards = rewards.astype(jnp.float32)
+    values = values.astype(jnp.float32)
+    bootstrap = bootstrap.astype(jnp.float32)
+    rho = rho.astype(jnp.float32)
+    not_done = 1.0 - dones.astype(jnp.float32)
+    rho_c = jnp.minimum(rho, rho_bar)
+    c = jnp.minimum(rho, c_bar)
+    v_next = jnp.concatenate([values[:, 1:], bootstrap[:, None]], axis=1)
+    delta = rho_c * (rewards + gamma * not_done * v_next - values)
+
+    def step(carry, xs):
+        # carry: A_{t+1} = v_{t+1} - V(s_{t+1})
+        d, nd, c_t = xs
+        carry = d + gamma * nd * c_t * carry
+        return carry, carry
+
+    _, acc = jax.lax.scan(
+        step,
+        jnp.zeros_like(bootstrap),
+        (delta.T, not_done.T, c.T),
+        reverse=True,
+    )
+    vs = values + acc.T
+    vs_next = jnp.concatenate([vs[:, 1:], bootstrap[:, None]], axis=1)
+    pg_adv = rho_c * (rewards + gamma * not_done * vs_next - values)
+    return vs, pg_adv
 
 
 def gae_advantages(

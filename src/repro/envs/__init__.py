@@ -3,7 +3,8 @@ from repro.envs.atari_like import AtariLike
 from repro.envs.cartpole import CartPole
 from repro.envs.catch import Catch
 from repro.envs.gridworld import GridWorld
-from repro.envs.host_env import HostEnvPool
+from repro.envs.base import narrow_vector_env
+from repro.envs.host_env import HostEnvPool, HostEnvShard
 from repro.envs.token_env import TokenEnv
 from repro.envs.wrappers import FrameStack
 
@@ -14,6 +15,8 @@ __all__ = [
     "Catch",
     "GridWorld",
     "HostEnvPool",
+    "HostEnvShard",
+    "narrow_vector_env",
     "TokenEnv",
     "FrameStack",
 ]

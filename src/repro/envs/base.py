@@ -18,10 +18,28 @@ Contract (all functions pure, jit/vmap/shard-safe):
 from __future__ import annotations
 
 import abc
+import copy
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def narrow_vector_env(env: "VectorEnv", n_envs: int) -> "VectorEnv":
+    """A view of ``env`` batched over ``n_envs`` instances instead.
+
+    The vector API is shape-polymorphic (per-instance dynamics vmapped over
+    the leading axis), so a narrowed env is the same object graph with the
+    batch width overridden — wrappers are narrowed recursively so e.g. a
+    ``FrameStack`` delegates to an inner env of the matching width. Used by
+    the asynchronous pipeline to split one env's axis into per-actor shards.
+    """
+    narrowed = copy.copy(env)
+    narrowed.n_envs = n_envs
+    inner = getattr(env, "env", None)
+    if isinstance(inner, VectorEnv):
+        narrowed.env = narrow_vector_env(inner, n_envs)
+    return narrowed
 
 
 class VectorEnv(abc.ABC):

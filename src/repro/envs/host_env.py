@@ -15,7 +15,8 @@ jitted update) and the asynchronous pipeline (``repro.pipeline``) overlaps
 the env stall with learning; ``benchmarks/fig2_time_split.py``'s
 ``run_pipelined_host`` measures the recovered throughput. Workers release
 the GIL while stepping external processes, which is exactly what makes the
-overlap real.
+overlap real. ``HostEnvPool.shard`` splits the env axis into per-actor
+views for the multi-actor pipeline.
 """
 from __future__ import annotations
 
@@ -26,8 +27,66 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+__all__ = ["HostEnvPool", "HostEnvShard"]
 
-class HostEnvPool:
+
+class _EnvStepper:
+    """Shared master/worker stepping over ``self.envs`` (paper §3 loop).
+
+    Subclasses provide ``envs``, the output buffers ``_obs``/``_reward``/
+    ``_done`` (leading axis ``n_envs``), the worker partition ``_slices``
+    (index arrays into ``envs``), and ``_executor()``.
+    """
+
+    envs: List
+    n_envs: int
+
+    def _executor(self) -> cf.ThreadPoolExecutor:
+        raise NotImplementedError
+
+    def _submit_slices(self, fn, *args) -> None:
+        futures = [self._executor().submit(fn, idxs, *args)
+                   for idxs in self._slices]
+        for f in futures:
+            f.result()
+
+    def _reset_slice(self, idxs: np.ndarray):
+        for i in idxs:
+            self._obs[i] = self.envs[i].reset()
+
+    def reset(self) -> jnp.ndarray:
+        """Reset all envs, partitioned over the worker pool like ``step``."""
+        self._submit_slices(self._reset_slice)
+        # snapshot: jnp.asarray may zero-copy-alias an aligned host buffer,
+        # and the workers mutate self._obs in place on the next step
+        return jnp.array(self._obs)
+
+    def _work(self, idxs: np.ndarray, actions: np.ndarray):
+        for i in idxs:
+            obs, r, done, _ = self.envs[i].step(int(actions[i]))
+            if done:  # paper §5.1: restart on terminal
+                obs = self.envs[i].reset()
+            self._obs[i] = obs
+            self._reward[i] = r
+            self._done[i] = done
+
+    def step_host(self, actions) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Apply the master's batched actions; workers run in parallel.
+
+        Returns views of the shared host buffers (valid until the next call)
+        — the zero-device-op path used by the pipeline's actor threads.
+        """
+        self._submit_slices(self._work, np.asarray(actions))
+        return self._obs, self._reward, self._done
+
+    def step(self, actions) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """``step_host`` with outputs staged onto the device (snapshots —
+        never aliases of the mutable shared buffers)."""
+        obs, reward, done = self.step_host(actions)
+        return jnp.array(obs), jnp.array(reward), jnp.array(done)
+
+
+class HostEnvPool(_EnvStepper):
     """Paper §3: n_e external env instances stepped by n_w workers.
 
     env_fns: callables creating gym-style envs with reset() -> obs and
@@ -49,45 +108,26 @@ class HostEnvPool:
         self._slices = np.array_split(np.arange(self.n_envs), self.n_workers)
         self._closed = False
 
-    def _reset_slice(self, idxs: np.ndarray):
-        for i in idxs:
-            self._obs[i] = self.envs[i].reset()
+    def _executor(self) -> cf.ThreadPoolExecutor:
+        return self._pool
 
-    def reset(self) -> jnp.ndarray:
-        """Reset all envs, partitioned over the worker pool like ``step``."""
-        futures = [self._pool.submit(self._reset_slice, idxs)
-                   for idxs in self._slices]
-        for f in futures:
-            f.result()
-        return jnp.asarray(self._obs)
+    def shard(self, n: int) -> List["HostEnvShard"]:
+        """Split the env axis into ``n`` equal per-actor shards.
 
-    def _work(self, idxs: np.ndarray, actions: np.ndarray):
-        for i in idxs:
-            obs, r, done, _ = self.envs[i].step(int(actions[i]))
-            if done:  # paper §5.1: restart on terminal
-                obs = self.envs[i].reset()
-            self._obs[i] = obs
-            self._reward[i] = r
-            self._done[i] = done
-
-    def step_host(self, actions) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Apply the master's batched actions; workers run in parallel.
-
-        Returns views of the shared host buffers (valid until the next call)
-        — the zero-device-op path used by the pipeline's actor thread.
+        Each shard steps only its slice of the envs, with its own output
+        buffers, on the *parent's* worker pool — total host concurrency stays
+        bounded by ``n_workers`` no matter how many actors drive shards
+        concurrently. The parent still owns the envs and the executor:
+        close the parent, not the shards.
         """
-        actions = np.asarray(actions)
-        futures = [
-            self._pool.submit(self._work, idxs, actions) for idxs in self._slices
-        ]
-        for f in futures:
-            f.result()
-        return self._obs, self._reward, self._done
-
-    def step(self, actions) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        """``step_host`` with outputs staged onto the device."""
-        obs, reward, done = self.step_host(actions)
-        return jnp.asarray(obs), jnp.asarray(reward), jnp.asarray(done)
+        if self._closed:
+            raise RuntimeError("shard() on a closed HostEnvPool")
+        if n < 1 or self.n_envs % n:
+            raise ValueError(
+                f"cannot shard {self.n_envs} envs into {n} equal actor pools"
+            )
+        size = self.n_envs // n
+        return [HostEnvShard(self, i * size, (i + 1) * size) for i in range(n)]
 
     def close(self):
         """Shut the worker pool down and close all envs. Idempotent."""
@@ -104,3 +144,30 @@ class HostEnvPool:
 
     def __exit__(self, exc_type, exc, tb) -> None:
         self.close()
+
+
+class HostEnvShard(_EnvStepper):
+    """A per-actor slice [lo, hi) of a parent ``HostEnvPool``'s env axis.
+
+    Same stepping API as the parent (``reset`` / ``step_host`` / ``step``)
+    over ``(hi - lo)`` envs, sharing the parent's worker executor so that N
+    shards stepped from N actor threads still respect the pool's ``n_w``
+    worker bound (the paper's §3 resource model, divided among replicas).
+    """
+
+    def __init__(self, parent: HostEnvPool, lo: int, hi: int):
+        self._parent = parent
+        self.envs = parent.envs[lo:hi]
+        self.n_envs = hi - lo
+        self.obs_shape = parent.obs_shape
+        self._obs = np.zeros((self.n_envs,) + self.obs_shape,
+                             parent._obs.dtype)
+        self._reward = np.zeros((self.n_envs,), np.float32)
+        self._done = np.zeros((self.n_envs,), bool)
+        # proportional share of the parent's workers (at least one)
+        n_w = max(1, (parent.n_workers * self.n_envs) // parent.n_envs)
+        self._slices = np.array_split(np.arange(self.n_envs),
+                                      min(n_w, self.n_envs))
+
+    def _executor(self) -> cf.ThreadPoolExecutor:
+        return self._parent._pool

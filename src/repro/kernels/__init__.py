@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
 * ``nstep_returns``     — Algorithm 1's batched return recursion
+* ``vtrace_returns``    — full V-trace targets for the asynchronous pipeline
 * ``flash_attention``   — blocked online-softmax prefill attention
 * ``decode_attention``  — flash-decoding against long KV caches
 * ``ssd_scan``          — fused chunked Mamba2/SSD scan
@@ -13,6 +14,13 @@ from repro.kernels.ops import (
     flash_attention,
     nstep_returns,
     ssd_scan,
+    vtrace_returns,
 )
 
-__all__ = ["nstep_returns", "flash_attention", "decode_attention", "ssd_scan"]
+__all__ = [
+    "nstep_returns",
+    "vtrace_returns",
+    "flash_attention",
+    "decode_attention",
+    "ssd_scan",
+]

@@ -17,6 +17,7 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.mla_decode import mla_decode_attention_pallas
 from repro.kernels.nstep_returns import nstep_returns_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.vtrace import vtrace_returns_pallas
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -26,6 +27,17 @@ def nstep_returns(rewards, dones, bootstrap, gamma: float, backend: str = "palla
     if backend == "ref":
         return _ref.nstep_returns_ref(rewards, dones, bootstrap, gamma)
     return nstep_returns_pallas(rewards, dones, bootstrap, gamma, interpret=_INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("gamma", "rho_bar", "c_bar", "backend"))
+def vtrace_returns(rewards, dones, values, bootstrap, rho, gamma: float,
+                   rho_bar: float = 1.0, c_bar: float = 1.0,
+                   backend: str = "pallas"):
+    if backend == "ref":
+        return _ref.vtrace_returns_ref(rewards, dones, values, bootstrap, rho,
+                                       gamma, rho_bar, c_bar)
+    return vtrace_returns_pallas(rewards, dones, values, bootstrap, rho, gamma,
+                                 rho_bar, c_bar, interpret=_INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "backend"))

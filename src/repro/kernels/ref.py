@@ -24,6 +24,32 @@ def nstep_returns_ref(rewards, dones, bootstrap, gamma: float):
     return jnp.stack(out[::-1], axis=1)
 
 
+def vtrace_returns_ref(rewards, dones, values, bootstrap, rho, gamma: float,
+                       rho_bar: float = 1.0, c_bar: float = 1.0):
+    """V-trace (Espeholt et al. 2018) by the definition — python time loop.
+
+    rewards/dones/values/rho: (E, T); bootstrap: (E,). Returns (vs, pg_adv).
+    """
+    E, T = rewards.shape
+    r = rewards.astype(jnp.float32)
+    nd = 1.0 - dones.astype(jnp.float32)
+    v = values.astype(jnp.float32)
+    b = bootstrap.astype(jnp.float32)
+    rc = jnp.minimum(rho.astype(jnp.float32), rho_bar)
+    c = jnp.minimum(rho.astype(jnp.float32), c_bar)
+    v_next = jnp.concatenate([v[:, 1:], b[:, None]], axis=1)
+    delta = rc * (r + gamma * nd * v_next - v)
+    acc = jnp.zeros((E,), jnp.float32)
+    out = []
+    for t in range(T - 1, -1, -1):
+        acc = delta[:, t] + gamma * nd[:, t] * c[:, t] * acc
+        out.append(v[:, t] + acc)
+    vs = jnp.stack(out[::-1], axis=1)
+    vs_next = jnp.concatenate([vs[:, 1:], b[:, None]], axis=1)
+    pg_adv = rc * (r + gamma * nd * vs_next - v)
+    return vs, pg_adv
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
     """q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D). Returns (B, Sq, H, D)."""
     B, Sq, H, D = q.shape

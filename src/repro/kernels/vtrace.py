@@ -1,0 +1,105 @@
+"""Pallas kernel: batched V-trace targets (Espeholt et al. 2018, eqs. 1–4).
+
+Like ``nstep_returns``, the recursion is sequential in time and data-parallel
+over actors; the asynchronous pipeline's learner folds truncated-importance
+corrections into the n-step recursion:
+
+    δ_t = min(ρ̄, rho_t)·(r_t + γ_t·V_{t+1} - V_t)     γ_t = γ·(1-done_t)
+    A_t = δ_t + γ_t·min(c̄, rho_t)·A_{t+1}             A_T = 0
+    v_t = V_t + A_t
+    pg_adv_t = min(ρ̄, rho_t)·(r_t + γ_t·v_{t+1} - V_t)
+
+The kernel tiles the actor dimension into VMEM blocks (grid over E/block_e)
+and walks t_max backwards inside the block, producing both the value targets
+and the policy-gradient advantages in one HBM round-trip per tile.
+
+VMEM budget: (7·block_e·T + 2·block_e) fp32 — block_e=256, T=4096 → 29 MB;
+use block_e=64 for long horizons.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, nd_ref, v_ref, vnext_ref, rho_ref, boot_ref,
+            vs_ref, adv_ref, *, gamma: float, rho_bar: float, c_bar: float,
+            T: int):
+    zero = jnp.zeros_like(boot_ref[...].astype(jnp.float32))  # A_T = 0
+    vs_next0 = boot_ref[...].astype(jnp.float32)  # v_T = V(s_{T+1})
+
+    def body(i, carry):
+        acc, vs_next = carry  # A_{t+1}, v_{t+1}
+        t = T - 1 - i
+        r_t = pl.load(r_ref, (slice(None), pl.dslice(t, 1)))[:, 0]
+        nd_t = pl.load(nd_ref, (slice(None), pl.dslice(t, 1)))[:, 0]
+        v_t = pl.load(v_ref, (slice(None), pl.dslice(t, 1)))[:, 0]
+        vn_t = pl.load(vnext_ref, (slice(None), pl.dslice(t, 1)))[:, 0]
+        rho_t = pl.load(rho_ref, (slice(None), pl.dslice(t, 1)))[:, 0]
+        rho_t = rho_t.astype(jnp.float32)
+        disc = gamma * nd_t.astype(jnp.float32)
+        rc = jnp.minimum(rho_t, rho_bar)
+        c = jnp.minimum(rho_t, c_bar)
+        delta = rc * (r_t.astype(jnp.float32) + disc * vn_t.astype(jnp.float32)
+                      - v_t.astype(jnp.float32))
+        acc = delta + disc * c * acc
+        vs_t = v_t.astype(jnp.float32) + acc
+        adv_t = rc * (r_t.astype(jnp.float32) + disc * vs_next
+                      - v_t.astype(jnp.float32))
+        pl.store(vs_ref, (slice(None), pl.dslice(t, 1)), vs_t[:, None])
+        pl.store(adv_ref, (slice(None), pl.dslice(t, 1)), adv_t[:, None])
+        return acc, vs_t
+
+    jax.lax.fori_loop(0, T, body, (zero, vs_next0))
+
+
+def vtrace_returns_pallas(
+    rewards: jnp.ndarray,  # (E, T)
+    dones: jnp.ndarray,  # (E, T) bool
+    values: jnp.ndarray,  # (E, T)
+    bootstrap: jnp.ndarray,  # (E,)
+    rho: jnp.ndarray,  # (E, T) unclipped importance ratios
+    gamma: float,
+    rho_bar: float = 1.0,
+    c_bar: float = 1.0,
+    *,
+    block_e: int = 256,
+    interpret: bool = True,
+):
+    """Returns ``(vs, pg_adv)``, both (E, T) fp32 — the Pallas twin of
+    ``repro.core.returns.vtrace_returns``."""
+    E, T = rewards.shape
+    block_e = min(block_e, E)
+    pad = (-E) % block_e
+    r = rewards.astype(jnp.float32)
+    nd = 1.0 - dones.astype(jnp.float32)
+    v = values.astype(jnp.float32)
+    b = bootstrap.astype(jnp.float32)
+    w = rho.astype(jnp.float32)
+    vn = jnp.concatenate([v[:, 1:], b[:, None]], axis=1)
+    if pad:
+        r = jnp.pad(r, ((0, pad), (0, 0)))
+        nd = jnp.pad(nd, ((0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+        vn = jnp.pad(vn, ((0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad),))
+    grid = ((E + pad) // block_e,)
+    mat = pl.BlockSpec((block_e, T), lambda e: (e, 0))
+    vs, adv = pl.pallas_call(
+        functools.partial(_kernel, gamma=gamma, rho_bar=rho_bar, c_bar=c_bar,
+                          T=T),
+        grid=grid,
+        in_specs=[mat, mat, mat, mat, mat,
+                  pl.BlockSpec((block_e,), lambda e: (e,))],
+        out_specs=(mat, mat),
+        out_shape=(
+            jax.ShapeDtypeStruct((E + pad, T), jnp.float32),
+            jax.ShapeDtypeStruct((E + pad, T), jnp.float32),
+        ),
+        interpret=interpret,
+    )(r, nd, v, vn, w, b)
+    return vs[:E], adv[:E]

@@ -11,8 +11,9 @@ Two modes:
 
 ``--pipeline`` swaps the synchronous ``ParallelRL`` backend for the
 asynchronous actor/learner pipeline (``repro.pipeline.PipelinedRL``):
-rollout i+1 is collected while the learner consumes rollout i, with
-``--queue-depth`` bounding staleness and ``--rho-bar`` clipping the
+``--num-actors`` replicas (the env axis split between them) collect
+rollouts while the learner consumes earlier ones, with ``--queue-depth``
+bounding staleness and ``--rho-bar``/``--c-bar`` the V-trace clips on the
 off-policy importance correction.
 
 Examples:
@@ -20,6 +21,8 @@ Examples:
         --iterations 20
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
         --iterations 20 --pipeline --queue-depth 2 --rho-bar 1.0
+    PYTHONPATH=src python -m repro.launch.train --arch paac_vector \
+        --iterations 40 --pipeline --num-actors 4 --n-envs 16
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --reduced \
         --mode synthetic --iterations 5
 """
@@ -51,6 +54,8 @@ def run_rl(args):
     env = TokenEnv(args.n_envs, vocab=min(cfg.vocab_size, 64), ctx=args.ctx,
                    k=2, horizon=64)
     cfg = cfg.replace(num_actions=env.vocab)
+    if cfg.family == "cnn":  # vector/cnn policies act on the raw observation
+        cfg = cfg.replace(obs_shape=env.obs_shape)
     agent = PAACAgent(cfg, PAACConfig(t_max=args.t_max, entropy_beta=0.01))
     if args.pipeline:
         from repro.configs import PipelineConfig
@@ -59,7 +64,8 @@ def run_rl(args):
         rl = PipelinedRL(
             env, agent, lr_schedule=constant(args.lr), seed=args.seed,
             pipeline=PipelineConfig(queue_depth=args.queue_depth,
-                                    rho_bar=args.rho_bar),
+                                    rho_bar=args.rho_bar, c_bar=args.c_bar,
+                                    num_actors=args.num_actors),
         )
     else:
         rl = ParallelRL(env, agent, lr_schedule=constant(args.lr),
@@ -128,6 +134,10 @@ def main():
                     help="trajectory queue depth (max rollouts in flight)")
     ap.add_argument("--rho-bar", type=float, default=1.0,
                     help="importance-weight clip for stale rollouts (V-trace ρ̄)")
+    ap.add_argument("--c-bar", type=float, default=1.0,
+                    help="V-trace c̄: clip on the backward-propagation product")
+    ap.add_argument("--num-actors", type=int, default=1,
+                    help="actor replicas feeding the learner (env axis split)")
     args = ap.parse_args()
     if args.mode == "rl":
         run_rl(args)

@@ -1,30 +1,62 @@
-"""Asynchronous actor/learner pipeline — the beyond-paper throughput lever.
+"""Asynchronous multi-actor/learner pipeline — the beyond-paper throughput lever.
 
 The paper's framework (``repro.core``) is fully synchronous: acting,
 stepping and learning serialize into one program per iteration, so the
 accelerator idles whenever the host is on the critical path (Fig. 2's
 "50% env time" regime). Following GA3C (Babaeizadeh et al., 2017) and
-Accelerated Methods (Stooke & Abbeel, 2018), this subsystem decouples the
-two halves behind a bounded queue:
+IMPALA (Espeholt et al., 2018), this subsystem decouples the two halves
+behind a bounded queue, with N acting replicas feeding one learner.
 
-* ``TrajectoryQueue`` — bounded, never-dropping rollout queue with
-  actor/learner idle-time accounting (``repro.pipeline.queue``),
+N-actor dataflow::
+
+    actor 0 ──collect(env shard 0)──put──▶ ┌─────────────────┐
+    actor 1 ──collect(env shard 1)──put──▶ │ TrajectoryQueue │──get──▶ learner
+      ...                                  │   (depth d)     │           │
+    actor N-1 ──collect(shard N-1)──put──▶ └─────────────────┘           │
+        ▲                                                                │
+        └───────────── ParamSlot.read ◀── ParamSlot.publish ◀────────────┘
+
+Each replica owns a private slice of the environments — a single env's axis
+is split N ways (``HostEnvPool.shard`` / ``narrow_vector_env``), or a list
+of envs gives each replica its own full pool (GA3C's n_actors sweep). Every
+queue payload (``Rollout``) is tagged ``(actor_id, seq, behavior_version)``
+so the learner can attribute idle time and staleness per replica, and so the
+tests can prove no trajectory is ever dropped or learned twice.
+
+Staleness model: the learner stamps params with a monotone version (one per
+update) published through the shared ``ParamSlot``; each actor snapshots the
+newest version before collecting, and a rollout consumed at learner version
+v carries ``staleness = v - behavior_version``. The queue depth bounds the
+number of rollouts in flight *collectively* (backpressure blocks producers;
+nothing is dropped), so staleness ≤ depth + num_actors in steady state. The
+learner compensates with full V-trace (``rho_bar``/``c_bar`` clips): ρ̄
+bounds each step's importance-weighted TD error and the c̄ product bounds
+backward propagation through the n-step targets, keeping deep queues
+unbiased; infinite clips compile the correction out exactly (the
+synchronous PAAC update, pinned bitwise by the lockstep tests).
+
+Modules:
+
+* ``TrajectoryQueue`` — bounded, never-dropping multi-producer rollout queue
+  with actor/learner idle-time accounting and prompt close-on-abort
+  (``repro.pipeline.queue``),
 * ``ActorThread`` / ``ParamSlot`` / ``collect_host`` — double-buffered
   rollout collection for JAX-native envs and ``HostEnvPool``
   (``repro.pipeline.actor``),
-* ``make_learner_step`` — PAAC update with truncated-importance staleness
-  correction à la V-trace (``repro.pipeline.learner``),
+* ``make_learner_step`` — PAAC update with full V-trace staleness
+  correction (``repro.pipeline.learner``),
 * ``PipelinedRL`` — orchestrator mirroring ``ParallelRL``'s API
   (``repro.pipeline.orchestrator``).
 
-Configure via ``repro.configs.PipelineConfig`` (queue depth, ρ̄, lockstep);
-select from the launcher with ``repro.launch.train --pipeline``.
+Configure via ``repro.configs.PipelineConfig`` (num_actors, queue depth,
+ρ̄/c̄, lockstep); select from the launcher with ``repro.launch.train
+--pipeline --num-actors N``.
 """
 from repro.configs.base import PipelineConfig
 from repro.pipeline.actor import ActorThread, ParamSlot, Rollout, collect_host
 from repro.pipeline.learner import make_learner_step
 from repro.pipeline.orchestrator import PipelinedRL
-from repro.pipeline.queue import CLOSED, TrajectoryQueue
+from repro.pipeline.queue import CLOSED, QueueClosed, TrajectoryQueue
 
 __all__ = [
     "ActorThread",
@@ -32,6 +64,7 @@ __all__ = [
     "ParamSlot",
     "PipelineConfig",
     "PipelinedRL",
+    "QueueClosed",
     "Rollout",
     "TrajectoryQueue",
     "collect_host",

@@ -20,6 +20,7 @@ params version (staleness = learner_version − behaviour_version).
 from __future__ import annotations
 
 import threading
+import time
 from queue import Full
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
@@ -28,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rollout import Transition, make_collect_fn  # noqa: F401
+from repro.pipeline.queue import QueueClosed
 
 __all__ = [
     "ParamSlot",
@@ -75,11 +77,18 @@ class ParamSlot:
 
 
 class Rollout(NamedTuple):
-    """Queue payload: one collected rollout plus its provenance."""
+    """Queue payload: one collected rollout plus its provenance.
+
+    ``actor_id``/``seq`` tag which replica produced the rollout and where it
+    sits in that replica's stream — the learner uses them to attribute
+    staleness and idle time per actor, and the pipeline tests to prove every
+    ``(actor_id, seq)`` is learned from exactly once."""
 
     traj: Transition  # time-major (T, E, ...)
     last_obs: jnp.ndarray  # (E, *obs_shape) — bootstrap observation
     behavior_version: int  # params version the actor acted with
+    actor_id: int = 0  # which actor replica collected it
+    seq: int = 0  # per-actor rollout sequence number
 
 
 def make_host_act_step(act_fn: Callable) -> Callable:
@@ -138,57 +147,80 @@ def collect_host(act_step: Callable, pool, params, obs, key, t_max: int):
 
 
 class ActorThread(threading.Thread):
-    """Collects ``iterations`` rollouts and feeds the trajectory queue.
+    """One actor replica: collects ``iterations`` rollouts and feeds the
+    shared trajectory queue.
 
     ``collect(params, key) -> (key, traj, last_obs)`` encapsulates either
     collection path with env state captured in the closure; the thread owns
     the acting RNG key. In ``lockstep`` mode the actor waits until the
     learner has published version i before collecting rollout i (so data is
     never stale); otherwise it reads the freshest available params and runs
-    ahead up to the queue depth.
+    ahead up to the queue depth (shared across all replicas).
+
+    Shutdown protocol: a replica that finishes its quota (or is ``stop()``ed,
+    or finds the queue closed under it) checks out with ``producer_done()``
+    — the stream closes only after the *last* replica. A replica that dies
+    records the exception and hard-``close()``s the queue so the learner and
+    its siblings unwind promptly instead of deadlocking.
     """
 
     def __init__(self, collect: Callable, queue, slot: ParamSlot, key,
-                 iterations: int, lockstep: bool = False):
-        super().__init__(name="pipeline-actor", daemon=True)
+                 iterations: int, lockstep: bool = False, actor_id: int = 0):
+        super().__init__(name=f"pipeline-actor-{actor_id}", daemon=True)
         self._collect = collect
         self._queue = queue
         self._slot = slot
         self._key = key
         self._iterations = iterations
         self._lockstep = lockstep
+        self.actor_id = actor_id
         self._stop_requested = threading.Event()
         self.wait_s = 0.0  # time blocked waiting for params (lockstep)
+        self.put_wait_s = 0.0  # time blocked in queue.put (backpressure)
         self.error: Optional[BaseException] = None
 
     def stop(self) -> None:
         """Ask the actor to exit at its next blocking point (learner died)."""
         self._stop_requested.set()
 
-    def run(self) -> None:
-        import time as _time
+    def _put(self, rollout: Rollout) -> bool:
+        """Bounded put, interruptible by stop()/close(). Returns False when
+        the actor should exit instead of producing more."""
+        t0 = time.perf_counter()
+        try:
+            while True:
+                try:
+                    self._queue.put(rollout, timeout=0.1)
+                    return True
+                except Full:
+                    if self._stop_requested.is_set():
+                        return False
+                except QueueClosed:
+                    return False  # stream aborted under us — not our error
+        finally:
+            self.put_wait_s += time.perf_counter() - t0
 
+    def run(self) -> None:
         try:
             for i in range(self._iterations):
                 if self._lockstep:
-                    t0 = _time.perf_counter()
+                    t0 = time.perf_counter()
                     while not self._slot.wait_for(i, timeout=0.1):
                         if self._stop_requested.is_set():
                             return
-                    self.wait_s += _time.perf_counter() - t0
+                    self.wait_s += time.perf_counter() - t0
                 if self._stop_requested.is_set():
                     return
                 params, version = self._slot.read()
                 self._key, traj, last_obs = self._collect(params, self._key)
-                while True:  # bounded put, interruptible by stop()
-                    try:
-                        self._queue.put(Rollout(traj, last_obs, version),
-                                        timeout=0.1)
-                        break
-                    except Full:
-                        if self._stop_requested.is_set():
-                            return
+                if not self._put(
+                    Rollout(traj, last_obs, version, self.actor_id, i)
+                ):
+                    return
         except BaseException as e:  # surfaced by the learner loop
             self.error = e
         finally:
-            self._queue.close()
+            if self.error is not None:
+                self._queue.close()  # abort: wake learner + sibling actors
+            else:
+                self._queue.producer_done()

@@ -1,57 +1,115 @@
-"""The pipeline's learning half: importance-corrected PAAC update.
+"""The pipeline's learning half: V-trace-corrected PAAC update.
 
-The learner consumes rollouts that may be up to ``queue_depth`` updates
-stale. Following GA3C/V-trace, each step is reweighted by the truncated
-importance ratio
+The learner consumes rollouts that may be several updates stale (up to
+``queue_depth``, from any of the ``num_actors`` replicas). Following IMPALA
+(Espeholt et al., 2018), the n-step targets are replaced by full V-trace:
 
     ρ_t = min(ρ̄, π_learner(a_t|s_t) / π_behaviour(a_t|s_t))
+    c_t = min(c̄, π_learner(a_t|s_t) / π_behaviour(a_t|s_t))
+    δ_t = ρ_t (r_t + γ_t V(s_{t+1}) − V(s_t))
+    v_t = V(s_t) + δ_t + γ_t c_t (v_{t+1} − V(s_{t+1}))
 
-where the behaviour log-prob was recorded at acting time (``Transition.logp``)
-and the learner policy is the recompute under current params. ρ̄ → ∞
-disables the correction, recovering the synchronous PAAC loss exactly when
-the data is on-policy — the equivalence the pipeline tests pin down.
+with the behaviour log-prob recorded at acting time (``Transition.logp``),
+values recomputed under current params, and the policy gradient driven by
+ρ_t (r_t + γ_t v_{t+1} − V(s_t)). The ρ̄ clip bounds each step's correction
+(PR-1's per-step clip); the c̄ *product* additionally discounts how far a
+correction propagates backwards, which is what keeps queues deeper than 2
+unbiased.
+
+ρ̄ = c̄ = ∞ (literally ``float("inf")``) is the synchronous limit: the
+correction is compiled out and the step computes the plain PAAC loss on
+n-step returns — bit-for-bit the synchronous update, which is how the
+lockstep equivalence tests pin the pipeline to ``ParallelRL``.
 
 ``make_learner_step`` returns a jittable
 ``(params, opt_state, traj, last_obs, step) -> (params, opt_state, metrics)``
 — the learning half of ``PAACAgent.make_train_step`` with the rollout
 replaced by a queue payload. The synchronous ``HostEnvPool`` driver in
-``repro.core.framework`` reuses the same step (with ρ̄ huge), so sync and
-pipelined backends differ only in overlap, not in math.
+``repro.core.framework`` reuses the same step (with infinite clips), so sync
+and pipelined backends differ only in overlap, not in math.
 """
 from __future__ import annotations
 
+import math
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.agents.paac import paac_losses, trajectory_forward
+from repro.core.agents.paac import (
+    paac_losses,
+    trajectory_forward,
+    trajectory_logits_values,
+)
+from repro.core.returns import vtrace_returns
 
 
-def make_learner_step(agent, optimizer, lr_schedule,
-                      rho_bar: float = 1.0) -> Callable:
+def make_learner_step(agent, optimizer, lr_schedule, rho_bar: float = 1.0,
+                      c_bar: float = 1.0) -> Callable:
     """Build the pipelined learner's jittable update step for a PAAC agent."""
     cfg, hp = agent.cfg, agent.hp
     act = agent.act_fn()
+    # the clips are static: the infinite-clip (synchronous) limit is resolved
+    # at trace time so it shares the sync path's computation graph exactly
+    exact_sync = math.isinf(rho_bar) and math.isinf(c_bar)
 
-    def loss_fn(params, traj, bootstrap):
-        logits, values, actions, returns = trajectory_forward(
-            params, cfg, hp, traj, bootstrap
-        )
+    def _rho(logits, actions, behaviour_logp):
         logp_now = jnp.take_along_axis(
             jax.nn.log_softmax(logits), actions[:, None], axis=1
         )[:, 0]
         rho = jnp.exp(
-            logp_now - traj.logp.reshape(logp_now.shape).astype(jnp.float32)
+            logp_now - behaviour_logp.reshape(logp_now.shape).astype(jnp.float32)
         )
-        rho = jax.lax.stop_gradient(rho)
-        weights = jnp.minimum(rho, rho_bar)
+        return logp_now, jax.lax.stop_gradient(rho)
+
+    def loss_sync(params, traj, bootstrap):
+        # ρ̄ = c̄ = ∞: correction disabled — the paper's on-policy loss,
+        # identical graph to the synchronous train step (bitwise lockstep)
+        logits, values, actions, returns = trajectory_forward(
+            params, cfg, hp, traj, bootstrap
+        )
+        _, rho = _rho(logits, actions, traj.logp)
         total, metrics = paac_losses(
-            logits, values, actions, returns, hp.entropy_beta, hp.value_coef,
-            weights=weights,
+            logits, values, actions, returns, hp.entropy_beta, hp.value_coef
         )
+        return total, metrics, rho
+
+    def loss_vtrace(params, traj, bootstrap):
+        T, E = traj.action.shape
+        logits, values = trajectory_logits_values(params, cfg, traj)
+        actions = traj.action.reshape(T * E)
+        logp_now, rho = _rho(logits, actions, traj.logp)
+        # V-trace runs on (E, T) matrices; the flattened batch is time-major
+        vs, pg_adv = vtrace_returns(
+            traj.reward.T,
+            traj.done.T,
+            jax.lax.stop_gradient(values).reshape(T, E).T,
+            jax.lax.stop_gradient(bootstrap),
+            rho.reshape(T, E).T,
+            hp.gamma,
+            rho_bar,
+            c_bar,
+        )
+        vs = jax.lax.stop_gradient(vs.T.reshape(T * E))
+        pg_adv = jax.lax.stop_gradient(pg_adv.T.reshape(T * E))
+        logp_all = jax.nn.log_softmax(logits)
+        policy_loss = -jnp.mean(pg_adv * logp_now)
+        entropy = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1))
+        value_loss = jnp.mean(jnp.square(vs - values))
+        total = policy_loss - hp.entropy_beta * entropy \
+            + hp.value_coef * value_loss
+        return total, {
+            "policy_loss": policy_loss,
+            "value_loss": value_loss,
+            "entropy": entropy,
+        }, rho
+
+    def loss_fn(params, traj, bootstrap):
+        fn = loss_sync if exact_sync else loss_vtrace
+        total, metrics, rho = fn(params, traj, bootstrap)
         metrics["rho_mean"] = jnp.mean(rho)
         metrics["rho_clip_frac"] = jnp.mean((rho > rho_bar).astype(jnp.float32))
+        metrics["c_clip_frac"] = jnp.mean((rho > c_bar).astype(jnp.float32))
         return total, metrics
 
     def learner_step(params, opt_state, traj, last_obs, step):

@@ -1,27 +1,32 @@
-"""``PipelinedRL`` — the asynchronous actor/learner backend.
+"""``PipelinedRL`` — the asynchronous multi-actor/learner backend.
 
 Drop-in alternative to ``repro.core.ParallelRL`` (same constructor shape,
-same ``run(iterations) -> RunResult``) that splits Algorithm 1 across two
-threads joined by a bounded ``TrajectoryQueue``:
+same ``run(iterations) -> RunResult``) that splits Algorithm 1 across
+``num_actors`` actor threads and one learner thread joined by a shared
+bounded ``TrajectoryQueue``:
 
-    actor thread:   read latest params → collect rollout → queue.put
-    learner thread: queue.get → importance-corrected update → publish params
+    actor thread i: read latest params → collect rollout → queue.put
+    learner thread: queue.get → V-trace-corrected update → publish params
 
-With queue depth d the actor runs at most d rollouts ahead (depth 1 =
-double buffering: rollout i+1 is collected while the learner consumes
-rollout i). Staleness is bounded by the depth and corrected by the
-learner's truncated importance weights (``PipelineConfig.rho_bar``); in
-``lockstep`` mode the actor always waits for fresh params and the pipeline
-reproduces the synchronous trajectory stream exactly.
+Each actor replica owns a private slice of the environments: a single env is
+split along the env axis (``HostEnvPool.shard`` for external pools,
+``narrow_vector_env`` for JAX-native envs), or a list of envs gives each
+replica its own full pool (GA3C's n_actors sweep — more emulators hide more
+env latency). With queue depth d the actors collectively run at most d
+rollouts ahead; staleness is bounded by the depth and corrected by the
+learner's full V-trace targets (``PipelineConfig.rho_bar`` / ``c_bar``). In
+``lockstep`` mode (single actor) the actor always waits for fresh params and
+the pipeline reproduces the synchronous trajectory stream exactly.
 
 The win is wall-clock overlap: on the ``HostEnvPool`` path the env workers
-hold no GIL while stepping, so host env time and the jitted update run
-concurrently instead of serially — the paper's Fig. 2 "50% env time" recovered.
+hold no GIL while stepping, so N actors' env latencies, their jitted acting
+steps, and the learner's jitted update all run concurrently — the paper's
+Fig. 2 "50% env time" recovered, and scaled past what one actor can hide.
 """
 from __future__ import annotations
 
 import queue as _stdlib_queue
-from typing import Callable, Optional
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +34,8 @@ import jax.numpy as jnp
 from repro.configs.base import PipelineConfig
 from repro.core.framework import MetricsAccumulator, RunResult, init_rl_common
 from repro.core.rollout import make_collect_fn
-from repro.envs.host_env import HostEnvPool
+from repro.envs.base import narrow_vector_env
+from repro.envs.host_env import HostEnvPool, HostEnvShard
 from repro.pipeline.actor import ActorThread, ParamSlot, Rollout, collect_host
 from repro.pipeline.learner import make_learner_step
 from repro.pipeline.queue import CLOSED, TrajectoryQueue
@@ -39,7 +45,7 @@ log = get_logger("pipeline")
 
 
 class PipelinedRL:
-    """Asynchronous actor/learner pipeline over the PAAC framework."""
+    """Asynchronous multi-actor/learner pipeline over the PAAC framework."""
 
     def __init__(
         self,
@@ -58,52 +64,106 @@ class PipelinedRL:
         if type(agent) is not PAACAgent:
             raise NotImplementedError(
                 f"PipelinedRL drives plain PAACAgent (got {type(agent).__name__}); "
-                "its learner step hard-codes the importance-weighted PAAC loss"
+                "its learner step hard-codes the V-trace PAAC loss"
             )
+        n_actors = pipeline.num_actors
+        if n_actors < 1:
+            raise ValueError(f"num_actors must be >= 1, got {n_actors}")
+        if pipeline.lockstep and n_actors > 1:
+            raise ValueError(
+                "lockstep (synchronous semantics) requires num_actors == 1"
+            )
+        if isinstance(env, (list, tuple)):
+            if len(env) != n_actors:
+                raise ValueError(
+                    f"got {len(env)} per-actor envs for num_actors={n_actors}"
+                )
+            per_actor_envs: Optional[List] = list(env)
+            env = per_actor_envs[0]
+        else:
+            per_actor_envs = None
         self.env = env
         self.agent = agent
         self.pipeline = pipeline
         # shared with ParallelRL — identical RNG layout so a lock-stepped
-        # pipeline reproduces the synchronous run bit-for-bit.
+        # single-actor pipeline reproduces the synchronous run bit-for-bit.
         (self.optimizer, self.lr_schedule, self.key, k_env, self.params,
          self.opt_state) = init_rl_common(env, agent, optimizer, lr_schedule,
                                           seed)
 
-        self._host = isinstance(env, HostEnvPool)
+        self._host = hasattr(env, "step_host")
         act = agent.act_fn()
+        self._actor_envs, self._actor_obs, self._actor_env_state = \
+            self._split_envs(env, per_actor_envs, n_actors, k_env)
         if self._host:
             from repro.pipeline.actor import make_host_act_step
 
-            self.env_state = None
-            self.obs = env.reset()
             self._act = make_host_act_step(act)
             self._collect_jit = None
         else:
-            self.env_state = env.reset(k_env)
-            self.obs = env.observe(self.env_state)
             self._act = None
-            self._collect_jit = jax.jit(make_collect_fn(act, env, agent.hp.t_max))
+            # all replicas share one jitted collector (identical shard shapes)
+            self._collect_jit = jax.jit(
+                make_collect_fn(act, self._actor_envs[0], agent.hp.t_max)
+            )
 
         # donate the optimizer state (learner-private). Params must NOT be
-        # donated: the actor thread still reads the behaviour snapshot.
+        # donated: the actor threads still read the behaviour snapshot.
         self._update_step = jax.jit(
             make_learner_step(agent, self.optimizer, self.lr_schedule,
-                              rho_bar=pipeline.rho_bar),
+                              rho_bar=pipeline.rho_bar, c_bar=pipeline.c_bar),
             donate_argnums=(1,),
         )
         self.total_steps = 0
-        self._steps_per_iter = env.n_envs * agent.hp.t_max
+        # one learned rollout = one actor shard's n_envs·t_max timesteps
+        self._steps_per_iter = self._actor_envs[0].n_envs * agent.hp.t_max
+        # (actor_id, seq) of every payload consumed by the last run() —
+        # the never-drop contract the pipeline tests pin down
+        self.learned_ids: List[Tuple[int, int]] = []
 
-    # -- rollout collection closure (runs on the actor thread) ---------------
-    def _make_collect(self) -> Callable:
+    # -- env splitting -------------------------------------------------------
+    def _split_envs(self, env, per_actor_envs, n_actors: int, k_env):
+        """Per-actor env replicas + their initial obs/state.
+
+        Returns ``(envs, obs_list, env_state_list)`` (state ``None`` per
+        entry on the host path, which keeps env state inside the pool).
+        """
+        if per_actor_envs is not None:
+            envs = per_actor_envs
+            if any(hasattr(e, "step_host") != self._host for e in envs):
+                raise ValueError("per-actor envs must be all host or all JAX")
+            if any(e.n_envs != env.n_envs for e in envs):
+                raise ValueError("per-actor envs must have equal n_envs")
+        elif n_actors == 1:
+            envs = [env]
+        elif self._host:
+            envs = env.shard(n_actors)
+        else:
+            if env.n_envs % n_actors:
+                raise ValueError(
+                    f"cannot split {env.n_envs} envs across {n_actors} actors"
+                )
+            envs = [narrow_vector_env(env, env.n_envs // n_actors)
+                    for _ in range(n_actors)]
         if self._host:
-            env, act, t_max = self.env, self._act, self.agent.hp.t_max
+            return envs, [e.reset() for e in envs], [None for _ in envs]
+        if len(envs) == 1:
+            states = [envs[0].reset(k_env)]
+        else:
+            states = [e.reset(k) for e, k in
+                      zip(envs, jax.random.split(k_env, len(envs)))]
+        return envs, [e.observe(s) for e, s in zip(envs, states)], states
+
+    # -- rollout collection closure (runs on actor thread i) -----------------
+    def _make_collect(self, i: int) -> Callable:
+        if self._host:
+            env, act, t_max = self._actor_envs[i], self._act, self.agent.hp.t_max
 
             def collect(params, key):
                 obs, key, traj, last_obs = collect_host(
-                    act, env, params, self.obs, key, t_max
+                    act, env, params, self._actor_obs[i], key, t_max
                 )
-                self.obs = obs
+                self._actor_obs[i] = obs
                 return key, traj, last_obs
 
         else:
@@ -111,32 +171,49 @@ class PipelinedRL:
 
             def collect(params, key):
                 env_state, last_obs, key, traj = collect_jit(
-                    params, self.env_state, self.obs, key
+                    params, self._actor_env_state[i], self._actor_obs[i], key
                 )
                 # block so queue depth genuinely bounds in-flight rollouts
                 jax.block_until_ready(traj.reward)
-                self.env_state, self.obs = env_state, last_obs
+                self._actor_env_state[i] = env_state
+                self._actor_obs[i] = last_obs
                 return key, traj, last_obs
 
         return collect
 
+    def _actor_keys(self, n_actors: int) -> List:
+        if n_actors == 1:
+            return [self.key]  # PR-1 layout: the single actor owns self.key
+        keys = jax.random.split(self.key, n_actors + 1)
+        self.key = keys[0]
+        return list(keys[1:])
+
     def run(self, iterations: int, log_every: int = 0) -> RunResult:
-        """Run `iterations` pipelined iterations (each = n_e·t_max timesteps)."""
-        queue = TrajectoryQueue(self.pipeline.queue_depth)
+        """Run `iterations` learner updates (each = one shard's n_e·t_max
+        timesteps), fed by ``num_actors`` concurrent actor replicas."""
+        n_actors = self.pipeline.num_actors
+        queue = TrajectoryQueue(self.pipeline.queue_depth, producers=n_actors)
         slot = ParamSlot(self.params, version=0)
-        actor = ActorThread(
-            self._make_collect(), queue, slot, self.key, iterations,
-            lockstep=self.pipeline.lockstep,
-        )
+        quota = [iterations // n_actors + (1 if i < iterations % n_actors else 0)
+                 for i in range(n_actors)]
+        actors = [
+            ActorThread(
+                self._make_collect(i), queue, slot, key, quota[i],
+                lockstep=self.pipeline.lockstep, actor_id=i,
+            )
+            for i, key in enumerate(self._actor_keys(n_actors))
+        ]
         acc = MetricsAccumulator()
-        actor.start()
+        self.learned_ids = []
+        for a in actors:
+            a.start()
         # same step-counter semantics as ParallelRL.run (lr_schedule parity)
         step_arr = jnp.asarray(self.total_steps, jnp.int32)
         completed = 0
         try:
             for i in range(iterations):
                 payload = queue.get()
-                if payload is CLOSED:  # actor died early
+                if payload is CLOSED:  # an actor died early
                     break
                 assert isinstance(payload, Rollout)
                 self.params, self.opt_state, metrics = self._update_step(
@@ -147,38 +224,48 @@ class PipelinedRL:
                 step_arr = step_arr + 1
                 self.total_steps += self._steps_per_iter
                 completed += 1
+                self.learned_ids.append((payload.actor_id, payload.seq))
                 metrics = dict(metrics)
                 metrics["staleness"] = float(i - payload.behavior_version)
                 acc.update(metrics)
                 if log_every and (i + 1) % log_every == 0:
                     log.info(
-                        "iter %d steps %d staleness %.0f reward_sum %.3f "
-                        "loss %.4f",
-                        i + 1, self.total_steps, metrics["staleness"],
+                        "iter %d steps %d actor %d staleness %.0f "
+                        "reward_sum %.3f loss %.4f",
+                        i + 1, self.total_steps, payload.actor_id,
+                        metrics["staleness"],
                         acc.acc.get("reward_sum", 0.0),
                         float(metrics.get("loss", 0.0)),
                     )
         finally:
-            # reap the actor on every exit path (normal, learner exception,
-            # KeyboardInterrupt): signal stop, then keep draining so a put
-            # blocked on a full queue can finish and the thread can exit.
-            actor.stop()
-            while actor.is_alive():
+            # reap all actors on every exit path (normal, learner exception,
+            # KeyboardInterrupt): signal stop, then keep draining so puts
+            # blocked on a full queue can finish and the threads can exit.
+            for a in actors:
+                a.stop()
+            while any(a.is_alive() for a in actors):
                 try:
                     queue.get(timeout=0.05)
                 except _stdlib_queue.Empty:
                     pass
-                actor.join(timeout=0.05)
-        if actor.error is not None:
-            raise RuntimeError("pipeline actor failed") from actor.error
+                for a in actors:
+                    a.join(timeout=0.02)
+        errors = [a for a in actors if a.error is not None]
+        if errors:
+            raise RuntimeError(
+                f"pipeline actor {errors[0].actor_id} failed"
+            ) from errors[0].error
         if completed != iterations:
             raise RuntimeError(
                 f"pipeline stopped early: {completed}/{iterations} iterations"
             )
-        self.key = actor._key
+        if n_actors == 1:
+            self.key = actors[0]._key
+        per_actor_idle = [a.put_wait_s + a.wait_s for a in actors]
         return acc.result(
             self.total_steps,
             self._steps_per_iter,
-            actor_idle_s=queue.put_wait_s + actor.wait_s,
+            actor_idle_s=sum(per_actor_idle),
             learner_idle_s=queue.get_wait_s,
+            per_actor_idle_s=per_actor_idle,
         )

@@ -1,54 +1,82 @@
-"""Bounded trajectory queue between the actor and the learner.
+"""Bounded trajectory queue between N actor replicas and the learner.
 
-A thin wrapper over ``queue.Queue`` with the two properties the pipeline
-needs beyond the stdlib:
+A condition-variable FIFO with the properties the pipeline needs beyond the
+stdlib ``queue.Queue``:
 
-* **backpressure accounting** — the cumulative time the producer (actor)
-  spent blocked on a full queue and the consumer (learner) spent blocked on
-  an empty one. These are exactly the paper-Fig.2 style "who is on the
-  critical path" numbers the ``fig2_time_split`` benchmark reports for the
-  pipelined backend.
+* **backpressure accounting** — the cumulative time producers (actors) spent
+  blocked on a full queue (merged across all of them) and the consumer
+  (learner) spent blocked on an empty one: the paper-Fig.2 style "who is on
+  the critical path" numbers, observable on the bare queue. The pipeline's
+  per-actor attribution (``RunResult.per_actor_idle_s``) is accounted by
+  each ``ActorThread`` around its own puts; ``get_wait_s`` here is the
+  learner-idle figure the benchmarks report.
 * **never drops** — depth bounds memory (at most ``depth`` rollouts in
-  flight) by blocking the actor, not by discarding trajectories; every
+  flight) by blocking producers, not by discarding trajectories; every
   collected rollout is learned from exactly once.
-
-``close()`` wakes a blocked consumer with a ``Closed`` sentinel so the
-learner can drain remaining items and exit cleanly.
+* **multi-producer shutdown** — with ``producers=N``, each actor calls
+  ``producer_done()`` when it finishes its quota; the stream closes only
+  after the last one, so one actor finishing early never cuts off the
+  others. ``close()`` is the hard abort (an actor crashed, or the learner is
+  bailing out): it wakes *everyone* immediately — a producer blocked in
+  ``put()`` raises ``QueueClosed`` promptly instead of hanging until its
+  timeout, and the consumer sees ``CLOSED`` after draining.
 """
 from __future__ import annotations
 
 import queue as _queue
+import threading
 import time
+from collections import deque
 from typing import Any, Optional
 
 
 class Closed:
-    """Sentinel delivered to a consumer after ``close()`` drains."""
+    """Sentinel delivered to a consumer after the stream closes and drains."""
 
 
 CLOSED = Closed()
 
 
+class QueueClosed(RuntimeError):
+    """Raised by ``put()`` on a closed queue — including a put that was
+    already blocked when ``close()`` landed."""
+
+
 class TrajectoryQueue:
     """Bounded FIFO of rollout payloads with idle-time accounting."""
 
-    def __init__(self, depth: int = 2):
+    def __init__(self, depth: int = 2, producers: int = 1):
         if depth < 1:
             raise ValueError(f"queue depth must be >= 1, got {depth}")
+        if producers < 1:
+            raise ValueError(f"producers must be >= 1, got {producers}")
         self.depth = depth
-        self._q: _queue.Queue = _queue.Queue(maxsize=depth)
+        self._items: deque = deque()
+        self._cond = threading.Condition()
+        self._producers_left = producers
         self._closed = False
-        self.put_wait_s = 0.0  # actor idle (queue full)
+        self.put_wait_s = 0.0  # producers idle (queue full), all actors merged
         self.get_wait_s = 0.0  # learner idle (queue empty)
 
     def put(self, item: Any, timeout: Optional[float] = None) -> None:
         """Blocking put; accumulates the time spent waiting on a full queue.
-        Raises stdlib ``queue.Full`` when ``timeout`` elapses."""
-        if self._closed:
-            raise RuntimeError("put() on a closed TrajectoryQueue")
+
+        Raises ``QueueClosed`` if the queue is (or becomes, while blocked)
+        closed, and stdlib ``queue.Full`` when ``timeout`` elapses first.
+        """
         t0 = time.perf_counter()
         try:
-            self._q.put(item, timeout=timeout)
+            with self._cond:
+                ok = self._cond.wait_for(
+                    lambda: self._closed or len(self._items) < self.depth,
+                    timeout=timeout,
+                )
+                if self._closed:
+                    raise QueueClosed("put() on a closed TrajectoryQueue")
+                if not ok:
+                    raise _queue.Full
+                self._items.append(item)
+                self._cond.notify_all()
         finally:
             self.put_wait_s += time.perf_counter() - t0
 
@@ -56,31 +84,38 @@ class TrajectoryQueue:
         """Blocking get; returns ``CLOSED`` once closed and drained.
         Raises stdlib ``queue.Empty`` when ``timeout`` elapses first."""
         t0 = time.perf_counter()
-        deadline = None if timeout is None else t0 + timeout
         try:
-            while True:
-                # poll in small slices: ``close()`` never blocks, so the
-                # sentinel may be the flag alone rather than a queued item
-                try:
-                    return self._q.get(timeout=0.05)
-                except _queue.Empty:
-                    if self._closed:
-                        return CLOSED
-                    if deadline is not None and time.perf_counter() >= deadline:
-                        raise
+            with self._cond:
+                if not self._cond.wait_for(
+                    lambda: self._items or self._closed, timeout=timeout
+                ):
+                    raise _queue.Empty
+                if self._items:
+                    item = self._items.popleft()
+                    self._cond.notify_all()
+                    return item
+                return CLOSED
         finally:
             self.get_wait_s += time.perf_counter() - t0
 
+    def producer_done(self) -> None:
+        """One producer finished its quota; closes the stream when the last
+        producer checks out (the consumer drains, then sees ``CLOSED``)."""
+        with self._cond:
+            self._producers_left -= 1
+            if self._producers_left <= 0:
+                self._closed = True
+            self._cond.notify_all()
+
     def close(self) -> None:
-        """Mark the stream finished; the consumer sees ``CLOSED`` after the
-        remaining items. Never blocks (the flag covers a full queue).
-        Idempotent."""
-        if not self._closed:
+        """Hard abort: mark the stream finished *now*, regardless of how many
+        producers remain. Wakes blocked producers (``QueueClosed``) and the
+        consumer (``CLOSED`` after the remaining items). Never blocks;
+        idempotent."""
+        with self._cond:
             self._closed = True
-            try:
-                self._q.put_nowait(CLOSED)
-            except _queue.Full:
-                pass  # consumer drains, then sees the flag
+            self._cond.notify_all()
 
     def qsize(self) -> int:
-        return self._q.qsize()
+        with self._cond:
+            return len(self._items)

@@ -1,5 +1,6 @@
 """HostEnvPool: the paper's n_w-worker path for external environments."""
 import numpy as np
+import pytest
 
 from repro.envs import HostEnvPool
 
@@ -57,6 +58,49 @@ def test_host_env_pool_step_host_returns_shared_buffers():
     assert isinstance(obs, np.ndarray) and obs.shape == (n, 1)
     assert rewards.dtype == np.float32 and dones.dtype == bool
     pool.close()
+
+
+def test_host_env_device_outputs_never_alias_shared_buffers():
+    """Regression: ``reset``/``step`` must snapshot the shared host buffers.
+    jnp.asarray can zero-copy an aligned numpy array on CPU, in which case
+    the workers' in-place writes on later steps silently mutate an
+    already-returned observation (flaky, alignment-dependent)."""
+    n = 6
+    with HostEnvPool([lambda s=i: _ToyEnv(s) for i in range(n)],
+                     n_workers=2, obs_shape=(1,)) as pool:
+        obs0 = pool.reset()
+        snap0 = np.asarray(obs0).copy()
+        obs1, _, _ = pool.step(np.zeros((n,), np.int64))
+        snap1 = np.asarray(obs1).copy()
+        pool.step(np.ones((n,), np.int64))
+        np.testing.assert_array_equal(np.asarray(obs0), snap0)
+        np.testing.assert_array_equal(np.asarray(obs1), snap1)
+    # shards snapshot too
+    with HostEnvPool([lambda s=i: _ToyEnv(s) for i in range(n)],
+                     n_workers=2, obs_shape=(1,)) as pool:
+        shard = pool.shard(2)[0]
+        obs0 = shard.reset()
+        snap0 = np.asarray(obs0).copy()
+        shard.step(np.zeros((shard.n_envs,), np.int64))
+        np.testing.assert_array_equal(np.asarray(obs0), snap0)
+
+
+def test_host_env_pool_shard_partitions_env_axis():
+    """Shards cover disjoint contiguous slices and step independently."""
+    n = 8
+    with HostEnvPool([lambda s=i: _ToyEnv(s) for i in range(n)],
+                     n_workers=4, obs_shape=(1,)) as pool:
+        shards = pool.shard(4)
+        assert [s.n_envs for s in shards] == [2, 2, 2, 2]
+        obs = np.concatenate([np.asarray(s.reset()) for s in shards])
+        expect = np.array([[_ToyEnv(i).reset()[0]] for i in range(n)])
+        np.testing.assert_array_equal(obs, expect)
+        # stepping shard 1 leaves shard 0's envs untouched
+        before = [e.state for e in shards[0].envs]
+        shards[1].step_host(np.zeros((2,), np.int64))
+        assert [e.state for e in shards[0].envs] == before
+        with pytest.raises(ValueError):
+            pool.shard(3)  # 8 envs don't split into 3 equal shards
 
 
 def test_host_env_pool_context_manager_and_idempotent_close():

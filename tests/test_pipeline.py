@@ -1,10 +1,15 @@
 """repro.pipeline: queue semantics, sync equivalence, end-to-end smokes.
 
-Pins the subsystem's three contracts:
-* the bounded queue applies backpressure (blocks the producer) and never
-  drops a trajectory,
-* at queue depth 1 with lockstep + ρ̄→∞ the pipelined backend reproduces
-  the synchronous ``ParallelRL`` run (same params, same metrics),
+Pins the subsystem's contracts:
+* the bounded queue applies backpressure (blocks producers), never drops a
+  trajectory, and a ``close()`` landing on a blocked ``put()`` raises
+  promptly instead of hanging,
+* at queue depth 1 with lockstep + infinite V-trace clips the pipelined
+  backend reproduces the synchronous ``ParallelRL`` run — bitwise on the
+  shared-learner ``HostEnvPool`` path,
+* N actor replicas never drop a rollout (every ``(actor_id, seq)`` learned
+  exactly once), merged idle accounting sums to per-actor totals, and one
+  actor crashing propagates without deadlocking the others,
 * ``PipelinedRL.run`` works end to end on a JAX-native env, a token env,
   and a ``HostEnvPool`` of external gym-style envs.
 """
@@ -20,7 +25,13 @@ from repro.core import ParallelRL
 from repro.core.agents import PAACAgent, PAACConfig
 from repro.envs import GridWorld, HostEnvPool, TokenEnv
 from repro.optim import constant
-from repro.pipeline import CLOSED, ParamSlot, PipelinedRL, TrajectoryQueue
+from repro.pipeline import (
+    CLOSED,
+    ParamSlot,
+    PipelinedRL,
+    QueueClosed,
+    TrajectoryQueue,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -69,6 +80,51 @@ def test_queue_close_is_idempotent_and_rejects_put():
 def test_queue_depth_validation():
     with pytest.raises(ValueError):
         TrajectoryQueue(depth=0)
+    with pytest.raises(ValueError):
+        TrajectoryQueue(depth=1, producers=0)
+
+
+def test_queue_close_wakes_blocked_put():
+    """Regression: a producer blocked in put() when close() lands must raise
+    promptly (QueueClosed), not hang until its timeout."""
+    q = TrajectoryQueue(depth=1)
+    q.put(0)  # fill the queue so the next put blocks
+    outcome = {}
+
+    def producer():
+        t0 = time.perf_counter()
+        try:
+            q.put(1, timeout=30.0)
+            outcome["result"] = "returned"
+        except QueueClosed:
+            outcome["result"] = "closed"
+        outcome["elapsed"] = time.perf_counter() - t0
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    time.sleep(0.2)  # let the producer block on the full queue
+    q.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert outcome["result"] == "closed"
+    assert outcome["elapsed"] < 5.0  # woke on close, not the 30s timeout
+    # the blocked item was never enqueued; the queued one still drains
+    assert q.get(timeout=1.0) == 0
+    assert q.get(timeout=1.0) is CLOSED
+
+
+def test_queue_multi_producer_done():
+    """The stream closes only after the *last* producer checks out."""
+    q = TrajectoryQueue(depth=4, producers=2)
+    q.put("a")
+    q.producer_done()  # first producer finishes early
+    q.put("b")  # second producer still live
+    assert q.get(timeout=1.0) == "a"
+    q.producer_done()
+    assert q.get(timeout=1.0) == "b"
+    assert q.get(timeout=1.0) is CLOSED
+    with pytest.raises(QueueClosed):
+        q.put("c")
 
 
 def test_param_slot_versions():
@@ -115,6 +171,32 @@ def test_lockstep_pipeline_matches_sync():
                     jax.tree_util.tree_leaves(prl.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-4, atol=1e-5)
+
+
+def test_lockstep_vtrace_inf_clips_bitwise_on_host_pool():
+    """Single actor, depth 1, V-trace with ρ̄ = c̄ → ∞ reproduces the
+    synchronous ``ParallelRL`` params *bitwise* (the PR-1 equivalence pin
+    extended to the V-trace learner: infinite clips compile the correction
+    out exactly, and sync + pipelined share the same jitted steps)."""
+    cfg = get_config("paac_vector").replace(obs_shape=(1,), num_actions=3)
+    agent = PAACAgent(cfg, PAACConfig(t_max=5))
+    with _toy_pool() as pool:
+        rl = ParallelRL(pool, agent, lr_schedule=constant(0.003), seed=1)
+        r_sync = rl.run(8)
+    inf = float("inf")
+    with _toy_pool() as pool:
+        prl = PipelinedRL(
+            pool, agent, lr_schedule=constant(0.003), seed=1,
+            pipeline=PipelineConfig(queue_depth=1, rho_bar=inf, c_bar=inf,
+                                    lockstep=True),
+        )
+        r_pipe = prl.run(8)
+    assert r_pipe.mean_metrics["staleness"] == 0.0
+    for k in ("loss", "policy_loss", "value_loss", "entropy", "reward_sum"):
+        assert r_pipe.mean_metrics[k] == r_sync.mean_metrics[k], k
+    for a, b in zip(jax.tree_util.tree_leaves(rl.params),
+                    jax.tree_util.tree_leaves(prl.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_async_pipeline_reports_staleness_and_rho():
@@ -212,3 +294,114 @@ def test_pipeline_actor_failure_propagates():
         prl = PipelinedRL(pool, agent, lr_schedule=constant(0.003), seed=0)
         with pytest.raises(RuntimeError):
             prl.run(3)
+
+
+# ---------------------------------------------------------------------------
+# multi-actor contracts (N replicas, one learner)
+# ---------------------------------------------------------------------------
+
+
+def _vector_agent(t_max=5):
+    cfg = get_config("paac_vector").replace(obs_shape=(1,), num_actions=3)
+    return PAACAgent(cfg, PAACConfig(t_max=t_max))
+
+
+def test_multi_actor_never_drops_and_merges_idle_accounting():
+    """N=3 actors: every (actor_id, seq) is learned exactly once, and the
+    merged actor-idle figure is exactly the sum of the per-actor totals."""
+    agent = _vector_agent()
+    iterations = 9
+    with HostEnvPool([lambda s=i: _ToyGymEnv(s) for i in range(6)],
+                     n_workers=3, obs_shape=(1,)) as pool:
+        prl = PipelinedRL(
+            pool, agent, lr_schedule=constant(0.003), seed=0,
+            pipeline=PipelineConfig(queue_depth=2, num_actors=3),
+        )
+        res = prl.run(iterations)
+    # each learned rollout is one 2-env shard's t_max steps
+    assert res.steps == iterations * 2 * 5
+    # never-drop: every (actor_id, seq) consumed exactly once
+    expect = [(a, s) for a in range(3) for s in range(3)]
+    assert sorted(prl.learned_ids) == expect
+    # merged idle accounting sums to the per-actor totals
+    assert len(res.per_actor_idle_s) == 3
+    assert res.actor_idle_s == pytest.approx(sum(res.per_actor_idle_s))
+    assert all(t >= 0.0 for t in res.per_actor_idle_s)
+
+
+def test_multi_actor_jax_env_axis_split():
+    """A single JAX-native env is split along the env axis: 2 actors on an
+    8-env GridWorld collect 4-env rollouts each."""
+    env = GridWorld(8, size=4, max_steps=20)
+    cfg = get_config("paac_vector").replace(
+        obs_shape=env.obs_shape, num_actions=env.num_actions
+    )
+    agent = PAACAgent(cfg, PAACConfig(t_max=5))
+    prl = PipelinedRL(
+        env, agent, lr_schedule=constant(0.01), seed=0,
+        pipeline=PipelineConfig(queue_depth=2, num_actors=2),
+    )
+    res = prl.run(6)
+    assert res.steps == 6 * 4 * 5  # shard width 4, not 8
+    assert sorted(prl.learned_ids) == [(a, s) for a in range(2)
+                                       for s in range(3)]
+    assert np.isfinite(res.mean_metrics["loss"])
+
+
+def test_multi_actor_per_actor_env_pools():
+    """A list of envs gives each replica its own full pool (GA3C sweep)."""
+    agent = _vector_agent(t_max=3)
+    pools = [HostEnvPool([lambda s=4 * a + i: _ToyGymEnv(s) for i in range(4)],
+                         n_workers=2, obs_shape=(1,)) for a in range(2)]
+    try:
+        prl = PipelinedRL(
+            pools, agent, lr_schedule=constant(0.003), seed=0,
+            pipeline=PipelineConfig(queue_depth=2, num_actors=2),
+        )
+        res = prl.run(6)
+    finally:
+        for p in pools:
+            p.close()
+    assert res.steps == 6 * 4 * 3  # full 4-env rollouts per actor
+    assert sorted(prl.learned_ids) == [(a, s) for a in range(2)
+                                       for s in range(3)]
+
+
+def test_multi_actor_one_crash_propagates_without_deadlock():
+    """One of three actors crashing surfaces in run() while the healthy
+    replicas unwind cleanly (no deadlock, no secondary errors)."""
+    class ExplodingEnv(_ToyGymEnv):
+        def step(self, action):
+            raise RuntimeError("emulator crashed")
+
+    agent = _vector_agent(t_max=2)
+    # envs 0-1 -> actor 0 (healthy), 2-3 -> actor 1 (explodes), 4-5 -> actor 2
+    def mk(i):
+        return ExplodingEnv(i) if i in (2, 3) else _ToyGymEnv(i)
+
+    with HostEnvPool([lambda s=i: mk(s) for i in range(6)],
+                     n_workers=3, obs_shape=(1,)) as pool:
+        prl = PipelinedRL(
+            pool, agent, lr_schedule=constant(0.003), seed=0,
+            pipeline=PipelineConfig(queue_depth=1, num_actors=3),
+        )
+        t0 = time.perf_counter()
+        with pytest.raises(RuntimeError, match="actor 1"):
+            prl.run(30)
+        assert time.perf_counter() - t0 < 60.0  # unwound, not deadlocked
+
+
+def test_multi_actor_config_validation():
+    agent = _vector_agent()
+    env = GridWorld(8, size=4, max_steps=20)
+    cfg = get_config("paac_vector").replace(
+        obs_shape=env.obs_shape, num_actions=env.num_actions
+    )
+    agent = PAACAgent(cfg, PAACConfig(t_max=5))
+    with pytest.raises(ValueError):  # lockstep needs a single actor
+        PipelinedRL(env, agent, pipeline=PipelineConfig(num_actors=2,
+                                                        lockstep=True))
+    with pytest.raises(ValueError):  # 8 envs don't split into 3 shards
+        PipelinedRL(env, agent, pipeline=PipelineConfig(num_actors=3))
+    with pytest.raises(ValueError):  # env-list length must match num_actors
+        PipelinedRL([env], agent, pipeline=PipelineConfig(num_actors=2))
