@@ -42,6 +42,7 @@ from repro.configs import PipelineConfig, get_config
 from repro.core import ParallelRL
 from repro.core.agents import PAACAgent, PAACConfig
 from repro.envs import AtariLike, FrameStack, HostEnvPool
+from repro.envs.base import VectorEnv
 from repro.optim import constant
 from repro.pipeline import PipelinedRL
 from repro.pipeline.actor import collect_host
@@ -219,6 +220,143 @@ def run_pipelined_host(n_e: int = 16, n_w: int = 8, obs_dim: int = 512,
         f"speedup_vs_sync={speedup:.2f}x (target >=1.3x)",
     )
     return speedup
+
+
+# ---------------------------------------------------------------------------
+# Queue planes — sync vs host TrajectoryQueue vs DeviceTrajectoryRing on a
+# JAX-native env (the GA3C staging-leak measurement)
+# ---------------------------------------------------------------------------
+
+
+class WideObsJaxEnv(VectorEnv):
+    """JAX-native stand-in with a tunably wide observation: the same counter
+    dynamics as ``SleepyExternalEnv`` (reward for action == state mod 3) but
+    expressed as a pure-JAX ``VectorEnv``, so rollouts are born on the
+    device. ``obs_dim`` scales the trajectory payload — the thing the host
+    queue plane has to round-trip and the device ring does not."""
+
+    num_actions = 3
+
+    def __init__(self, n_envs: int, obs_dim: int, horizon: int = 10):
+        super().__init__(n_envs)
+        self.obs_dim = obs_dim
+        self.obs_shape = (obs_dim,)
+        self.horizon = horizon
+
+    def _reset_one(self, key):
+        return {"state": jax.random.randint(key, (), 0, 100)}
+
+    def _observe_one(self, state):
+        ramp = jnp.arange(self.obs_dim, dtype=jnp.float32) / self.obs_dim
+        return (state["state"] % 7).astype(jnp.float32) * 0.1 + ramp
+
+    def _step_one(self, state, action, key):
+        s = state["state"]
+        reward = (action == s % 3).astype(jnp.float32)
+        new = {"state": s + 1}
+        done = (new["state"] % self.horizon) == 0
+        return new, reward, done
+
+
+def run_device_ring(n_e: int = 16, obs_dim: int = 32768, width: int = 16,
+                    t_max: int = 6, iters: int = 40,
+                    actor_counts=(1, 2, 4), warmup: int = 4,
+                    repeats: int = 3, target: float = 1.2):
+    """Steps/s for sync vs host-queue vs device-ring on a JAX-native env.
+
+    The host ``TrajectoryQueue`` plane forces the GA3C shape on a JAX env:
+    every rollout is pulled D2H into staging buffers and re-uploaded when
+    the learner dispatches — the staging leak Babaeizadeh et al. (2017)
+    measured — and its consume-completion release protocol pins the learner
+    loop to one blocking sync per update. The ``DeviceTrajectoryRing``
+    plane keeps the payload on the accelerator, fuses update+publish into
+    one donated dispatch, and (having no release protocol) never syncs the
+    learner loop at all. The acceptance figure is the device/host ratio at
+    ``num_actors=2`` (target ≥ ``target``); the sweep also records actor
+    counts 1/2/4 for both planes plus the fused synchronous baseline, and
+    returns the whole grid for ``BENCH_pipeline.json``.
+
+    Following ``run_multi_actor_host`` (GA3C's sweep), each actor replica
+    owns its *own* ``n_e``-env pool, so the learner's batch — and the
+    payload the host plane must round-trip — keeps its full width at every
+    actor count. The default shape (wide obs, thin trunk) is the
+    payload-bound regime where the staging leak is visible at all: per
+    iteration the host plane moves ``2 · t_max · n_e · obs_dim`` floats
+    across the host boundary while the update itself is a thin matmul.
+    Compute-bound shapes bury the copies under arithmetic on any backend.
+    Each cell reports the best of ``repeats`` runs — on a small shared CPU
+    the actor/learner threads and XLA's pool oversubscribe the cores, and
+    best-of filters the scheduler transients exactly like ``time_call``'s
+    median does for single-program benches.
+    """
+    cfg = get_config("paac_vector").replace(
+        obs_shape=(obs_dim,), num_actions=3, cnn_dense=width, d_model=width
+    )
+    agent = PAACAgent(cfg, PAACConfig(t_max=t_max))
+
+    def make_env():
+        return WideObsJaxEnv(n_e, obs_dim)
+
+    def best_of(make_rl):
+        best = 0.0
+        idle = 0.0
+        stale = 0.0
+        for _ in range(repeats):
+            rl = make_rl()
+            rl.run(max(warmup, 2))  # compile + fill the pipeline
+            res = rl.run(iters)
+            if res.timesteps_per_sec > best:
+                best = res.timesteps_per_sec
+                idle = res.learner_idle_s
+                stale = res.mean_metrics.get("staleness", 0.0)
+        return best, idle, stale
+
+    results = {"sync": {}, "host": {}, "device": {}}
+    tps, _, _ = best_of(lambda: ParallelRL(
+        make_env(), agent, lr_schedule=constant(0.003), seed=0))
+    results["sync"][1] = tps
+    emit(
+        f"fig2_time_split/plane_sync/ne={n_e}",
+        1e6 * n_e * t_max / max(tps, 1e-9),
+        f"steps_per_s={tps:.0f}",
+    )
+    shard_steps = n_e * t_max  # per-actor pools: full width at every count
+    for plane in ("host", "device"):
+        for n_actors in actor_counts:
+            tps, idle_s, stale = best_of(lambda: PipelinedRL(
+                [make_env() for _ in range(n_actors)], agent,
+                lr_schedule=constant(0.003), seed=0,
+                pipeline=PipelineConfig(
+                    queue_depth=max(2, n_actors), num_actors=n_actors,
+                    rollout_plane=plane,
+                ),
+            ))
+            results[plane][n_actors] = tps
+            wall = iters * shard_steps / max(tps, 1e-9)
+            emit(
+                f"fig2_time_split/plane_{plane}/na={n_actors}",
+                1e6 * shard_steps / max(tps, 1e-9),
+                f"steps_per_s={tps:.0f};"
+                f"learner_idle%={100 * idle_s / max(wall, 1e-9):.0f};"
+                f"staleness={stale:.1f}",
+            )
+    pivot = 2 if 2 in results["device"] else max(results["device"])
+    speedup = results["device"][pivot] / max(results["host"][pivot], 1e-9)
+    emit(
+        "fig2_time_split/device_ring_speedup",
+        0.0,
+        f"device_vs_host_na{pivot}={speedup:.2f}x (target >={target}x)",
+    )
+    return {
+        "config": {
+            "n_e": n_e, "obs_dim": obs_dim, "width": width, "t_max": t_max,
+            "iters": iters, "repeats": repeats,
+            "actor_counts": list(actor_counts),
+        },
+        "steps_per_s": results,
+        "device_vs_host_speedup": {"num_actors": pivot, "speedup": speedup,
+                                   "target": target},
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -1,19 +1,95 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Quick CPU-scale versions; pass
---full for the longer sweeps.
+Prints ``name,us_per_call,derived`` CSV. Three profiles:
+
+* ``quick`` (default) — CPU-scale versions of every job.
+* ``full`` (or ``--full``) — the longer sweeps.
+* ``ci`` — tiny shapes for the CI bench-smoke: every job must *run*, not
+  produce meaningful timings. In this profile failures are fatal (no
+  ERROR-row swallowing) so a broken benchmark or a silently-rotted
+  ``BENCH_pipeline.json`` emission fails the build.
+
+Each job is declared exactly once in ``PARAMS`` with its kwargs per
+profile, so a new benchmark cannot land in ``quick``/``full`` while
+silently missing from the CI smoke: any job without a ``ci`` column must be
+listed in ``CI_EXCLUDED`` (with a reason), or the harness refuses to start.
+
+The ``fig2_ring`` job additionally writes ``BENCH_pipeline.json`` (path via
+``--out-json``): the machine-readable steps/s grid for sync vs host-queue
+vs device-ring at actor counts 1/2/4 — the perf trajectory future PRs diff
+against.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
+
+# job -> profile -> kwargs. One row per benchmark; a missing profile key
+# means the job doesn't run under that profile (CI absences must be
+# justified in CI_EXCLUDED below).
+PARAMS = {
+    "kernels": {"quick": {}, "full": {}, "ci": {}},
+    "table1": {
+        "quick": {"iters": 8}, "full": {"iters": 40}, "ci": {"iters": 2},
+    },
+    "fig2": {
+        "quick": {"n_envs_list": (16, 32, 64)},
+        "full": {"n_envs_list": (16, 32, 64, 128)},
+        "ci": {"n_envs_list": (8,), "iters": 2},
+    },
+    "fig2_pipelined": {
+        "quick": {"iters": 12}, "full": {"iters": 40},
+        "ci": {"n_e": 4, "n_w": 2, "obs_dim": 32, "width": 64, "iters": 3,
+               "warmup": 1},
+    },
+    "fig2_actors": {
+        "quick": {"iters": 16}, "full": {"iters": 48},
+        "ci": {"n_e": 4, "n_w": 4, "obs_dim": 32, "width": 64, "iters": 4,
+               "actor_counts": (1, 2), "warmup": 1},
+    },
+    "fig2_ring": {
+        "quick": {}, "full": {"iters": 160, "repeats": 3},
+        "ci": {"n_e": 8, "obs_dim": 256, "width": 16, "t_max": 2, "iters": 4,
+               "warmup": 1, "repeats": 1, "actor_counts": (1, 2)},
+    },
+    "fig34": {
+        "quick": {"n_envs_list": (16, 32, 64), "total_steps": 30_000},
+        "full": {"n_envs_list": (16, 32, 64, 128, 256),
+                 "total_steps": 120_000},
+        "ci": {"n_envs_list": (8,), "total_steps": 2_000},
+    },
+    "baselines": {
+        "quick": {"iters": 150}, "full": {"iters": 400}, "ci": {"iters": 10},
+    },
+    "roofline": {"quick": {}, "full": {}},
+}
+
+# jobs deliberately absent from the ci profile, with the reason on record
+CI_EXCLUDED = {
+    "roofline": "analyses dry-run artifacts CI doesn't generate",
+}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--profile", choices=("quick", "full", "ci"), default="")
+    ap.add_argument("--out-json", default="BENCH_pipeline.json",
+                    help="where fig2_ring writes the pipeline steps/s grid")
     args, _ = ap.parse_known_args()
+    profile = args.profile or ("full" if args.full else "quick")
+    strict = profile == "ci"
+
+    missing = [n for n, p in PARAMS.items()
+               if "ci" not in p and n not in CI_EXCLUDED]
+    if missing:
+        raise SystemExit(
+            f"benchmarks {missing} have no ci profile and no CI_EXCLUDED "
+            "entry — give them tiny ci kwargs or justify the exclusion"
+        )
 
     from benchmarks import (
         baselines,
@@ -24,33 +100,48 @@ def main() -> None:
         table1_throughput,
     )
 
-    print("name,us_per_call,derived")
-    jobs = {
-        "kernels": lambda: kernels_bench.run(),
-        "table1": lambda: table1_throughput.run(iters=8 if not args.full else 40),
-        "fig2": lambda: fig2_time_split.run(
-            n_envs_list=(16, 32, 64) if not args.full else (16, 32, 64, 128)
-        ),
-        "fig2_pipelined": lambda: fig2_time_split.run_pipelined_host(
-            iters=12 if not args.full else 40
-        ),
-        "fig2_actors": lambda: fig2_time_split.run_multi_actor_host(
-            iters=16 if not args.full else 48
-        ),
-        "fig34": lambda: fig34_ne_scaling.run(
-            n_envs_list=(16, 32, 64) if not args.full else (16, 32, 64, 128, 256),
-            total_steps=30_000 if not args.full else 120_000,
-        ),
-        "baselines": lambda: baselines.run(iters=150 if not args.full else 400),
-        "roofline": lambda: roofline.run(),
+    ring_result = {}
+
+    def fig2_ring_job(**kw):
+        ring_result.update(fig2_time_split.run_device_ring(**kw))
+
+    runners = {
+        "kernels": kernels_bench.run,
+        "table1": table1_throughput.run,
+        "fig2": fig2_time_split.run,
+        "fig2_pipelined": fig2_time_split.run_pipelined_host,
+        "fig2_actors": fig2_time_split.run_multi_actor_host,
+        "fig2_ring": fig2_ring_job,
+        "fig34": fig34_ne_scaling.run,
+        "baselines": baselines.run,
+        "roofline": roofline.run,
     }
-    for name, job in jobs.items():
+
+    print("name,us_per_call,derived")
+    for name, per_profile in PARAMS.items():
         if args.only and args.only != name:
             continue
+        if profile not in per_profile:
+            continue
         try:
-            job()
-        except Exception as e:  # keep the harness going; record the failure
+            runners[name](**per_profile[profile])
+        except Exception as e:
+            if strict:
+                raise  # ci profile: a broken benchmark fails the build
+            # keep the harness going; record the failure
             print(f"{name},0.0,ERROR={type(e).__name__}:{e}", file=sys.stdout)
+
+    if ring_result:
+        payload = {
+            "bench": "pipeline_planes",
+            "profile": profile,
+            "unix_time": time.time(),
+            **ring_result,
+        }
+        with open(args.out_json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"fig2_ring/json,0.0,wrote={args.out_json}")
 
 
 if __name__ == "__main__":

@@ -61,6 +61,20 @@ class PipelineConfig:
     actor to wait for the learner's latest params before each rollout —
     synchronous semantics through the pipelined code path (used by
     equivalence tests); it requires ``num_actors == 1``.
+
+    ``rollout_plane`` selects the queue plane carrying trajectories from the
+    actors to the learner:
+
+    * ``"device"`` — ``DeviceTrajectoryRing``: payloads stay on the
+      accelerator end to end and the learner step donates them (the fast
+      path; JAX-native envs only),
+    * ``"host"`` — ``TrajectoryQueue``: payloads are host numpy arrays in
+      reusable staging buffers, uploaded when the learner dispatches (the
+      only option for ``HostEnvPool``, whose rollouts are born on the host;
+      for JAX-native envs it is the GA3C-style baseline the benchmarks
+      compare against),
+    * ``"auto"`` (default) — device ring for JAX-native envs, host queue for
+      ``HostEnvPool``.
     """
 
     queue_depth: int = 2
@@ -68,6 +82,7 @@ class PipelineConfig:
     c_bar: float = 1.0
     num_actors: int = 1
     lockstep: bool = False
+    rollout_plane: str = "auto"  # "auto" | "device" | "host"
 
 
 # ---------------------------------------------------------------------------

@@ -62,21 +62,53 @@ class MetricsAccumulator:
     learner loop so the two backends report identical metric semantics
     (mean-per-iteration metrics, episode counts, timesteps/s over the run's
     wall-clock).
+
+    ``lazy=True`` defers the host conversion of device metric scalars: each
+    ``update`` only stashes the dict, and the blocking ``float()`` reads
+    happen once, in ``result``. Eager mode forces a device sync every
+    iteration — which the synchronous loop doesn't notice (it waits for the
+    update anyway) and the host queue plane *requires* (consume-completion
+    gates the staging ``release`` protocol), but which would serialize the
+    device-ring learner against every update it dispatches. Lazy draining
+    accumulates in exactly the same host-side float arithmetic, so the two
+    modes report bit-identical metrics; the wall clock is read *after* the
+    drain, so timesteps/s still covers the full execution, not just the
+    dispatches.
     """
 
-    def __init__(self):
+    def __init__(self, lazy: bool = False):
         self.acc: Dict[str, float] = {}
         self.episodes = 0.0
         self.iters = 0
+        self.lazy = lazy
+        self._pending: List[Dict] = []
         self._t0 = time.perf_counter()
 
     def update(self, metrics: Dict) -> None:
         self.iters += 1
+        if self.lazy:
+            self._pending.append(metrics)
+            return
+        self._fold(metrics)
+
+    def _fold(self, metrics: Dict) -> None:
         for k, v in metrics.items():
             self.acc[k] = self.acc.get(k, 0.0) + float(v)
         self.episodes += float(metrics.get("episodes", 0.0))
 
+    def _drain(self) -> None:
+        for metrics in self._pending:
+            self._fold(metrics)
+        self._pending.clear()
+
+    def cumulative(self, key: str, default: float = 0.0) -> float:
+        """Running sum of one metric (drains pending device scalars first —
+        a sync point, so only for explicit logging paths)."""
+        self._drain()
+        return self.acc.get(key, default)
+
     def result(self, steps: int, steps_per_iter: int, **extra) -> RunResult:
+        self._drain()  # blocks until every dispatched update has executed
         dt = time.perf_counter() - self._t0
         mean = {k: v / max(self.iters, 1) for k, v in self.acc.items()}
         return RunResult(
@@ -141,10 +173,20 @@ class ParallelRL:
             self.agent_state = None
             self.env_state = None
             self.obs = env.reset()
-            from repro.pipeline.actor import collect_host, make_host_act_step
+            from repro.pipeline.actor import (
+                StagingSet,
+                collect_host,
+                make_host_act_step,
+            )
 
             self._collect_host = collect_host
             self._act = make_host_act_step(agent.act_fn())
+            # one reusable trajectory staging set: the synchronous loop fully
+            # consumes each update (MetricsAccumulator blocks on the metric
+            # scalars) before the next rollout overwrites the buffers, so a
+            # single set is race-free — zero numpy allocation per iteration
+            self._staging = StagingSet(agent.hp.t_max, env.n_envs,
+                                       env.obs_shape, env.obs_dtype)
             # shared with the pipelined learner: same jitted update step,
             # with infinite V-trace clips — the correction compiled out
             # exactly (behaviour == learner here), so a lock-stepped pipeline
@@ -181,7 +223,7 @@ class ParallelRL:
     def _host_iteration(self, step_arr):
         self.obs, self.key, traj, last_obs = self._collect_host(
             self._act, self.env, self.params, self.obs, self.key,
-            self.agent.hp.t_max,
+            self.agent.hp.t_max, staging=self._staging,
         )
         self.params, self.opt_state, metrics = self._update_step(
             self.params, self.opt_state, traj, last_obs, step_arr

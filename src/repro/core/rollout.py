@@ -48,7 +48,12 @@ def rollout(
         key, k_act, k_env = jax.random.split(key, 3)
         logits, value = act_fn(params, obs)
         action = jax.random.categorical(k_act, logits)
-        logp = jax.nn.log_softmax(logits)[jnp.arange(logits.shape[0]), action]
+        # behaviour log-prob from the sampled action's logit alone:
+        # log π(a|s) = logits[a] − logsumexp(logits). Gathering first keeps
+        # the acting scan from materializing the full (E, A) log_softmax
+        # matrix when only one column per row is ever read.
+        action_logit = jnp.take_along_axis(logits, action[:, None], axis=1)[:, 0]
+        logp = action_logit - jax.scipy.special.logsumexp(logits, axis=1)
         env_state, next_obs, reward, done = env.step(env_state, action, k_env)
         tr = Transition(obs, action, reward, done, value, logp)
         return (env_state, next_obs, key), tr

@@ -35,7 +35,9 @@ class _EnvStepper:
 
     Subclasses provide ``envs``, the output buffers ``_obs``/``_reward``/
     ``_done`` (leading axis ``n_envs``), the worker partition ``_slices``
-    (index arrays into ``envs``), and ``_executor()``.
+    (index arrays into ``envs``), and ``_executor()``; ``_init_staging()``
+    preallocates the per-stepper staging snapshot reused by every
+    ``reset``/``step`` call.
     """
 
     envs: List
@@ -43,6 +45,11 @@ class _EnvStepper:
 
     def _executor(self) -> cf.ThreadPoolExecutor:
         raise NotImplementedError
+
+    @property
+    def obs_dtype(self):
+        """Dtype of the observation buffers (what staging rings preallocate)."""
+        return self._obs.dtype
 
     def _submit_slices(self, fn, *args) -> None:
         futures = [self._executor().submit(fn, idxs, *args)
@@ -57,8 +64,11 @@ class _EnvStepper:
     def reset(self) -> jnp.ndarray:
         """Reset all envs, partitioned over the worker pool like ``step``."""
         self._submit_slices(self._reset_slice)
-        # snapshot: jnp.asarray may zero-copy-alias an aligned host buffer,
-        # and the workers mutate self._obs in place on the next step
+        # jnp.array (never asarray) IS the staging copy: one synchronous
+        # transfer into a private device buffer the workers can't touch.
+        # A host-side bounce buffer here would only add a second memcpy —
+        # per-rollout staging reuse lives in the pipeline's HostStagingRing,
+        # where rows are written in place instead of stacked per collect.
         return jnp.array(self._obs)
 
     def _work(self, idxs: np.ndarray, actions: np.ndarray):
@@ -74,7 +84,8 @@ class _EnvStepper:
         """Apply the master's batched actions; workers run in parallel.
 
         Returns views of the shared host buffers (valid until the next call)
-        — the zero-device-op path used by the pipeline's actor threads.
+        — the zero-device-op path used by the pipeline's actor threads,
+        which copy rows straight into their own trajectory staging sets.
         """
         self._submit_slices(self._work, np.asarray(actions))
         return self._obs, self._reward, self._done

@@ -14,7 +14,10 @@ asynchronous actor/learner pipeline (``repro.pipeline.PipelinedRL``):
 ``--num-actors`` replicas (the env axis split between them) collect
 rollouts while the learner consumes earlier ones, with ``--queue-depth``
 bounding staleness and ``--rho-bar``/``--c-bar`` the V-trace clips on the
-off-policy importance correction.
+off-policy importance correction. ``--rollout-plane`` picks the trajectory
+queue plane: the device-resident ring (JAX-native envs, donated buffers —
+the fast path) or the host staging queue (external env pools; also the
+GA3C-style baseline for benchmarking JAX envs).
 
 Examples:
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
@@ -65,7 +68,8 @@ def run_rl(args):
             env, agent, lr_schedule=constant(args.lr), seed=args.seed,
             pipeline=PipelineConfig(queue_depth=args.queue_depth,
                                     rho_bar=args.rho_bar, c_bar=args.c_bar,
-                                    num_actors=args.num_actors),
+                                    num_actors=args.num_actors,
+                                    rollout_plane=args.rollout_plane),
         )
     else:
         rl = ParallelRL(env, agent, lr_schedule=constant(args.lr),
@@ -138,6 +142,10 @@ def main():
                     help="V-trace c̄: clip on the backward-propagation product")
     ap.add_argument("--num-actors", type=int, default=1,
                     help="actor replicas feeding the learner (env axis split)")
+    ap.add_argument("--rollout-plane", choices=("auto", "device", "host"),
+                    default="auto",
+                    help="trajectory queue plane: device-resident ring "
+                    "(JAX envs), host staging queue, or auto by env type")
     args = ap.parse_args()
     if args.mode == "rl":
         run_rl(args)

@@ -5,16 +5,35 @@ stepping and learning serialize into one program per iteration, so the
 accelerator idles whenever the host is on the critical path (Fig. 2's
 "50% env time" regime). Following GA3C (Babaeizadeh et al., 2017) and
 IMPALA (Espeholt et al., 2018), this subsystem decouples the two halves
-behind a bounded queue, with N acting replicas feeding one learner.
+behind a bounded trajectory stream, with N acting replicas feeding one
+learner.
 
-N-actor dataflow::
+The stream runs on one of **two queue planes** (``PipelineConfig.
+rollout_plane``), chosen by where the rollout is born:
 
-    actor 0 ──collect(env shard 0)──put──▶ ┌─────────────────┐
-    actor 1 ──collect(env shard 1)──put──▶ │ TrajectoryQueue │──get──▶ learner
-      ...                                  │   (depth d)     │           │
-    actor N-1 ──collect(shard N-1)──put──▶ └─────────────────┘           │
-        ▲                                                                │
-        └───────────── ParamSlot.read ◀── ParamSlot.publish ◀────────────┘
+Device plane — JAX-native envs (the fast path; GA3C's host↔device staging
+leak removed)::
+
+    actor 0 ──collect_jit──▶ ┌───────────────────────┐
+    actor 1 ──collect_jit──▶ │ DeviceTrajectoryRing  │──get──▶ fused learner
+      ...       (device      │  depth d slots, all   │   (one jitted dispatch:
+    actor N-1    arrays)───▶ │  payloads on device)  │    update + publish;
+        ▲                    └───────────────────────┘    donates params, opt
+        │                        slot ownership moves     state & the stale
+        │                        to the learner on get    publish buffer)
+        │    lease  ┌────────────────────┐   commit             │
+        └─acquire/──│ PingPongParamSlot  │◀─(published──────────┘
+          release   │  two snapshots     │   copy)
+                    └────────────────────┘
+
+Host plane — ``HostEnvPool`` (external emulators; rollouts born in host
+memory) and the GA3C-style baseline for JAX envs (``rollout_plane="host"``)::
+
+    actor i ──collect_host──▶ HostStagingRing set ──put──▶ TrajectoryQueue
+                 (rows written in place, reused            (numpy payloads)
+                  via Rollout.release after the                  │
+                  learner consumes the update)                 learner (H2D
+                                                               at dispatch)
 
 Each replica owns a private slice of the environments — a single env's axis
 is split N ways (``HostEnvPool.shard`` / ``narrow_vector_env``), or a list
@@ -24,8 +43,8 @@ so the learner can attribute idle time and staleness per replica, and so the
 tests can prove no trajectory is ever dropped or learned twice.
 
 Staleness model: the learner stamps params with a monotone version (one per
-update) published through the shared ``ParamSlot``; each actor snapshots the
-newest version before collecting, and a rollout consumed at learner version
+update) published through the shared param slot; each actor leases the
+newest version around its collect, and a rollout consumed at learner version
 v carries ``staleness = v - behavior_version``. The queue depth bounds the
 number of rollouts in flight *collectively* (backpressure blocks producers;
 nothing is dropped), so staleness ≤ depth + num_actors in steady state. The
@@ -33,39 +52,66 @@ learner compensates with full V-trace (``rho_bar``/``c_bar`` clips): ρ̄
 bounds each step's importance-weighted TD error and the c̄ product bounds
 backward propagation through the n-step targets, keeping deep queues
 unbiased; infinite clips compile the correction out exactly (the
-synchronous PAAC update, pinned bitwise by the lockstep tests).
+synchronous PAAC update, pinned bitwise by the lockstep tests on both
+planes).
+
+Donation safety: the learner's working params/opt state are private —
+actors only ever lease the ping-pong snapshots — so the fused step donates
+params, opt state and the stale publish buffer (each aliasing a
+shape-identical output) and runs alloc-free in steady state, while ring
+slots are consumed under sole ownership and return to the allocator as the
+update retires them. The regression tests pin that the donated buffers
+really are deleted and that the actor-facing snapshots never are.
 
 Modules:
 
 * ``TrajectoryQueue`` — bounded, never-dropping multi-producer rollout queue
-  with actor/learner idle-time accounting and prompt close-on-abort
+  for host payloads, with idle-time accounting and prompt close-on-abort
   (``repro.pipeline.queue``),
-* ``ActorThread`` / ``ParamSlot`` / ``collect_host`` — double-buffered
-  rollout collection for JAX-native envs and ``HostEnvPool``
+* ``DeviceTrajectoryRing`` — its device-plane twin: ticket-ordered
+  preallocated slots whose payloads never leave the accelerator
+  (``repro.pipeline.ring``),
+* ``ActorThread`` / ``ParamSlot`` / ``PingPongParamSlot`` /
+  ``HostStagingRing`` / ``collect_host`` — leased double-buffered rollout
+  collection for JAX-native envs and ``HostEnvPool``
   (``repro.pipeline.actor``),
 * ``make_learner_step`` — PAAC update with full V-trace staleness
-  correction (``repro.pipeline.learner``),
+  correction, optionally fused with the param publish for full donation
+  (``repro.pipeline.learner``),
 * ``PipelinedRL`` — orchestrator mirroring ``ParallelRL``'s API
   (``repro.pipeline.orchestrator``).
 
 Configure via ``repro.configs.PipelineConfig`` (num_actors, queue depth,
-ρ̄/c̄, lockstep); select from the launcher with ``repro.launch.train
---pipeline --num-actors N``.
+ρ̄/c̄, lockstep, rollout_plane); select from the launcher with
+``repro.launch.train --pipeline --num-actors N --rollout-plane device``.
 """
 from repro.configs.base import PipelineConfig
-from repro.pipeline.actor import ActorThread, ParamSlot, Rollout, collect_host
+from repro.pipeline.actor import (
+    ActorThread,
+    HostStagingRing,
+    ParamSlot,
+    PingPongParamSlot,
+    Rollout,
+    StagingSet,
+    collect_host,
+)
 from repro.pipeline.learner import make_learner_step
 from repro.pipeline.orchestrator import PipelinedRL
 from repro.pipeline.queue import CLOSED, QueueClosed, TrajectoryQueue
+from repro.pipeline.ring import DeviceTrajectoryRing
 
 __all__ = [
     "ActorThread",
     "CLOSED",
+    "DeviceTrajectoryRing",
+    "HostStagingRing",
     "ParamSlot",
+    "PingPongParamSlot",
     "PipelineConfig",
     "PipelinedRL",
     "QueueClosed",
     "Rollout",
+    "StagingSet",
     "TrajectoryQueue",
     "collect_host",
     "make_learner_step",

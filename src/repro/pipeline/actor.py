@@ -4,25 +4,39 @@ Two collection paths, mirroring the two environment regimes of
 ``repro.core.framework``:
 
 * ``make_collect_fn`` (re-exported from ``repro.core.rollout``) — JAX-native
-  ``VectorEnv``: one jitted program collects a full ``t_max`` rollout.
+  ``VectorEnv``: one jitted program collects a full ``t_max`` rollout whose
+  output feeds the device plane (``DeviceTrajectoryRing``) without ever
+  touching host memory.
 * ``collect_host`` — ``HostEnvPool``: jitted batched acting interleaved with
   threaded host env stepping (paper §3's master/worker loop, run on the
   actor thread). While the env workers sleep in C/syscalls the GIL is
   released, so the learner's jitted update runs concurrently — this is the
-  overlap that recovers the paper's Fig. 2 "50% env time".
+  overlap that recovers the paper's Fig. 2 "50% env time". Trajectories are
+  accumulated into reusable ``HostStagingRing`` buffers (one row-write per
+  step into a preallocated ``(t_max, E, ...)`` set) instead of fresh numpy
+  stacks per rollout.
 
-``ParamSlot`` is the double buffer between learner and actor: the learner
-publishes fresh params (a reference swap — device arrays are immutable) and
-the actor reads the latest snapshot before each rollout. ``Rollout`` is the
-queue payload: the trajectory, the bootstrap observation, and the behaviour
-params version (staleness = learner_version − behaviour_version).
+``ParamSlot`` is the basic learner→actor exchange (a reference swap).
+``PingPongParamSlot`` is its donation-safe upgrade: the learner's working
+params are *never* handed to actors — each update publishes a bitwise copy
+into one of two alternating actor-facing buffers, and actors bracket their
+rollouts with ``acquire``/``release`` read leases so the learner can reclaim
+(donate) the stale buffer only once nobody reads it. That is what makes
+``donate_argnums`` on params *and* opt state safe in the learner step.
+
+``Rollout`` is the queue payload: the trajectory, the bootstrap observation,
+the behaviour params version (staleness = learner_version −
+behaviour_version), and an optional host-side ``release`` callback the
+learner invokes once the payload is fully consumed (returns a staging set to
+its ring; ``None`` on the device plane, where XLA's donation chain recycles
+the buffers instead).
 """
 from __future__ import annotations
 
 import threading
 import time
 from queue import Full
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +47,9 @@ from repro.pipeline.queue import QueueClosed
 
 __all__ = [
     "ParamSlot",
+    "PingPongParamSlot",
+    "HostStagingRing",
+    "StagingSet",
     "Rollout",
     "ActorThread",
     "collect_host",
@@ -47,6 +64,11 @@ class ParamSlot:
     whatever is newest when it starts a rollout. ``wait_for`` lets a
     lock-stepped actor block until the learner has caught up — synchronous
     semantics through the pipelined code path.
+
+    ``acquire``/``release`` are the lease hooks actors use so the slot's
+    donation-safe subclass can track outstanding readers; here they are a
+    plain ``read`` and a no-op (reference-swapped params are never reclaimed,
+    so holding them needs no protection).
     """
 
     def __init__(self, params: Any, version: int = 0):
@@ -64,6 +86,13 @@ class ParamSlot:
         with self._cond:
             return self._params, self._version
 
+    def acquire(self) -> Tuple[Any, int]:
+        """Take a read lease on the newest params (paired with ``release``)."""
+        return self.read()
+
+    def release(self, version: int) -> None:
+        """Return the lease taken by ``acquire`` (no-op for the base slot)."""
+
     def wait_for(self, version: int, timeout: Optional[float] = None) -> bool:
         with self._cond:
             return self._cond.wait_for(
@@ -76,19 +105,181 @@ class ParamSlot:
             return self._version
 
 
+def _copy_tree(tree):
+    return jax.tree_util.tree_map(lambda a: a.copy(), tree)
+
+
+class PingPongParamSlot(ParamSlot):
+    """Two alternating actor-facing param buffers with read leases.
+
+    The donation problem: if the learner jit donates its params, the buffers
+    an actor snapshotted via ``read()`` are deleted by the *next* update —
+    a use-after-free racing every in-flight rollout. The fix is to never
+    share the learner's working params at all: ``publish`` of version ``v``
+    lands a bitwise copy in buffer ``v % 2``, actors lease the newest buffer
+    for exactly the duration of one rollout, and the learner ``reserve``s a
+    buffer for reuse only after its last reader released. The stale buffer is
+    handed into the fused learner step as a donation target, so on backends
+    that realize input/output aliasing the publish copy writes straight over
+    it — classic ping-pong double buffering, one param-copy per update, zero
+    steady-state allocation.
+
+    Lease protocol (actor side)::
+
+        params, version = slot.acquire()   # readers[v % 2] += 1
+        try:  ... collect with params ...
+        finally: slot.release(version)     # readers[v % 2] -= 1
+
+    Publish protocol (learner side, per update ``v``)::
+
+        dst = slot.reserve(v)        # blocks until readers[v % 2] == 0
+        ... fused jitted step consumes dst (donated) and returns `published`
+        slot.commit(published, v)    # buffer v % 2 <- published, notify
+
+    ``reserve`` can only wait on a reader that is mid-rollout — actors
+    release before blocking on the queue — so the wait is bounded by one
+    collect and cannot deadlock.
+    """
+
+    def __init__(self, params: Any, version: int = 0):
+        # actors only ever see copies; the caller keeps the original as the
+        # learner's private working params (safe to donate from step one)
+        bufs = [_copy_tree(params), _copy_tree(params)]
+        super().__init__(bufs[version % 2], version)
+        self._bufs = bufs
+        self._readers = [0, 0]
+
+    def acquire(self) -> Tuple[Any, int]:
+        with self._cond:
+            self._readers[self._version % 2] += 1
+            return self._params, self._version
+
+    def release(self, version: int) -> None:
+        with self._cond:
+            self._readers[version % 2] -= 1
+            assert self._readers[version % 2] >= 0, "unbalanced release"
+            self._cond.notify_all()
+
+    def reserve(self, version: int, timeout: Optional[float] = None):
+        """Claim buffer ``version % 2`` for the upcoming publish.
+
+        Blocks until every reader of the buffer's previous contents has
+        released, then returns the stale param tree — the donation target
+        for the fused learner step. Returns ``None`` on timeout.
+        """
+        idx = version % 2
+        with self._cond:
+            if not self._cond.wait_for(
+                lambda: self._readers[idx] == 0, timeout=timeout
+            ):
+                return None
+            return self._bufs[idx]
+
+    def commit(self, params: Any, version: int) -> None:
+        """Install the published copy produced against ``reserve``'s target."""
+        idx = version % 2
+        with self._cond:
+            assert self._readers[idx] == 0, "commit while buffer leased"
+            self._bufs[idx] = params
+            self._params = params
+            self._version = version
+            self._cond.notify_all()
+
+    def publish(self, params: Any, version: int) -> None:
+        """Unfused publish: copy ``params`` into the alternating buffer.
+
+        Convenience path (used when the learner step was not built with
+        ``fused_publish``): blocks for the buffer's readers, copies, commits.
+        """
+        self.reserve(version)
+        self.commit(_copy_tree(params), version)
+
+
 class Rollout(NamedTuple):
     """Queue payload: one collected rollout plus its provenance.
 
     ``actor_id``/``seq`` tag which replica produced the rollout and where it
     sits in that replica's stream — the learner uses them to attribute
     staleness and idle time per actor, and the pipeline tests to prove every
-    ``(actor_id, seq)`` is learned from exactly once."""
+    ``(actor_id, seq)`` is learned from exactly once. ``release`` (host plane
+    only) returns the payload's staging buffers to their ring once the
+    learner has fully consumed the update."""
 
     traj: Transition  # time-major (T, E, ...)
     last_obs: jnp.ndarray  # (E, *obs_shape) — bootstrap observation
     behavior_version: int  # params version the actor acted with
     actor_id: int = 0  # which actor replica collected it
     seq: int = 0  # per-actor rollout sequence number
+    release: Optional[Callable[[], None]] = None  # staging-set return hook
+
+
+# ---------------------------------------------------------------------------
+# Host staging — reusable pinned buffers for host-plane payloads
+# ---------------------------------------------------------------------------
+
+
+class StagingSet:
+    """One reusable host payload: a ``(t_max, E, ...)`` trajectory plus the
+    bootstrap observation, written in place row by row during collection."""
+
+    __slots__ = ("traj", "last_obs")
+
+    def __init__(self, t_max: int, n_envs: int, obs_shape: Tuple[int, ...],
+                 obs_dtype):
+        E = n_envs
+        self.traj = Transition(
+            obs=np.zeros((t_max, E) + tuple(obs_shape), obs_dtype),
+            action=np.zeros((t_max, E), np.int32),
+            reward=np.zeros((t_max, E), np.float32),
+            done=np.zeros((t_max, E), bool),
+            value=np.zeros((t_max, E), np.float32),
+            logp=np.zeros((t_max, E), np.float32),
+        )
+        self.last_obs = np.zeros((E,) + tuple(obs_shape), obs_dtype)
+
+
+class HostStagingRing:
+    """Pool of reusable staging sets for one actor's host-plane rollouts.
+
+    Replaces the per-rollout ``np.stack`` of per-step copies with writes into
+    preallocated buffers: ``acquire`` hands out a free set, the payload's
+    ``release`` callback (invoked by the learner after it has consumed the
+    update, i.e. after the H2D transfer is provably complete) returns it.
+    ``n_sets`` must cover every set simultaneously in flight: up to
+    ``queue_depth`` enqueued + 1 consumed-but-unreleased + 1 being written,
+    so callers size it ``queue_depth + 2``. ``acquire`` never blocks when
+    that invariant holds; a blocked acquire is a release-protocol bug, which
+    the timeout turns into a loud error instead of a hang.
+    """
+
+    def __init__(self, n_sets: int, t_max: int, n_envs: int,
+                 obs_shape: Tuple[int, ...], obs_dtype=np.float32):
+        if n_sets < 2:
+            raise ValueError(f"staging ring needs >= 2 sets, got {n_sets}")
+        self._free: List[StagingSet] = [
+            StagingSet(t_max, n_envs, obs_shape, obs_dtype)
+            for _ in range(n_sets)
+        ]
+        self.n_sets = n_sets
+        self._cond = threading.Condition()
+
+    def acquire(self, timeout: float = 60.0) -> StagingSet:
+        with self._cond:
+            if not self._cond.wait_for(lambda: self._free, timeout=timeout):
+                raise RuntimeError(
+                    "HostStagingRing.acquire timed out — a payload was "
+                    "consumed without its release() being called"
+                )
+            return self._free.pop()
+
+    def release(self, s: StagingSet) -> None:
+        with self._cond:
+            self._free.append(s)
+            self._cond.notify_all()
+
+    def free_sets(self) -> int:
+        with self._cond:
+            return len(self._free)
 
 
 def make_host_act_step(act_fn: Callable) -> Callable:
@@ -108,7 +299,8 @@ def make_host_act_step(act_fn: Callable) -> Callable:
     return act_step
 
 
-def collect_host(act_step: Callable, pool, params, obs, key, t_max: int):
+def collect_host(act_step: Callable, pool, params, obs, key, t_max: int,
+                 staging: Optional[StagingSet] = None):
     """Collect ``t_max`` steps from a ``HostEnvPool`` (paper §3 loop).
 
     ``act_step`` is the jitted fused acting step (``make_host_act_step``);
@@ -117,45 +309,53 @@ def collect_host(act_step: Callable, pool, params, obs, key, t_max: int):
     ``Transition`` of *host* (numpy) arrays — including the behaviour
     log-prob the learner's importance correction needs — transferred to the
     device only when the learner dispatches its update.
+
+    With ``staging`` (a ``HostStagingRing`` set) every step writes its row
+    directly into the set's preallocated buffers — zero numpy allocation per
+    rollout — and the returned ``traj``/``last_obs`` *are* the staging
+    arrays: the caller must not reuse the set until the learner has consumed
+    the payload (the pipeline's ``Rollout.release`` protocol). Without
+    ``staging`` each call allocates fresh arrays (safe for one-shot callers
+    like benchmarks).
     """
     # accumulate on the host (numpy): the only device traffic per step is the
     # fused act_step — extra device ops here would queue behind the learner's
     # update and stretch the rollout. The trajectory stays host-side; the
     # H2D transfer happens when the learner dispatches its update.
-    obs_l, act_l, rew_l, done_l, val_l, logp_l = [], [], [], [], [], []
-    obs_np = np.asarray(obs)
-    for _ in range(t_max):
-        action, value, logp, key = act_step(params, obs_np, key)
+    if staging is None:
+        staging = StagingSet(t_max, pool.n_envs, pool.obs_shape,
+                              np.asarray(obs).dtype)
+    traj, last = staging.traj, staging.last_obs
+    np.copyto(last, np.asarray(obs))
+    for t in range(t_max):
+        traj.obs[t] = last
+        action, value, logp, key = act_step(params, traj.obs[t], key)
         action_np = np.asarray(action)
         next_obs, reward, done = pool.step_host(action_np)
-        obs_l.append(obs_np)
-        act_l.append(action_np)
-        rew_l.append(reward.copy())
-        done_l.append(done.copy())
-        val_l.append(np.asarray(value))
-        logp_l.append(np.asarray(logp))
-        obs_np = next_obs.copy()
-    traj = Transition(
-        obs=np.stack(obs_l),
-        action=np.stack(act_l),
-        reward=np.stack(rew_l),
-        done=np.stack(done_l),
-        value=np.stack(val_l),
-        logp=np.stack(logp_l),
-    )
-    return obs_np, key, traj, obs_np  # final obs is the bootstrap observation
+        traj.action[t] = action_np
+        traj.reward[t] = reward
+        traj.done[t] = done
+        traj.value[t] = np.asarray(value)
+        traj.logp[t] = np.asarray(logp)
+        np.copyto(last, next_obs)
+    return last, key, traj, last  # final obs is the bootstrap observation
 
 
 class ActorThread(threading.Thread):
     """One actor replica: collects ``iterations`` rollouts and feeds the
-    shared trajectory queue.
+    shared trajectory queue (host plane) or device ring (device plane).
 
-    ``collect(params, key) -> (key, traj, last_obs)`` encapsulates either
-    collection path with env state captured in the closure; the thread owns
-    the acting RNG key. In ``lockstep`` mode the actor waits until the
-    learner has published version i before collecting rollout i (so data is
-    never stale); otherwise it reads the freshest available params and runs
-    ahead up to the queue depth (shared across all replicas).
+    ``collect(params, key) -> (key, traj, last_obs, release)`` encapsulates
+    either collection path with env state captured in the closure; the
+    thread owns the acting RNG key, and ``release`` (or ``None``) rides the
+    payload so the learner can return staging buffers. Params are taken
+    under an ``acquire``/``release`` lease for exactly the duration of the
+    collect — never while blocked on the queue — which is what lets a
+    ping-pong slot reclaim stale buffers without racing this thread. In
+    ``lockstep`` mode the actor waits until the learner has published
+    version i before collecting rollout i (so data is never stale);
+    otherwise it reads the freshest available params and runs ahead up to
+    the queue depth (shared across all replicas).
 
     Shutdown protocol: a replica that finishes its quota (or is ``stop()``ed,
     or finds the queue closed under it) checks out with ``producer_done()``
@@ -211,10 +411,18 @@ class ActorThread(threading.Thread):
                     self.wait_s += time.perf_counter() - t0
                 if self._stop_requested.is_set():
                     return
-                params, version = self._slot.read()
-                self._key, traj, last_obs = self._collect(params, self._key)
+                # lease the params only for the collect: released before the
+                # (potentially long) blocking put so the learner's reserve()
+                # wait is bounded by one rollout
+                params, version = self._slot.acquire()
+                try:
+                    self._key, traj, last_obs, release = self._collect(
+                        params, self._key
+                    )
+                finally:
+                    self._slot.release(version)
                 if not self._put(
-                    Rollout(traj, last_obs, version, self.actor_id, i)
+                    Rollout(traj, last_obs, version, self.actor_id, i, release)
                 ):
                     return
         except BaseException as e:  # surfaced by the learner loop

@@ -27,6 +27,21 @@ lockstep equivalence tests pin the pipeline to ``ParallelRL``.
 replaced by a queue payload. The synchronous ``HostEnvPool`` driver in
 ``repro.core.framework`` reuses the same step (with infinite clips), so sync
 and pipelined backends differ only in overlap, not in math.
+
+With ``fused_publish=True`` the step also produces the actor-facing param
+snapshot inside the same program —
+``(params, opt_state, traj, last_obs, step, publish_dst) ->
+(params, opt_state, published, metrics)`` — so one dispatch per iteration
+covers dequeue-consume, update, *and* publish. ``published`` is a bitwise
+copy of the new params (the publish copy cannot perturb the lockstep
+guarantee), and ``publish_dst`` is the stale ping-pong buffer from
+``PingPongParamSlot.reserve``: donated, so backends that realize
+input/output aliasing write the snapshot straight over it. This is the
+shape that makes full donation safe — the orchestrator jits it with
+``donate_argnums`` on params, opt state, and the publish target (each
+aliases a shape-identical output, so the update is allocation-free in
+steady state), and actors never see a donated buffer because they only
+ever lease the published copies.
 """
 from __future__ import annotations
 
@@ -45,8 +60,15 @@ from repro.core.returns import vtrace_returns
 
 
 def make_learner_step(agent, optimizer, lr_schedule, rho_bar: float = 1.0,
-                      c_bar: float = 1.0) -> Callable:
-    """Build the pipelined learner's jittable update step for a PAAC agent."""
+                      c_bar: float = 1.0,
+                      fused_publish: bool = False) -> Callable:
+    """Build the pipelined learner's jittable update step for a PAAC agent.
+
+    ``fused_publish=False`` (default): the PR-1/PR-2 signature, shared with
+    the synchronous ``HostEnvPool`` driver. ``fused_publish=True``: the
+    donation-ready signature described in the module docstring (extra
+    ``publish_dst`` argument, extra ``published`` output).
+    """
     cfg, hp = agent.cfg, agent.hp
     act = agent.act_fn()
     # the clips are static: the infinite-clip (synchronous) limit is resolved
@@ -112,7 +134,7 @@ def make_learner_step(agent, optimizer, lr_schedule, rho_bar: float = 1.0,
         metrics["c_clip_frac"] = jnp.mean((rho > c_bar).astype(jnp.float32))
         return total, metrics
 
-    def learner_step(params, opt_state, traj, last_obs, step):
+    def _update(params, opt_state, traj, last_obs, step):
         _, bootstrap = act(params, last_obs)  # V(s_{tmax+1}) under learner params
         bootstrap = jax.lax.stop_gradient(bootstrap)
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -125,5 +147,18 @@ def make_learner_step(agent, optimizer, lr_schedule, rho_bar: float = 1.0,
         metrics["reward_sum"] = jnp.sum(traj.reward)
         metrics["episodes"] = jnp.sum(traj.done)
         return params, opt_state, metrics
+
+    if not fused_publish:
+        return _update
+
+    def learner_step(params, opt_state, traj, last_obs, step, publish_dst):
+        del publish_dst  # donation target only: its buffers back `published`
+        params, opt_state, metrics = _update(
+            params, opt_state, traj, last_obs, step
+        )
+        # bitwise snapshot for the actors — a copy op, so donating `params`
+        # at the jit boundary can never invalidate what actors read
+        published = jax.tree_util.tree_map(lambda a: a.copy(), params)
+        return params, opt_state, published, metrics
 
     return learner_step

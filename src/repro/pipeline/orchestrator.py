@@ -2,11 +2,27 @@
 
 Drop-in alternative to ``repro.core.ParallelRL`` (same constructor shape,
 same ``run(iterations) -> RunResult``) that splits Algorithm 1 across
-``num_actors`` actor threads and one learner thread joined by a shared
-bounded ``TrajectoryQueue``:
+``num_actors`` actor threads and one learner thread joined by a bounded
+trajectory stream:
 
-    actor thread i: read latest params → collect rollout → queue.put
-    learner thread: queue.get → V-trace-corrected update → publish params
+    actor thread i: lease latest params → collect rollout → put
+    learner thread: get → fused (V-trace update + publish) → commit params
+
+The stream runs on one of two *queue planes* (``PipelineConfig.
+rollout_plane``): the device-resident ``DeviceTrajectoryRing`` for
+JAX-native envs — trajectories never leave the accelerator, and ``get()``
+hands each slot to the learner with sole ownership so its memory is
+reclaimed the moment the update consumes it — or the host ``TrajectoryQueue``
+for ``HostEnvPool``, whose rollouts are born in host memory and ride
+reusable ``HostStagingRing`` buffers (returned to their ring by the
+payload's ``release`` callback once the learner has consumed the update).
+
+Params flow the other way through a ``PingPongParamSlot``: the learner's
+working params and opt state are private (and therefore donated — the
+update runs alloc-free in steady state), while each update publishes a
+bitwise snapshot into one of two alternating actor-facing buffers inside
+the same fused dispatch. Actors lease a snapshot for exactly one rollout;
+the learner reuses a stale buffer only after its last reader released.
 
 Each actor replica owns a private slice of the environments: a single env is
 split along the env axis (``HostEnvPool.shard`` for external pools,
@@ -16,12 +32,16 @@ env latency). With queue depth d the actors collectively run at most d
 rollouts ahead; staleness is bounded by the depth and corrected by the
 learner's full V-trace targets (``PipelineConfig.rho_bar`` / ``c_bar``). In
 ``lockstep`` mode (single actor) the actor always waits for fresh params and
-the pipeline reproduces the synchronous trajectory stream exactly.
+the pipeline reproduces the synchronous trajectory stream exactly — bitwise,
+on either plane, when the clips are infinite.
 
 The win is wall-clock overlap: on the ``HostEnvPool`` path the env workers
 hold no GIL while stepping, so N actors' env latencies, their jitted acting
 steps, and the learner's jitted update all run concurrently — the paper's
 Fig. 2 "50% env time" recovered, and scaled past what one actor can hide.
+On the device plane the win is the removed host round trip plus full
+donation: one fused dispatch per iteration, no staging copies, no
+steady-state allocation (``benchmarks/fig2_time_split.run_device_ring``).
 """
 from __future__ import annotations
 
@@ -30,15 +50,23 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import PipelineConfig
 from repro.core.framework import MetricsAccumulator, RunResult, init_rl_common
 from repro.core.rollout import make_collect_fn
 from repro.envs.base import narrow_vector_env
 from repro.envs.host_env import HostEnvPool, HostEnvShard
-from repro.pipeline.actor import ActorThread, ParamSlot, Rollout, collect_host
+from repro.pipeline.actor import (
+    ActorThread,
+    HostStagingRing,
+    PingPongParamSlot,
+    Rollout,
+    collect_host,
+)
 from repro.pipeline.learner import make_learner_step
 from repro.pipeline.queue import CLOSED, TrajectoryQueue
+from repro.pipeline.ring import DeviceTrajectoryRing
 from repro.utils import get_logger
 
 log = get_logger("pipeline")
@@ -85,13 +113,14 @@ class PipelinedRL:
         self.env = env
         self.agent = agent
         self.pipeline = pipeline
+        self._host = hasattr(env, "step_host")
+        self._plane = self._resolve_plane(pipeline.rollout_plane)
         # shared with ParallelRL — identical RNG layout so a lock-stepped
         # single-actor pipeline reproduces the synchronous run bit-for-bit.
         (self.optimizer, self.lr_schedule, self.key, k_env, self.params,
          self.opt_state) = init_rl_common(env, agent, optimizer, lr_schedule,
                                           seed)
 
-        self._host = hasattr(env, "step_host")
         act = agent.act_fn()
         self._actor_envs, self._actor_obs, self._actor_env_state = \
             self._split_envs(env, per_actor_envs, n_actors, k_env)
@@ -107,12 +136,22 @@ class PipelinedRL:
                 make_collect_fn(act, self._actor_envs[0], agent.hp.t_max)
             )
 
-        # donate the optimizer state (learner-private). Params must NOT be
-        # donated: the actor threads still read the behaviour snapshot.
+        # the fused learner step: dequeue-consume + update + publish in one
+        # dispatch. Donated: params and opt state (learner-private — actors
+        # only lease ping-pong snapshots) and the stale publish buffer from
+        # reserve(), each of which aliases a matching output (new params, new
+        # opt state, published snapshot) so the update runs alloc-free in
+        # steady state. The trajectory needs no donation: ring.get()
+        # transferred sole ownership, so its buffers are reclaimed the moment
+        # this execution retires them — donating them would only warn
+        # (nothing output-shaped to alias). The bootstrap obs must NOT be
+        # donated on the device plane: the actor carries the same array into
+        # its next rollout.
         self._update_step = jax.jit(
             make_learner_step(agent, self.optimizer, self.lr_schedule,
-                              rho_bar=pipeline.rho_bar, c_bar=pipeline.c_bar),
-            donate_argnums=(1,),
+                              rho_bar=pipeline.rho_bar, c_bar=pipeline.c_bar,
+                              fused_publish=True),
+            donate_argnums=(0, 1, 5),
         )
         self.total_steps = 0
         # one learned rollout = one actor shard's n_envs·t_max timesteps
@@ -120,6 +159,28 @@ class PipelinedRL:
         # (actor_id, seq) of every payload consumed by the last run() —
         # the never-drop contract the pipeline tests pin down
         self.learned_ids: List[Tuple[int, int]] = []
+
+    # -- queue plane ---------------------------------------------------------
+    def _resolve_plane(self, plane: str) -> str:
+        if plane not in ("auto", "device", "host"):
+            raise ValueError(
+                f"rollout_plane must be 'auto', 'device' or 'host', got {plane!r}"
+            )
+        if plane == "auto":
+            return "host" if self._host else "device"
+        if plane == "device" and self._host:
+            raise ValueError(
+                "rollout_plane='device' requires a JAX-native env: "
+                "HostEnvPool rollouts are born in host memory and must ride "
+                "the host TrajectoryQueue plane"
+            )
+        return plane
+
+    def _make_queue(self, n_actors: int):
+        if self._plane == "device":
+            return DeviceTrajectoryRing(self.pipeline.queue_depth,
+                                        producers=n_actors)
+        return TrajectoryQueue(self.pipeline.queue_depth, producers=n_actors)
 
     # -- env splitting -------------------------------------------------------
     def _split_envs(self, env, per_actor_envs, n_actors: int, k_env):
@@ -156,28 +217,72 @@ class PipelinedRL:
 
     # -- rollout collection closure (runs on actor thread i) -----------------
     def _make_collect(self, i: int) -> Callable:
+        """``collect(params, key) -> (key, traj, last_obs, release)``.
+
+        Host path: rollouts accumulate into a per-actor ``HostStagingRing``
+        set; ``release`` returns the set once the learner consumed it.
+        Device path: the jitted collector's output feeds the ring directly
+        (``release`` is ``None`` — the learner's donation recycles it).
+        """
         if self._host:
             env, act, t_max = self._actor_envs[i], self._act, self.agent.hp.t_max
+            staging = HostStagingRing(
+                self.pipeline.queue_depth + 2, t_max, env.n_envs,
+                env.obs_shape, env.obs_dtype,
+            )
 
             def collect(params, key):
+                s = staging.acquire()
                 obs, key, traj, last_obs = collect_host(
-                    act, env, params, self._actor_obs[i], key, t_max
+                    act, env, params, self._actor_obs[i], key, t_max,
+                    staging=s,
                 )
+                # the carried obs lives in set s; the next rollout copies it
+                # out before anything can overwrite it (per-actor sets are
+                # written serially by this thread only)
                 self._actor_obs[i] = obs
-                return key, traj, last_obs
+                return key, traj, last_obs, (lambda: staging.release(s))
 
         else:
-            collect_jit = self._collect_jit
-
-            def collect(params, key):
-                env_state, last_obs, key, traj = collect_jit(
-                    params, self._actor_env_state[i], self._actor_obs[i], key
+            collect_jit, t_max = self._collect_jit, self.agent.hp.t_max
+            if self._plane == "host":
+                # forced host plane on a JAX env (the GA3C-style baseline):
+                # stage the device trajectory into reusable pinned buffers
+                env = self._actor_envs[i]
+                obs_dtype = np.asarray(self._actor_obs[i]).dtype
+                staging = HostStagingRing(
+                    self.pipeline.queue_depth + 2, t_max, env.n_envs,
+                    env.obs_shape, obs_dtype,
                 )
-                # block so queue depth genuinely bounds in-flight rollouts
-                jax.block_until_ready(traj.reward)
-                self._actor_env_state[i] = env_state
-                self._actor_obs[i] = last_obs
-                return key, traj, last_obs
+
+                def collect(params, key):
+                    env_state, last_obs, key, traj = collect_jit(
+                        params, self._actor_env_state[i], self._actor_obs[i],
+                        key,
+                    )
+                    self._actor_env_state[i] = env_state
+                    self._actor_obs[i] = last_obs
+                    s = staging.acquire()
+                    # D2H into the preallocated staging set (np.copyto pulls
+                    # each device array to host exactly once, no fresh allocs)
+                    for dst, src in zip(s.traj, traj):
+                        np.copyto(dst, np.asarray(src))
+                    np.copyto(s.last_obs, np.asarray(last_obs))
+                    return key, s.traj, s.last_obs, \
+                        (lambda: staging.release(s))
+
+            else:
+
+                def collect(params, key):
+                    env_state, last_obs, key, traj = collect_jit(
+                        params, self._actor_env_state[i], self._actor_obs[i],
+                        key,
+                    )
+                    # block so queue depth genuinely bounds in-flight rollouts
+                    jax.block_until_ready(traj.reward)
+                    self._actor_env_state[i] = env_state
+                    self._actor_obs[i] = last_obs
+                    return key, traj, last_obs, None
 
         return collect
 
@@ -192,8 +297,8 @@ class PipelinedRL:
         """Run `iterations` learner updates (each = one shard's n_e·t_max
         timesteps), fed by ``num_actors`` concurrent actor replicas."""
         n_actors = self.pipeline.num_actors
-        queue = TrajectoryQueue(self.pipeline.queue_depth, producers=n_actors)
-        slot = ParamSlot(self.params, version=0)
+        queue = self._make_queue(n_actors)
+        slot = PingPongParamSlot(self.params, version=0)
         quota = [iterations // n_actors + (1 if i < iterations % n_actors else 0)
                  for i in range(n_actors)]
         actors = [
@@ -203,7 +308,12 @@ class PipelinedRL:
             )
             for i, key in enumerate(self._actor_keys(n_actors))
         ]
-        acc = MetricsAccumulator()
+        # device plane: never sync the learner loop — metric scalars are
+        # stashed and converted once at result(), so update i+1 dispatches
+        # while update i still executes. Host plane: eager (the blocking
+        # float() conversion is what certifies consume-completion before a
+        # staging set is release()d back to its ring).
+        acc = MetricsAccumulator(lazy=self._plane == "device")
         self.learned_ids = []
         for a in actors:
             a.start()
@@ -216,36 +326,58 @@ class PipelinedRL:
                 if payload is CLOSED:  # an actor died early
                     break
                 assert isinstance(payload, Rollout)
-                self.params, self.opt_state, metrics = self._update_step(
-                    self.params, self.opt_state, payload.traj,
-                    payload.last_obs, step_arr,
-                )
-                slot.publish(self.params, i + 1)
+                # claim the stale ping-pong buffer; bounded by one in-flight
+                # collect (actors release before blocking on the queue), so a
+                # long wait means an actor died without releasing — bail out
+                # instead of hanging
+                while True:
+                    publish_dst = slot.reserve(i + 1, timeout=1.0)
+                    if publish_dst is not None:
+                        break
+                    if not any(a.is_alive() for a in actors):
+                        raise RuntimeError(
+                            "param lease never released (all actors exited)"
+                        )
+                self.params, self.opt_state, published, metrics = \
+                    self._update_step(
+                        self.params, self.opt_state, payload.traj,
+                        payload.last_obs, step_arr, publish_dst,
+                    )
+                slot.commit(published, i + 1)
                 step_arr = step_arr + 1
                 self.total_steps += self._steps_per_iter
                 completed += 1
                 self.learned_ids.append((payload.actor_id, payload.seq))
                 metrics = dict(metrics)
                 metrics["staleness"] = float(i - payload.behavior_version)
+                # eager (host plane): blocks on the metric scalars => the
+                # update (and the H2D copy of the staged payload) has fully
+                # executed. Lazy (device plane): no sync — just stashes.
                 acc.update(metrics)
+                if payload.release is not None:
+                    payload.release()  # consume certified: set is reusable
                 if log_every and (i + 1) % log_every == 0:
                     log.info(
                         "iter %d steps %d actor %d staleness %.0f "
                         "reward_sum %.3f loss %.4f",
                         i + 1, self.total_steps, payload.actor_id,
                         metrics["staleness"],
-                        acc.acc.get("reward_sum", 0.0),
+                        acc.cumulative("reward_sum"),
                         float(metrics.get("loss", 0.0)),
                     )
         finally:
             # reap all actors on every exit path (normal, learner exception,
             # KeyboardInterrupt): signal stop, then keep draining so puts
-            # blocked on a full queue can finish and the threads can exit.
+            # blocked on a full queue can finish and the threads can exit —
+            # releasing discarded staged payloads so no actor can wedge on an
+            # empty staging ring while unwinding.
             for a in actors:
                 a.stop()
             while any(a.is_alive() for a in actors):
                 try:
-                    queue.get(timeout=0.05)
+                    p = queue.get(timeout=0.05)
+                    if p is not CLOSED and getattr(p, "release", None):
+                        p.release()
                 except _stdlib_queue.Empty:
                     pass
                 for a in actors:

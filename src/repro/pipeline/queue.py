@@ -1,5 +1,12 @@
 """Bounded trajectory queue between N actor replicas and the learner.
 
+This is the pipeline's *host queue plane*: payloads are host (numpy) arrays
+— rollouts born on the host (``HostEnvPool``) in reusable staging sets, or
+JAX rollouts deliberately staged down for the GA3C-style baseline. Its
+device-plane twin, ``repro.pipeline.ring.DeviceTrajectoryRing``, shares
+this class's exact put/get/shutdown surface so the orchestrator and
+``ActorThread`` drive either interchangeably.
+
 A condition-variable FIFO with the properties the pipeline needs beyond the
 stdlib ``queue.Queue``:
 

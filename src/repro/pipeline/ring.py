@@ -1,0 +1,198 @@
+"""Device-resident trajectory ring — the pipeline's fast queue plane.
+
+``TrajectoryQueue`` (the *host plane*) carries numpy payloads: correct for
+``HostEnvPool``, whose rollouts are born on the host, but a GA3C-style leak
+for JAX-native envs — every trajectory would be staged to host memory and
+re-uploaded by the learner, which is exactly the host↔device round trip the
+paper's single-machine design exists to avoid (Babaeizadeh et al., 2017
+measured the staging queues as GA3C's dominant overhead).
+
+``DeviceTrajectoryRing`` is the *device plane*: a preallocated ring of
+``depth`` slots whose payloads are device arrays end to end. Producers
+(actor threads) deposit their jitted collector's output ``Transition``
+directly into a slot; the consumer (learner) takes slots in ticket order
+with **sole ownership** — ``get()`` clears the ring's reference, so the
+moment the fused learner step has read a slot's arrays their device memory
+returns to the allocator for the next collect, instead of lingering behind
+a queue reference until some later drain. Nothing crosses the PCIe/host
+boundary at any point.
+
+Why slots hold references rather than literally aliased buffers: JAX arrays
+are immutable from Python, so "writing into" a preallocated device buffer
+cannot be expressed as a pointer write — ownership handoff is the
+JAX-native realization. The ring still bounds device memory exactly the way
+a mutable slot ring would — at most ``depth`` rollouts live, enforced by
+blocking producers — and the reuse chain (collector output → slot →
+consumed and retired by the learner step → allocator hands the pages to the
+next collect) keeps the steady state allocation-flat. (The learner's
+params/opt-state side *does* use literal donation — see
+``PingPongParamSlot`` — because there the outputs are shape-identical to
+the inputs, which is what XLA input/output aliasing requires.)
+
+Ordering and shutdown semantics are identical to ``TrajectoryQueue`` (same
+``put``/``get``/``producer_done``/``close``/idle-accounting surface, same
+``CLOSED``/``QueueClosed``/``queue.Full`` signals), so ``ActorThread`` and
+the orchestrator drive either plane interchangeably. Every accepted ``put``
+is stamped with a monotonically increasing *ticket*; the consumer drains in
+ticket order, which is arrival order — multi-producer FIFO, never dropping.
+
+The ring additionally enforces its plane: payloads must be device-resident
+(``jax.Array`` leaves). A numpy leaf on the fast path is a bug — it means a
+host staging step crept back in — and raises ``TypeError`` immediately
+rather than silently re-introducing the round trip.
+"""
+from __future__ import annotations
+
+import queue as _queue
+import threading
+import time
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+from repro.pipeline.queue import CLOSED, QueueClosed
+
+__all__ = ["DeviceTrajectoryRing"]
+
+
+class _Slot:
+    """One preallocated ring slot: a payload reference plus its ticket tag."""
+
+    __slots__ = ("payload", "ticket", "full")
+
+    def __init__(self):
+        self.payload: Any = None
+        self.ticket: int = -1
+        self.full: bool = False
+
+
+def _assert_device_resident(payload) -> None:
+    """Reject host-memory (numpy) array leaves. Non-array metadata (ints,
+    callables) rides along untouched — only the tensor payload is policed."""
+    for leaf in jax.tree_util.tree_leaves(payload):
+        if isinstance(leaf, (np.ndarray, np.generic)):
+            raise TypeError(
+                "DeviceTrajectoryRing payloads must be device arrays; got "
+                f"{type(leaf).__name__} — a host staging step crept into the "
+                "device plane (use TrajectoryQueue for host payloads)"
+            )
+
+
+class DeviceTrajectoryRing:
+    """Bounded multi-producer ring of on-device rollout slots.
+
+    Drop-in for ``TrajectoryQueue`` on the device plane: same blocking
+    ``put``/``get`` with idle-time accounting, same multi-producer
+    ``producer_done`` refcounted shutdown and hard ``close()`` abort. Depth
+    bounds device memory (at most ``depth`` rollouts in flight); every
+    accepted put is ticket-stamped and consumed exactly once, in order.
+    """
+
+    def __init__(self, depth: int = 2, producers: int = 1):
+        if depth < 1:
+            raise ValueError(f"ring depth must be >= 1, got {depth}")
+        if producers < 1:
+            raise ValueError(f"producers must be >= 1, got {producers}")
+        self.depth = depth
+        self._slots: List[_Slot] = [_Slot() for _ in range(depth)]
+        self._tail = 0  # next ticket to issue (producer side)
+        self._head = 0  # next ticket to consume (learner side)
+        self._cond = threading.Condition()
+        self._producers_left = producers
+        self._closed = False
+        self.put_wait_s = 0.0  # producers idle (ring full), all actors merged
+        self.get_wait_s = 0.0  # learner idle (ring empty)
+
+    # -- producer side -------------------------------------------------------
+    def put(self, item: Any, timeout: Optional[float] = None) -> None:
+        """Deposit a device-resident payload into the next free slot.
+
+        Blocks while all ``depth`` slots are live (backpressure — the memory
+        bound), accumulating producer idle time. Raises ``QueueClosed`` if
+        the ring is (or becomes, while blocked) closed, stdlib ``queue.Full``
+        on timeout, and ``TypeError`` for host-memory payloads.
+        """
+        _assert_device_resident(item)
+        t0 = time.perf_counter()
+        try:
+            with self._cond:
+                ok = self._cond.wait_for(
+                    lambda: self._closed or self._tail - self._head < self.depth,
+                    timeout=timeout,
+                )
+                if self._closed:
+                    raise QueueClosed("put() on a closed DeviceTrajectoryRing")
+                if not ok:
+                    raise _queue.Full
+                ticket = self._tail
+                self._tail = ticket + 1
+                slot = self._slots[ticket % self.depth]
+                assert not slot.full, "ring invariant: issued slot must be free"
+                slot.payload = item
+                slot.ticket = ticket
+                slot.full = True
+                self._cond.notify_all()
+        finally:
+            self.put_wait_s += time.perf_counter() - t0
+
+    # -- consumer side -------------------------------------------------------
+    def get(self, timeout: Optional[float] = None) -> Any:
+        """Take the oldest full slot's payload, transferring ownership.
+
+        The slot's reference is cleared before returning, so the caller is
+        the payload's sole owner: once its jitted consumer retires the
+        arrays, the slot's device memory goes back to the allocator
+        immediately. Returns ``CLOSED`` once closed and drained; raises
+        stdlib ``queue.Empty`` on timeout.
+        """
+        t0 = time.perf_counter()
+        try:
+            with self._cond:
+                if not self._cond.wait_for(
+                    lambda: self._slots[self._head % self.depth].full
+                    or self._closed,
+                    timeout=timeout,
+                ):
+                    raise _queue.Empty
+                slot = self._slots[self._head % self.depth]
+                if not slot.full:
+                    return CLOSED
+                item = slot.payload
+                # ownership transfer: drop the ring's reference so the
+                # learner's donation is the only live handle to the arrays
+                slot.payload = None
+                slot.ticket = -1
+                slot.full = False
+                self._head += 1
+                self._cond.notify_all()
+                return item
+        finally:
+            self.get_wait_s += time.perf_counter() - t0
+
+    # -- shutdown (same protocol as TrajectoryQueue) -------------------------
+    def producer_done(self) -> None:
+        """One producer finished its quota; the stream closes when the last
+        producer checks out (the consumer drains, then sees ``CLOSED``)."""
+        with self._cond:
+            self._producers_left -= 1
+            if self._producers_left <= 0:
+                self._closed = True
+            self._cond.notify_all()
+
+    def close(self) -> None:
+        """Hard abort: wakes blocked producers (``QueueClosed``) and the
+        consumer (``CLOSED`` after the remaining slots drain). Idempotent."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def qsize(self) -> int:
+        with self._cond:
+            return self._tail - self._head
+
+    @property
+    def tickets_issued(self) -> int:
+        """Total puts accepted over the ring's lifetime (monotone)."""
+        with self._cond:
+            return self._tail

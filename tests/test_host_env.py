@@ -103,6 +103,16 @@ def test_host_env_pool_shard_partitions_env_axis():
             pool.shard(3)  # 8 envs don't split into 3 equal shards
 
 
+def test_host_env_obs_dtype_property():
+    """Pool and shard expose the observation dtype the pipeline's staging
+    rings preallocate against."""
+    n = 4
+    with HostEnvPool([lambda s=i: _ToyEnv(s) for i in range(n)],
+                     n_workers=2, obs_shape=(1,)) as pool:
+        assert pool.obs_dtype == np.float32
+        assert pool.shard(2)[0].obs_dtype == np.float32
+
+
 def test_host_env_pool_context_manager_and_idempotent_close():
     closed = []
 

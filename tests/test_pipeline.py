@@ -3,13 +3,21 @@
 Pins the subsystem's contracts:
 * the bounded queue applies backpressure (blocks producers), never drops a
   trajectory, and a ``close()`` landing on a blocked ``put()`` raises
-  promptly instead of hanging,
+  promptly instead of hanging — and the device-plane
+  ``DeviceTrajectoryRing`` honours the identical contract (plus rejecting
+  host-memory payloads),
 * at queue depth 1 with lockstep + infinite V-trace clips the pipelined
   backend reproduces the synchronous ``ParallelRL`` run — bitwise on the
-  shared-learner ``HostEnvPool`` path,
+  shared-learner ``HostEnvPool`` path *and* bitwise on both queue planes of
+  a JAX-native env (ring with full donation included),
+* donation safety: the learner really donates its params/opt state (stale
+  buffers raise on read), while the ping-pong snapshots actors lease are
+  never invalidated,
 * N actor replicas never drop a rollout (every ``(actor_id, seq)`` learned
   exactly once), merged idle accounting sums to per-actor totals, and one
   actor crashing propagates without deadlocking the others,
+* host staging sets are recycled through the ``Rollout.release`` protocol
+  (bounded allocation) and returned exactly once,
 * ``PipelinedRL.run`` works end to end on a JAX-native env, a token env,
   and a ``HostEnvPool`` of external gym-style envs.
 """
@@ -27,7 +35,10 @@ from repro.envs import GridWorld, HostEnvPool, TokenEnv
 from repro.optim import constant
 from repro.pipeline import (
     CLOSED,
+    DeviceTrajectoryRing,
+    HostStagingRing,
     ParamSlot,
+    PingPongParamSlot,
     PipelinedRL,
     QueueClosed,
     TrajectoryQueue,
@@ -137,6 +148,194 @@ def test_param_slot_versions():
 
 
 # ---------------------------------------------------------------------------
+# device trajectory ring (the device queue plane)
+# ---------------------------------------------------------------------------
+
+
+def _dev(x):
+    return jax.numpy.asarray(x)
+
+
+def test_ring_backpressure_blocks_and_never_drops():
+    """Same contract as the host queue: depth bounds in-flight slots by
+    blocking producers; every payload is consumed exactly once, in order."""
+    ring = DeviceTrajectoryRing(depth=2)
+    n_items = 7
+    # materialize on the main thread: first-ever device-array creation from
+    # a worker thread can block on backend init and skew the timing below
+    items = [_dev(i) for i in range(n_items)]
+    produced = []
+
+    def producer():
+        for i in range(n_items):
+            ring.put(items[i])
+            produced.append(i)
+        ring.close()
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    time.sleep(0.2)
+    assert ring.qsize() == 2
+    assert len(produced) == 2  # third put is blocked on a full ring
+    got = []
+    while True:
+        item = ring.get(timeout=5.0)
+        if item is CLOSED:
+            break
+        got.append(int(item))
+    t.join(timeout=5.0)
+    assert got == list(range(n_items))
+    assert ring.tickets_issued == n_items
+    assert ring.put_wait_s > 0.1  # producer idle accounting saw the block
+
+
+def test_ring_rejects_host_payloads():
+    """The device plane polices itself: a numpy leaf means a host staging
+    step crept back in — loud TypeError, not a silent round trip."""
+    ring = DeviceTrajectoryRing(depth=2)
+    with pytest.raises(TypeError, match="device"):
+        ring.put(np.zeros(3))
+    ring.put(_dev(np.zeros(3)))  # device arrays are accepted
+    assert ring.qsize() == 1
+
+
+def test_ring_close_wakes_blocked_put_and_drains():
+    ring = DeviceTrajectoryRing(depth=1)
+    ring.put(_dev(0))
+    blocked_item = _dev(1)  # created on the main thread (backend init)
+    outcome = {}
+
+    def producer():
+        try:
+            ring.put(blocked_item, timeout=30.0)
+            outcome["result"] = "returned"
+        except QueueClosed:
+            outcome["result"] = "closed"
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    time.sleep(0.2)
+    ring.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert outcome["result"] == "closed"
+    assert int(ring.get(timeout=1.0)) == 0  # queued slot still drains
+    assert ring.get(timeout=1.0) is CLOSED
+
+
+def test_ring_multi_producer_done_and_validation():
+    ring = DeviceTrajectoryRing(depth=4, producers=2)
+    ring.put(_dev(0))
+    ring.producer_done()  # first producer checks out early
+    ring.put(_dev(1))  # second producer still live
+    assert int(ring.get(timeout=1.0)) == 0
+    ring.producer_done()
+    assert int(ring.get(timeout=1.0)) == 1
+    assert ring.get(timeout=1.0) is CLOSED
+    with pytest.raises(QueueClosed):
+        ring.put(_dev(2))
+    with pytest.raises(ValueError):
+        DeviceTrajectoryRing(depth=0)
+    with pytest.raises(ValueError):
+        DeviceTrajectoryRing(depth=1, producers=0)
+
+
+def test_ring_get_transfers_slot_ownership():
+    """After get() the ring holds no reference: consuming (deleting) the
+    payload cannot disturb later slots."""
+    ring = DeviceTrajectoryRing(depth=2)
+    a, b = _dev(np.arange(3)), _dev(np.arange(3, 6))
+    ring.put(a)
+    ring.put(b)
+    got = ring.get(timeout=1.0)
+    got.delete()  # learner-side donation/retirement of the slot arrays
+    second = ring.get(timeout=1.0)
+    np.testing.assert_array_equal(np.asarray(second), np.arange(3, 6))
+
+
+# ---------------------------------------------------------------------------
+# ping-pong param slot (donation-safe publish)
+# ---------------------------------------------------------------------------
+
+
+def test_ping_pong_slot_snapshots_are_copies():
+    """Actors must never see the learner's working buffers: the slot copies
+    at construction and on publish."""
+    params = {"w": jax.numpy.arange(4, dtype=jax.numpy.float32)}
+    slot = PingPongParamSlot(params, version=0)
+    seen, v = slot.acquire()
+    assert v == 0
+    assert seen["w"] is not params["w"]
+    np.testing.assert_array_equal(np.asarray(seen["w"]), np.asarray(params["w"]))
+    # deleting the learner's original (donation) leaves the snapshot intact
+    params["w"].delete()
+    np.testing.assert_array_equal(np.asarray(seen["w"]), np.arange(4))
+    slot.release(v)
+
+
+def test_ping_pong_reserve_waits_for_readers():
+    """reserve(v) must not hand out buffer v%2 while a reader of its current
+    contents is still live — the race that made donation unsafe."""
+    slot = PingPongParamSlot({"w": jax.numpy.zeros(2)}, version=0)
+    params, v = slot.acquire()  # lease buffer 0 (version 0)
+    assert slot.reserve(2, timeout=0.1) is None  # buffer 0 busy: times out
+    assert slot.reserve(1, timeout=0.1) is not None  # buffer 1 is free
+    done = {}
+
+    def learner():
+        done["dst"] = slot.reserve(2, timeout=5.0)  # blocks on the lease
+
+    t = threading.Thread(target=learner, daemon=True)
+    t.start()
+    time.sleep(0.1)
+    assert "dst" not in done
+    slot.release(v)
+    t.join(timeout=5.0)
+    assert done["dst"] is not None
+
+
+def test_ping_pong_publish_alternates_and_versions():
+    slot = PingPongParamSlot({"w": jax.numpy.zeros(2)}, version=0)
+    for ver in (1, 2, 3):
+        slot.publish({"w": jax.numpy.full((2,), float(ver))}, ver)
+        params, v = slot.acquire()
+        assert v == ver
+        np.testing.assert_array_equal(np.asarray(params["w"]),
+                                      np.full((2,), float(ver)))
+        slot.release(v)
+    assert slot.wait_for(3, timeout=0.1)
+
+
+# ---------------------------------------------------------------------------
+# host staging ring (reusable pinned payload buffers)
+# ---------------------------------------------------------------------------
+
+
+def test_host_staging_ring_recycles_sets():
+    ring = HostStagingRing(3, t_max=2, n_envs=4, obs_shape=(5,))
+    a = ring.acquire()
+    b = ring.acquire()
+    c = ring.acquire()
+    assert ring.free_sets() == 0
+    assert a.traj.obs.shape == (2, 4, 5)
+    assert a.last_obs.shape == (4, 5)
+    ring.release(b)
+    assert ring.acquire() is b  # LIFO reuse of the hot set
+    ring.release(a)
+    ring.release(c)
+
+
+def test_host_staging_ring_acquire_timeout_is_loud():
+    ring = HostStagingRing(2, t_max=1, n_envs=1, obs_shape=())
+    ring.acquire()
+    ring.acquire()
+    with pytest.raises(RuntimeError, match="release"):
+        ring.acquire(timeout=0.1)
+    with pytest.raises(ValueError):
+        HostStagingRing(1, t_max=1, n_envs=1, obs_shape=())
+
+
+# ---------------------------------------------------------------------------
 # pipelined vs sync equivalence (depth 1, lockstep, ρ̄ → ∞)
 # ---------------------------------------------------------------------------
 
@@ -197,6 +396,66 @@ def test_lockstep_vtrace_inf_clips_bitwise_on_host_pool():
     for a, b in zip(jax.tree_util.tree_leaves(rl.params),
                     jax.tree_util.tree_leaves(prl.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(tree)
+
+
+@pytest.mark.parametrize("plane", ["device", "host"])
+def test_ring_depth1_lockstep_bitwise_vs_sync(plane):
+    """The PR-2 bitwise pin extended to the device-resident plane: depth-1
+    lockstep with ρ̄ = c̄ = ∞ reproduces synchronous ``ParallelRL`` params
+    and metrics *bit for bit* on a JAX-native env — through the ring with
+    full params/opt-state donation and the fused publish, and through the
+    forced host plane (whose staging D2H/H2D round trip must be lossless).
+    """
+    agent = PAACAgent(_vector_cfg(GridWorld(8, size=4, max_steps=20)),
+                      PAACConfig(t_max=5))
+    rl = ParallelRL(GridWorld(8, size=4, max_steps=20), agent,
+                    lr_schedule=constant(0.01), seed=1)
+    r_sync = rl.run(10)
+    inf = float("inf")
+    prl = PipelinedRL(
+        GridWorld(8, size=4, max_steps=20), agent,
+        lr_schedule=constant(0.01), seed=1,
+        pipeline=PipelineConfig(queue_depth=1, rho_bar=inf, c_bar=inf,
+                                lockstep=True, rollout_plane=plane),
+    )
+    assert prl._plane == plane
+    r_pipe = prl.run(10)
+    assert r_pipe.mean_metrics["staleness"] == 0.0
+    for k in ("loss", "policy_loss", "value_loss", "entropy", "reward_sum"):
+        assert r_pipe.mean_metrics[k] == r_sync.mean_metrics[k], k
+    for a, b in zip(_leaves(rl.params), _leaves(prl.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_donated_learner_step_deletes_stale_buffers_only():
+    """Donation regression: after a run the learner's pre-run params and opt
+    state are genuinely donated (reading them raises the deleted-buffer
+    RuntimeError), while the actor-facing published snapshot and the
+    learner's live params remain readable — and the backend keeps working
+    (a second run from the survivors)."""
+    env = GridWorld(8, size=4, max_steps=20)
+    agent = PAACAgent(_vector_cfg(env), PAACConfig(t_max=5))
+    prl = PipelinedRL(
+        GridWorld(8, size=4, max_steps=20), agent,
+        lr_schedule=constant(0.01), seed=0,
+        pipeline=PipelineConfig(queue_depth=2),
+    )
+    assert prl._plane == "device"
+    old_params, old_opt = prl.params, prl.opt_state
+    prl.run(4)
+    for leaf in _leaves(old_params) + _leaves(old_opt):
+        assert leaf.is_deleted()
+    with pytest.raises(RuntimeError):
+        np.asarray(_leaves(old_params)[0])
+    # live params and a fresh run still work: nothing the actors lease was
+    # ever donated
+    assert all(not leaf.is_deleted() for leaf in _leaves(prl.params))
+    res = prl.run(3)
+    assert np.isfinite(res.mean_metrics["loss"])
 
 
 def test_async_pipeline_reports_staleness_and_rho():
