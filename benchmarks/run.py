@@ -14,10 +14,12 @@ profile, so a new benchmark cannot land in ``quick``/``full`` while
 silently missing from the CI smoke: any job without a ``ci`` column must be
 listed in ``CI_EXCLUDED`` (with a reason), or the harness refuses to start.
 
-The ``fig2_ring`` job additionally writes ``BENCH_pipeline.json`` (path via
-``--out-json``): the machine-readable steps/s grid for sync vs host-queue
-vs device-ring at actor counts 1/2/4 — the perf trajectory future PRs diff
-against.
+The ``fig2_ring`` and ``fig2_procs`` jobs additionally write
+``BENCH_pipeline.json`` (path via ``--out-json``): the machine-readable
+steps/s grids for sync vs host-queue vs device-ring (``steps_per_s``) and
+thread vs process actor backends on a GIL-holding env
+(``process_actors``), at actor counts 1/2/4 — the perf trajectory future
+PRs diff against.
 """
 from __future__ import annotations
 
@@ -54,6 +56,13 @@ PARAMS = {
         "ci": {"n_e": 8, "obs_dim": 256, "width": 16, "t_max": 2, "iters": 4,
                "warmup": 1, "repeats": 1, "actor_counts": (1, 2)},
     },
+    "fig2_procs": {
+        "quick": {"iters": 12}, "full": {"iters": 40},
+        # tiny but end-to-end: the process backend really spawns workers,
+        # ships specs, and round-trips shm payloads under the ci profile
+        "ci": {"n_e": 2, "n_w": 2, "obs_dim": 16, "width": 32, "t_max": 2,
+               "iters": 3, "actor_counts": (1, 2), "spin": 300, "warmup": 1},
+    },
     "fig34": {
         "quick": {"n_envs_list": (16, 32, 64), "total_steps": 30_000},
         "full": {"n_envs_list": (16, 32, 64, 128, 256),
@@ -75,7 +84,8 @@ CI_EXCLUDED = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="run only these jobs (comma-separated names)")
     ap.add_argument("--profile", choices=("quick", "full", "ci"), default="")
     ap.add_argument("--out-json", default="BENCH_pipeline.json",
                     help="where fig2_ring writes the pipeline steps/s grid")
@@ -101,9 +111,13 @@ def main() -> None:
     )
 
     ring_result = {}
+    procs_result = {}
 
     def fig2_ring_job(**kw):
         ring_result.update(fig2_time_split.run_device_ring(**kw))
+
+    def fig2_procs_job(**kw):
+        procs_result.update(fig2_time_split.run_process_actors(**kw))
 
     runners = {
         "kernels": kernels_bench.run,
@@ -112,14 +126,16 @@ def main() -> None:
         "fig2_pipelined": fig2_time_split.run_pipelined_host,
         "fig2_actors": fig2_time_split.run_multi_actor_host,
         "fig2_ring": fig2_ring_job,
+        "fig2_procs": fig2_procs_job,
         "fig34": fig34_ne_scaling.run,
         "baselines": baselines.run,
         "roofline": roofline.run,
     }
 
     print("name,us_per_call,derived")
+    only = [n for n in args.only.split(",") if n] if args.only else None
     for name, per_profile in PARAMS.items():
-        if args.only and args.only != name:
+        if only is not None and name not in only:
             continue
         if profile not in per_profile:
             continue
@@ -131,13 +147,17 @@ def main() -> None:
             # keep the harness going; record the failure
             print(f"{name},0.0,ERROR={type(e).__name__}:{e}", file=sys.stdout)
 
-    if ring_result:
+    if ring_result or procs_result:
         payload = {
             "bench": "pipeline_planes",
             "profile": profile,
             "unix_time": time.time(),
             **ring_result,
         }
+        if procs_result:
+            # the actor-backend grid (run_process_actors): thread vs
+            # process steps/s over a GIL-holding Python env
+            payload["process_actors"] = procs_result
         with open(args.out_json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")

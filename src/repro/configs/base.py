@@ -75,6 +75,22 @@ class PipelineConfig:
       compare against),
     * ``"auto"`` (default) — device ring for JAX-native envs, host queue for
       ``HostEnvPool``.
+
+    ``actor_backend`` selects where the actor replicas *execute*:
+
+    * ``"thread"`` (default) — replicas are threads in this process. Right
+      whenever env stepping releases the GIL (JAX-native envs, C/C++
+      emulators behind thin bindings) — collection overlaps the learner's
+      jitted update for free.
+    * ``"process"`` — each replica is a worker subprocess owning a private
+      env pool rebuilt from a picklable ``repro.envs.HostEnvSpec`` (live
+      pools cannot cross the boundary). Rollouts ride
+      ``multiprocessing.shared_memory`` staging sets into the parent's
+      ``TrajectoryQueue`` and params broadcast back through a shared-memory
+      ping-pong slot. This is the only backend that scales *GIL-holding*
+      Python emulators (ALE-style wrappers, pure-Python simulators), whose
+      env stepping serializes the thread plane no matter how many replicas
+      run; it implies the host rollout plane.
     """
 
     queue_depth: int = 2
@@ -83,6 +99,7 @@ class PipelineConfig:
     num_actors: int = 1
     lockstep: bool = False
     rollout_plane: str = "auto"  # "auto" | "device" | "host"
+    actor_backend: str = "thread"  # "thread" | "process"
 
 
 # ---------------------------------------------------------------------------

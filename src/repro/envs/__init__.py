@@ -4,7 +4,8 @@ from repro.envs.cartpole import CartPole
 from repro.envs.catch import Catch
 from repro.envs.gridworld import GridWorld
 from repro.envs.base import narrow_vector_env
-from repro.envs.host_env import HostEnvPool, HostEnvShard
+from repro.envs.host_env import HostEnvPool, HostEnvShard, HostEnvSpec
+from repro.envs.pyemu import PyBoundEnv, py_bound_spec
 from repro.envs.token_env import TokenEnv
 from repro.envs.wrappers import FrameStack
 
@@ -16,7 +17,10 @@ __all__ = [
     "GridWorld",
     "HostEnvPool",
     "HostEnvShard",
+    "HostEnvSpec",
+    "PyBoundEnv",
     "narrow_vector_env",
+    "py_bound_spec",
     "TokenEnv",
     "FrameStack",
 ]

@@ -17,17 +17,34 @@ the env stall with learning; ``benchmarks/fig2_time_split.py``'s
 the GIL while stepping external processes, which is exactly what makes the
 overlap real. ``HostEnvPool.shard`` splits the env axis into per-actor
 views for the multi-actor pipeline.
+
+**Picklable env-spec contract** (the multi-process actor plane): a live
+``HostEnvPool`` holds running env instances and a thread executor — neither
+crosses a process boundary. ``HostEnvSpec`` is the picklable *recipe* for a
+pool: a module-level constructor ``env_fn`` plus one positional-args tuple
+per env instance, and the pool kwargs (``n_workers``/``obs_shape``/
+``obs_dtype``). The parent validates picklability loudly before spawning
+(``validate_picklable``), ships the spec to each worker subprocess, and the
+child rebuilds its private pool with ``spec.build()``. ``spec.shard(n)``
+splits the env axis *as specs* — each child owns a full, independent pool
+over its slice, so there is no cross-process executor to share (unlike
+thread-plane ``HostEnvPool.shard``, whose shards borrow the parent's
+workers). Closures and lambdas are rejected: pickle serializes functions by
+module-qualified reference, so ``env_fn`` must be importable in a freshly
+spawned interpreter.
 """
 from __future__ import annotations
 
 import concurrent.futures as cf
-from typing import Callable, List, Sequence, Tuple
+import pickle
+from dataclasses import dataclass, replace as dataclass_replace
+from typing import Any, Callable, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["HostEnvPool", "HostEnvShard"]
+__all__ = ["HostEnvPool", "HostEnvShard", "HostEnvSpec"]
 
 
 class _EnvStepper:
@@ -35,16 +52,31 @@ class _EnvStepper:
 
     Subclasses provide ``envs``, the output buffers ``_obs``/``_reward``/
     ``_done`` (leading axis ``n_envs``), the worker partition ``_slices``
-    (index arrays into ``envs``), and ``_executor()``; ``_init_staging()``
-    preallocates the per-stepper staging snapshot reused by every
-    ``reset``/``step`` call.
+    (index arrays into ``envs``), ``_executor()``, and a ``_closed`` flag
+    (``HostEnvShard`` mirrors its parent's, so closing a pool closes every
+    shard view of it at once).
     """
 
     envs: List
     n_envs: int
+    _closed: bool
 
     def _executor(self) -> cf.ThreadPoolExecutor:
         raise NotImplementedError
+
+    def _check_open(self, op: str) -> None:
+        """Loud guard: stepping a closed pool otherwise dies *inside* the
+        executor with an opaque ``cannot schedule new futures after
+        shutdown`` — indistinguishable from an env crash. Teardown races
+        (actor still draining while the pool closes under it — the
+        multi-process shutdown path in particular) should fail with a
+        message that names the real cause."""
+        if self._closed:
+            raise RuntimeError(
+                f"{type(self).__name__}.{op}() on a closed env pool — the "
+                "pool (or its parent) was close()d while this stepper was "
+                "still in use; stop actors before closing their envs"
+            )
 
     @property
     def obs_dtype(self):
@@ -63,6 +95,7 @@ class _EnvStepper:
 
     def reset(self) -> jnp.ndarray:
         """Reset all envs, partitioned over the worker pool like ``step``."""
+        self._check_open("reset")
         self._submit_slices(self._reset_slice)
         # jnp.array (never asarray) IS the staging copy: one synchronous
         # transfer into a private device buffer the workers can't touch.
@@ -87,6 +120,7 @@ class _EnvStepper:
         — the zero-device-op path used by the pipeline's actor threads,
         which copy rows straight into their own trajectory staging sets.
         """
+        self._check_open("step_host")
         self._submit_slices(self._work, np.asarray(actions))
         return self._obs, self._reward, self._done
 
@@ -180,5 +214,78 @@ class HostEnvShard(_EnvStepper):
         self._slices = np.array_split(np.arange(self.n_envs),
                                       min(n_w, self.n_envs))
 
+    @property
+    def _closed(self) -> bool:
+        # the parent owns envs + executor, so its close() closes every shard
+        return self._parent._closed
+
     def _executor(self) -> cf.ThreadPoolExecutor:
         return self._parent._pool
+
+
+# ---------------------------------------------------------------------------
+# Picklable pool recipe — the multi-process actor plane's env contract
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HostEnvSpec:
+    """Picklable recipe for a ``HostEnvPool`` (module docstring contract).
+
+    ``env_fn`` is a module-level callable; env instance ``i`` is built as
+    ``env_fn(*env_args[i])``. ``build()`` constructs the live pool (in
+    whichever process calls it), ``shard(n)`` splits the env axis into ``n``
+    equal per-actor specs, and ``validate_picklable()`` fails fast — with
+    the offending payload named — before a spawn ships the spec to a child
+    that would die trying to unpickle it.
+    """
+
+    env_fn: Callable
+    env_args: Tuple[Tuple[Any, ...], ...]
+    n_workers: int = 8
+    obs_shape: Tuple[int, ...] = ()
+    obs_dtype: Any = np.float32
+
+    @property
+    def n_envs(self) -> int:
+        return len(self.env_args)
+
+    def build(self) -> HostEnvPool:
+        return HostEnvPool(
+            [lambda a=args: self.env_fn(*a) for args in self.env_args],
+            n_workers=self.n_workers,
+            obs_shape=self.obs_shape,
+            obs_dtype=self.obs_dtype,
+        )
+
+    def shard(self, n: int) -> List["HostEnvSpec"]:
+        """Split the env axis into ``n`` equal per-actor specs.
+
+        Unlike ``HostEnvPool.shard`` (views on one live pool sharing its
+        executor), each spec builds a fully independent pool — the worker
+        subprocess that receives it owns envs, buffers and executor alike.
+        Worker threads are divided proportionally so ``n`` children keep the
+        parent spec's total host concurrency budget."""
+        if n < 1 or self.n_envs % n:
+            raise ValueError(
+                f"cannot shard {self.n_envs} envs into {n} equal actor pools"
+            )
+        size = self.n_envs // n
+        n_w = max(1, self.n_workers // n)
+        return [
+            dataclass_replace(
+                self, env_args=self.env_args[i * size:(i + 1) * size],
+                n_workers=n_w,
+            )
+            for i in range(n)
+        ]
+
+    def validate_picklable(self) -> None:
+        try:
+            pickle.dumps(self)
+        except Exception as e:
+            raise ValueError(
+                "HostEnvSpec must pickle (the process actor plane ships it "
+                "to spawned workers): use a module-level env_fn and plain "
+                f"env_args, not closures/lambdas — pickling failed with: {e!r}"
+            ) from e

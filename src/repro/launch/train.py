@@ -17,7 +17,11 @@ bounding staleness and ``--rho-bar``/``--c-bar`` the V-trace clips on the
 off-policy importance correction. ``--rollout-plane`` picks the trajectory
 queue plane: the device-resident ring (JAX-native envs, donated buffers —
 the fast path) or the host staging queue (external env pools; also the
-GA3C-style baseline for benchmarking JAX envs).
+GA3C-style baseline for benchmarking JAX envs). ``--actor-backend process``
+moves each actor replica into a worker subprocess (shared-memory rollouts
+and param broadcast) — the only backend that scales GIL-holding Python
+emulators; it drives the ``--host-env`` Python-bound emulator pool with
+``--env-spin`` pure-Python work per step.
 
 Examples:
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
@@ -54,11 +58,33 @@ def run_rl(args):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    env = TokenEnv(args.n_envs, vocab=min(cfg.vocab_size, 64), ctx=args.ctx,
-                   k=2, horizon=64)
-    cfg = cfg.replace(num_actions=env.vocab)
-    if cfg.family == "cnn":  # vector/cnn policies act on the raw observation
-        cfg = cfg.replace(obs_shape=env.obs_shape)
+    if args.actor_backend == "process" and not args.pipeline:
+        raise SystemExit(
+            "--actor-backend process is a pipeline backend: add --pipeline "
+            "(the synchronous ParallelRL driver has no actor replicas)"
+        )
+    host_env = args.host_env or args.actor_backend == "process"
+    if host_env:
+        # GIL-holding external-emulator path (repro.envs.pyemu): the regime
+        # --actor-backend process exists for. Needs a policy that acts on
+        # the raw vector observation.
+        if cfg.family != "cnn":
+            raise SystemExit(
+                f"--host-env/--actor-backend process need a vector/cnn "
+                f"policy (e.g. --arch paac_vector), got {args.arch}"
+            )
+        from repro.envs import py_bound_spec
+
+        spec = py_bound_spec(args.n_envs, obs_dim=16, spin=args.env_spin,
+                             n_workers=min(8, args.n_envs))
+        cfg = cfg.replace(obs_shape=spec.obs_shape, num_actions=3)
+        env = spec if args.pipeline else spec.build()
+    else:
+        env = TokenEnv(args.n_envs, vocab=min(cfg.vocab_size, 64),
+                       ctx=args.ctx, k=2, horizon=64)
+        cfg = cfg.replace(num_actions=env.vocab)
+        if cfg.family == "cnn":  # vector/cnn policies act on the raw obs
+            cfg = cfg.replace(obs_shape=env.obs_shape)
     agent = PAACAgent(cfg, PAACConfig(t_max=args.t_max, entropy_beta=0.01))
     if args.pipeline:
         from repro.configs import PipelineConfig
@@ -69,25 +95,33 @@ def run_rl(args):
             pipeline=PipelineConfig(queue_depth=args.queue_depth,
                                     rho_bar=args.rho_bar, c_bar=args.c_bar,
                                     num_actors=args.num_actors,
-                                    rollout_plane=args.rollout_plane),
+                                    rollout_plane=args.rollout_plane,
+                                    actor_backend=args.actor_backend),
         )
     else:
         rl = ParallelRL(env, agent, lr_schedule=constant(args.lr),
                         seed=args.seed)
-    for epoch in range(args.epochs):
-        res = rl.run(args.iterations, log_every=max(args.iterations // 4, 1))
-        log.info(
-            "epoch %d steps=%d mean_reward/iter=%.3f tps=%.0f%s",
-            epoch, res.steps, res.mean_metrics.get("reward_sum", 0.0),
-            res.timesteps_per_sec,
-            (f" staleness={res.mean_metrics.get('staleness', 0.0):.1f}"
-             f" actor_idle={res.actor_idle_s:.2f}s"
-             f" learner_idle={res.learner_idle_s:.2f}s"
-             if args.pipeline else ""),
-        )
-    if args.checkpoint:
-        save_checkpoint(args.checkpoint, rl.total_steps, rl.params)
-        log.info("checkpoint saved to %s", args.checkpoint)
+    try:
+        for epoch in range(args.epochs):
+            res = rl.run(args.iterations,
+                         log_every=max(args.iterations // 4, 1))
+            log.info(
+                "epoch %d steps=%d mean_reward/iter=%.3f tps=%.0f%s",
+                epoch, res.steps, res.mean_metrics.get("reward_sum", 0.0),
+                res.timesteps_per_sec,
+                (f" staleness={res.mean_metrics.get('staleness', 0.0):.1f}"
+                 f" actor_idle={res.actor_idle_s:.2f}s"
+                 f" learner_idle={res.learner_idle_s:.2f}s"
+                 if args.pipeline else ""),
+            )
+        if args.checkpoint:
+            save_checkpoint(args.checkpoint, rl.total_steps, rl.params)
+            log.info("checkpoint saved to %s", args.checkpoint)
+    finally:
+        if hasattr(rl, "close"):
+            rl.close()  # worker subprocesses / spec-built pools
+        elif host_env and not args.pipeline:
+            env.close()
     return rl
 
 
@@ -146,6 +180,17 @@ def main():
                     default="auto",
                     help="trajectory queue plane: device-resident ring "
                     "(JAX envs), host staging queue, or auto by env type")
+    ap.add_argument("--actor-backend", choices=("thread", "process"),
+                    default="thread",
+                    help="where actor replicas run: threads (GIL-free env "
+                    "stepping) or worker subprocesses (GIL-holding Python "
+                    "emulators; implies the host-env path)")
+    ap.add_argument("--host-env", action="store_true",
+                    help="drive the Python-bound emulator pool "
+                    "(repro.envs.pyemu) instead of the JAX TokenEnv")
+    ap.add_argument("--env-spin", type=int, default=2000,
+                    help="pure-Python work per host-env step (GIL-holding "
+                    "emulator cost model)")
     args = ap.parse_args()
     if args.mode == "rl":
         run_rl(args)

@@ -35,6 +35,21 @@ memory) and the GA3C-style baseline for JAX envs (``rollout_plane="host"``)::
                   learner consumes the update)                 learner (H2D
                                                                at dispatch)
 
+Process plane — *GIL-holding* Python emulators (``PipelineConfig.
+actor_backend = "process"``): the host plane's actor replicas moved into
+worker subprocesses, because a Python-bound emulator's ``step`` executes
+bytecode and serializes every thread on the interpreter lock (A3C's and
+Stooke & Abbeel's regime). Each worker rebuilds its env pool from a
+picklable ``repro.envs.HostEnvSpec``, collects into
+``multiprocessing.shared_memory`` staging sets (``ShmStagingSet``, the
+``HostStagingRing`` sizing/lease contract stretched across the process
+boundary), and a parent-side ``ProcessActorDrainer`` wraps the shared
+blocks into the same ``TrajectoryQueue`` payloads — the learner loop
+cannot tell the backends apart. Params broadcast worker-ward through a
+shared-memory ping-pong slot (``ShmParamSlot``) speaking
+``PingPongParamSlot``'s reserve/commit protocol (``repro.pipeline.shm`` /
+``repro.pipeline.worker``).
+
 Each replica owns a private slice of the environments — a single env's axis
 is split N ways (``HostEnvPool.shard`` / ``narrow_vector_env``), or a list
 of envs gives each replica its own full pool (GA3C's n_actors sweep). Every
@@ -87,6 +102,7 @@ Configure via ``repro.configs.PipelineConfig`` (num_actors, queue depth,
 """
 from repro.configs.base import PipelineConfig
 from repro.pipeline.actor import (
+    ActorBase,
     ActorThread,
     HostStagingRing,
     ParamSlot,
@@ -99,8 +115,11 @@ from repro.pipeline.learner import make_learner_step
 from repro.pipeline.orchestrator import PipelinedRL
 from repro.pipeline.queue import CLOSED, QueueClosed, TrajectoryQueue
 from repro.pipeline.ring import DeviceTrajectoryRing
+from repro.pipeline.shm import ShmParamSlot, ShmParamView, ShmStagingSet
+from repro.pipeline.worker import ProcessActorDrainer, ProcessActorPlane
 
 __all__ = [
+    "ActorBase",
     "ActorThread",
     "CLOSED",
     "DeviceTrajectoryRing",
@@ -109,8 +128,13 @@ __all__ = [
     "PingPongParamSlot",
     "PipelineConfig",
     "PipelinedRL",
+    "ProcessActorDrainer",
+    "ProcessActorPlane",
     "QueueClosed",
     "Rollout",
+    "ShmParamSlot",
+    "ShmParamView",
+    "ShmStagingSet",
     "StagingSet",
     "TrajectoryQueue",
     "collect_host",

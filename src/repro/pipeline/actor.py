@@ -51,6 +51,7 @@ __all__ = [
     "HostStagingRing",
     "StagingSet",
     "Rollout",
+    "ActorBase",
     "ActorThread",
     "collect_host",
     "make_collect_fn",
@@ -185,13 +186,25 @@ class PingPongParamSlot(ParamSlot):
             self._version = version
             self._cond.notify_all()
 
-    def publish(self, params: Any, version: int) -> None:
+    def publish(self, params: Any, version: int,
+                timeout: Optional[float] = 60.0) -> None:
         """Unfused publish: copy ``params`` into the alternating buffer.
 
         Convenience path (used when the learner step was not built with
         ``fused_publish``): blocks for the buffer's readers, copies, commits.
-        """
-        self.reserve(version)
+        A reserve timeout means a reader never released its lease — raise
+        loudly rather than fall through to ``commit`` on a still-leased
+        buffer (which would hand actors a tree mutating under them)."""
+        dst = self.reserve(version, timeout=timeout)
+        if dst is None:
+            raise RuntimeError(
+                f"PingPongParamSlot.publish(version={version}): reserve "
+                f"timed out after {timeout}s — buffer {version % 2} is "
+                "still leased (an actor died without release()?)"
+            )
+        assert dst is self._bufs[version % 2], (
+            "reserve() returned a tree that is not the reserved buffer"
+        )
         self.commit(_copy_tree(params), version)
 
 
@@ -218,6 +231,27 @@ class Rollout(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
+def staging_fields(t_max: int, n_envs: int, obs_shape: Tuple[int, ...],
+                   obs_dtype) -> List[Tuple[Tuple[int, ...], np.dtype]]:
+    """The canonical staging-payload layout: ``Transition``'s six fields (in
+    field order) followed by the bootstrap ``last_obs``. Both staging
+    backends build from this one list — ``StagingSet`` as process-private
+    numpy arrays, ``repro.pipeline.shm.ShmStagingSet`` as views into one
+    shared-memory block — so the layouts cannot drift apart."""
+    E = n_envs
+    obs_shape = tuple(obs_shape)
+    obs_dtype = np.dtype(obs_dtype)
+    return [
+        ((t_max, E) + obs_shape, obs_dtype),      # Transition.obs
+        ((t_max, E), np.dtype(np.int32)),         # Transition.action
+        ((t_max, E), np.dtype(np.float32)),       # Transition.reward
+        ((t_max, E), np.dtype(bool)),             # Transition.done
+        ((t_max, E), np.dtype(np.float32)),       # Transition.value
+        ((t_max, E), np.dtype(np.float32)),       # Transition.logp
+        ((E,) + obs_shape, obs_dtype),            # last_obs
+    ]
+
+
 class StagingSet:
     """One reusable host payload: a ``(t_max, E, ...)`` trajectory plus the
     bootstrap observation, written in place row by row during collection."""
@@ -226,16 +260,10 @@ class StagingSet:
 
     def __init__(self, t_max: int, n_envs: int, obs_shape: Tuple[int, ...],
                  obs_dtype):
-        E = n_envs
-        self.traj = Transition(
-            obs=np.zeros((t_max, E) + tuple(obs_shape), obs_dtype),
-            action=np.zeros((t_max, E), np.int32),
-            reward=np.zeros((t_max, E), np.float32),
-            done=np.zeros((t_max, E), bool),
-            value=np.zeros((t_max, E), np.float32),
-            logp=np.zeros((t_max, E), np.float32),
-        )
-        self.last_obs = np.zeros((E,) + tuple(obs_shape), obs_dtype)
+        arrays = [np.zeros(shape, dtype) for shape, dtype in
+                  staging_fields(t_max, n_envs, obs_shape, obs_dtype)]
+        self.traj = Transition(*arrays[:6])
+        self.last_obs = arrays[6]
 
 
 class HostStagingRing:
@@ -291,9 +319,12 @@ def make_host_act_step(act_fn: Callable) -> Callable:
         key, k_act = jax.random.split(key)
         logits, value = act_fn(params, obs)
         action = jax.random.categorical(k_act, logits)
-        logp = jnp.take_along_axis(
-            jax.nn.log_softmax(logits), action[:, None], axis=1
-        )[:, 0]
+        # behaviour log-prob from the sampled action's logit alone (same
+        # gather as core/rollout.step): log π(a|s) = logits[a] − logsumexp.
+        # Gathering first keeps the per-step dispatch from materializing the
+        # full (E, A) log_softmax matrix when one column per row is read.
+        action_logit = jnp.take_along_axis(logits, action[:, None], axis=1)[:, 0]
+        logp = action_logit - jax.scipy.special.logsumexp(logits, axis=1)
         return action, value, logp, key
 
     return act_step
@@ -341,38 +372,33 @@ def collect_host(act_step: Callable, pool, params, obs, key, t_max: int,
     return last, key, traj, last  # final obs is the bootstrap observation
 
 
-class ActorThread(threading.Thread):
-    """One actor replica: collects ``iterations`` rollouts and feeds the
-    shared trajectory queue (host plane) or device ring (device plane).
+class ActorBase(threading.Thread):
+    """Shared replica protocol for both actor backends (thread & process).
 
-    ``collect(params, key) -> (key, traj, last_obs, release)`` encapsulates
-    either collection path with env state captured in the closure; the
-    thread owns the acting RNG key, and ``release`` (or ``None``) rides the
-    payload so the learner can return staging buffers. Params are taken
-    under an ``acquire``/``release`` lease for exactly the duration of the
-    collect — never while blocked on the queue — which is what lets a
-    ping-pong slot reclaim stale buffers without racing this thread. In
-    ``lockstep`` mode the actor waits until the learner has published
-    version i before collecting rollout i (so data is never stale);
-    otherwise it reads the freshest available params and runs ahead up to
-    the queue depth (shared across all replicas).
+    The contract every replica honours, independent of *where* its rollouts
+    are produced (in this thread, or in a worker subprocess this thread
+    drains):
 
-    Shutdown protocol: a replica that finishes its quota (or is ``stop()``ed,
-    or finds the queue closed under it) checks out with ``producer_done()``
-    — the stream closes only after the *last* replica. A replica that dies
-    records the exception and hard-``close()``s the queue so the learner and
-    its siblings unwind promptly instead of deadlocking.
+    * **quota** — produce exactly ``iterations`` payloads (possibly zero:
+      a replica handed quota 0 by an ``iterations < num_actors`` run goes
+      straight to checkout),
+    * **never-drop** — every produced payload is ``_put`` into the shared
+      stream, which blocks (backpressure) rather than discards,
+    * **shutdown** — finishing the quota (or being ``stop()``ed, or finding
+      the stream closed underneath) checks out via ``producer_done()``; the
+      stream closes only after the *last* replica checks out. A replica
+      that dies records its exception and hard-``close()``s the stream so
+      the learner and sibling replicas unwind promptly instead of
+      deadlocking.
+
+    Subclasses implement ``_produce()`` (the body between start and
+    checkout); the base class owns ``_put``, ``stop`` and the
+    error-vs-checkout epilogue.
     """
 
-    def __init__(self, collect: Callable, queue, slot: ParamSlot, key,
-                 iterations: int, lockstep: bool = False, actor_id: int = 0):
+    def __init__(self, queue, actor_id: int = 0):
         super().__init__(name=f"pipeline-actor-{actor_id}", daemon=True)
-        self._collect = collect
         self._queue = queue
-        self._slot = slot
-        self._key = key
-        self._iterations = iterations
-        self._lockstep = lockstep
         self.actor_id = actor_id
         self._stop_requested = threading.Event()
         self.wait_s = 0.0  # time blocked waiting for params (lockstep)
@@ -400,31 +426,12 @@ class ActorThread(threading.Thread):
         finally:
             self.put_wait_s += time.perf_counter() - t0
 
+    def _produce(self) -> None:
+        raise NotImplementedError
+
     def run(self) -> None:
         try:
-            for i in range(self._iterations):
-                if self._lockstep:
-                    t0 = time.perf_counter()
-                    while not self._slot.wait_for(i, timeout=0.1):
-                        if self._stop_requested.is_set():
-                            return
-                    self.wait_s += time.perf_counter() - t0
-                if self._stop_requested.is_set():
-                    return
-                # lease the params only for the collect: released before the
-                # (potentially long) blocking put so the learner's reserve()
-                # wait is bounded by one rollout
-                params, version = self._slot.acquire()
-                try:
-                    self._key, traj, last_obs, release = self._collect(
-                        params, self._key
-                    )
-                finally:
-                    self._slot.release(version)
-                if not self._put(
-                    Rollout(traj, last_obs, version, self.actor_id, i, release)
-                ):
-                    return
+            self._produce()
         except BaseException as e:  # surfaced by the learner loop
             self.error = e
         finally:
@@ -432,3 +439,59 @@ class ActorThread(threading.Thread):
                 self._queue.close()  # abort: wake learner + sibling actors
             else:
                 self._queue.producer_done()
+
+
+class ActorThread(ActorBase):
+    """One in-process actor replica: collects ``iterations`` rollouts on its
+    own thread and feeds the shared trajectory queue (host plane) or device
+    ring (device plane).
+
+    ``collect(params, key) -> (key, traj, last_obs, release)`` encapsulates
+    either collection path with env state captured in the closure; the
+    thread owns the acting RNG key, and ``release`` (or ``None``) rides the
+    payload so the learner can return staging buffers. Params are taken
+    under an ``acquire``/``release`` lease for exactly the duration of the
+    collect — never while blocked on the queue — which is what lets a
+    ping-pong slot reclaim stale buffers without racing this thread. In
+    ``lockstep`` mode the actor waits until the learner has published
+    version i before collecting rollout i (so data is never stale);
+    otherwise it reads the freshest available params and runs ahead up to
+    the queue depth (shared across all replicas).
+
+    Quota/shutdown semantics are ``ActorBase``'s; its process-backend twin
+    (``repro.pipeline.worker.ProcessActorDrainer``) shares them verbatim.
+    """
+
+    def __init__(self, collect: Callable, queue, slot: ParamSlot, key,
+                 iterations: int, lockstep: bool = False, actor_id: int = 0):
+        super().__init__(queue, actor_id)
+        self._collect = collect
+        self._slot = slot
+        self._key = key
+        self._iterations = iterations
+        self._lockstep = lockstep
+
+    def _produce(self) -> None:
+        for i in range(self._iterations):
+            if self._lockstep:
+                t0 = time.perf_counter()
+                while not self._slot.wait_for(i, timeout=0.1):
+                    if self._stop_requested.is_set():
+                        return
+                self.wait_s += time.perf_counter() - t0
+            if self._stop_requested.is_set():
+                return
+            # lease the params only for the collect: released before the
+            # (potentially long) blocking put so the learner's reserve()
+            # wait is bounded by one rollout
+            params, version = self._slot.acquire()
+            try:
+                self._key, traj, last_obs, release = self._collect(
+                    params, self._key
+                )
+            finally:
+                self._slot.release(version)
+            if not self._put(
+                Rollout(traj, last_obs, version, self.actor_id, i, release)
+            ):
+                return

@@ -24,11 +24,24 @@ bitwise snapshot into one of two alternating actor-facing buffers inside
 the same fused dispatch. Actors lease a snapshot for exactly one rollout;
 the learner reuses a stale buffer only after its last reader released.
 
+Orthogonal to the queue plane is the *actor backend* (``PipelineConfig.
+actor_backend``): ``"thread"`` replicas are ``ActorThread``s in this
+process (fine whenever env stepping releases the GIL), while ``"process"``
+moves each replica into a worker subprocess (``repro.pipeline.worker``) —
+the only backend that scales GIL-holding Python emulators. Process workers
+rebuild their env pools from picklable ``HostEnvSpec`` recipes, collect
+into ``multiprocessing.shared_memory`` staging sets, and are drained by
+parent-side ``ProcessActorDrainer`` threads into the same
+``TrajectoryQueue``; params broadcast worker-ward through a shared-memory
+ping-pong slot speaking the same reserve/commit protocol. The learner loop
+below the ``run()`` plane split is byte-for-byte shared between backends.
+
 Each actor replica owns a private slice of the environments: a single env is
 split along the env axis (``HostEnvPool.shard`` for external pools,
-``narrow_vector_env`` for JAX-native envs), or a list of envs gives each
-replica its own full pool (GA3C's n_actors sweep — more emulators hide more
-env latency). With queue depth d the actors collectively run at most d
+``narrow_vector_env`` for JAX-native envs, ``HostEnvSpec.shard`` for
+process workers), or a list of envs gives each replica its own full pool
+(GA3C's n_actors sweep — more emulators hide more env latency). With queue
+depth d the actors collectively run at most d
 rollouts ahead; staleness is bounded by the depth and corrected by the
 learner's full V-trace targets (``PipelineConfig.rho_bar`` / ``c_bar``). In
 ``lockstep`` mode (single actor) the actor always waits for fresh params and
@@ -56,7 +69,7 @@ from repro.configs.base import PipelineConfig
 from repro.core.framework import MetricsAccumulator, RunResult, init_rl_common
 from repro.core.rollout import make_collect_fn
 from repro.envs.base import narrow_vector_env
-from repro.envs.host_env import HostEnvPool, HostEnvShard
+from repro.envs.host_env import HostEnvPool, HostEnvShard, HostEnvSpec
 from repro.pipeline.actor import (
     ActorThread,
     HostStagingRing,
@@ -101,6 +114,27 @@ class PipelinedRL:
             raise ValueError(
                 "lockstep (synchronous semantics) requires num_actors == 1"
             )
+        self._backend = pipeline.actor_backend
+        if self._backend not in ("thread", "process"):
+            raise ValueError(
+                "actor_backend must be 'thread' or 'process', got "
+                f"{pipeline.actor_backend!r}"
+            )
+        self._owned_pools: List = []  # pools built here from HostEnvSpec
+        self._process_plane = None
+        # thread backend accepts HostEnvSpec as sugar: build the pool(s)
+        # here (and own their close()) so everything downstream is uniform
+        if self._backend == "thread":
+            if isinstance(env, HostEnvSpec):
+                env = env.build()
+                self._owned_pools.append(env)
+            elif isinstance(env, (list, tuple)) and any(
+                isinstance(e, HostEnvSpec) for e in env
+            ):
+                env = [e.build() if isinstance(e, HostEnvSpec) else e
+                       for e in env]
+                self._owned_pools.extend(
+                    e for e in env if isinstance(e, HostEnvPool))
         if isinstance(env, (list, tuple)):
             if len(env) != n_actors:
                 raise ValueError(
@@ -113,7 +147,30 @@ class PipelinedRL:
         self.env = env
         self.agent = agent
         self.pipeline = pipeline
-        self._host = hasattr(env, "step_host")
+        if self._backend == "process":
+            # the process plane rebuilds env pools inside worker subprocesses
+            # from picklable specs — live pools can't cross the boundary
+            if not isinstance(env, HostEnvSpec) or any(
+                not isinstance(e, HostEnvSpec)
+                for e in (per_actor_envs or [])
+            ):
+                raise ValueError(
+                    "actor_backend='process' requires a HostEnvSpec (or a "
+                    "per-actor list of them): worker subprocesses rebuild "
+                    "their env pools from the picklable spec — a live "
+                    f"{type(env).__name__} cannot be shipped to a child"
+                )
+            if per_actor_envs is not None:
+                if any(e.n_envs != env.n_envs for e in per_actor_envs):
+                    raise ValueError("per-actor specs must have equal n_envs")
+                self._proc_specs = list(per_actor_envs)
+            else:
+                self._proc_specs = (env.shard(n_actors) if n_actors > 1
+                                    else [env])
+            self._host = True  # process rollouts are born in host shm
+        else:
+            self._proc_specs = None
+            self._host = hasattr(env, "step_host")
         self._plane = self._resolve_plane(pipeline.rollout_plane)
         # shared with ParallelRL — identical RNG layout so a lock-stepped
         # single-actor pipeline reproduces the synchronous run bit-for-bit.
@@ -122,19 +179,32 @@ class PipelinedRL:
                                           seed)
 
         act = agent.act_fn()
-        self._actor_envs, self._actor_obs, self._actor_env_state = \
-            self._split_envs(env, per_actor_envs, n_actors, k_env)
-        if self._host:
-            from repro.pipeline.actor import make_host_act_step
+        if self._backend == "process":
+            # no parent-side acting or env state: each worker owns its pool,
+            # jitted act_step and RNG key. Key layout matches the thread
+            # plane's run(); the single-worker key syncs back after each run.
+            from repro.pipeline.worker import ProcessActorPlane
 
-            self._act = make_host_act_step(act)
-            self._collect_jit = None
-        else:
-            self._act = None
-            # all replicas share one jitted collector (identical shard shapes)
-            self._collect_jit = jax.jit(
-                make_collect_fn(act, self._actor_envs[0], agent.hp.t_max)
+            self._actor_envs = self._actor_obs = self._actor_env_state = None
+            self._act = self._collect_jit = None
+            self._process_plane = ProcessActorPlane(
+                self._proc_specs, agent, pipeline.queue_depth, self.params,
+                self._actor_keys(n_actors),
             )
+        else:
+            self._actor_envs, self._actor_obs, self._actor_env_state = \
+                self._split_envs(env, per_actor_envs, n_actors, k_env)
+            if self._host:
+                from repro.pipeline.actor import make_host_act_step
+
+                self._act = make_host_act_step(act)
+                self._collect_jit = None
+            else:
+                self._act = None
+                # all replicas share one jitted collector (same shard shapes)
+                self._collect_jit = jax.jit(
+                    make_collect_fn(act, self._actor_envs[0], agent.hp.t_max)
+                )
 
         # the fused learner step: dequeue-consume + update + publish in one
         # dispatch. Donated: params and opt state (learner-private — actors
@@ -155,7 +225,9 @@ class PipelinedRL:
         )
         self.total_steps = 0
         # one learned rollout = one actor shard's n_envs·t_max timesteps
-        self._steps_per_iter = self._actor_envs[0].n_envs * agent.hp.t_max
+        shard_envs = (self._proc_specs[0].n_envs if self._proc_specs
+                      else self._actor_envs[0].n_envs)
+        self._steps_per_iter = shard_envs * agent.hp.t_max
         # (actor_id, seq) of every payload consumed by the last run() —
         # the never-drop contract the pipeline tests pin down
         self.learned_ids: List[Tuple[int, int]] = []
@@ -171,8 +243,8 @@ class PipelinedRL:
         if plane == "device" and self._host:
             raise ValueError(
                 "rollout_plane='device' requires a JAX-native env: "
-                "HostEnvPool rollouts are born in host memory and must ride "
-                "the host TrajectoryQueue plane"
+                "HostEnvPool (and process-backend) rollouts are born in "
+                "host memory and must ride the host TrajectoryQueue plane"
             )
         return plane
 
@@ -298,16 +370,26 @@ class PipelinedRL:
         timesteps), fed by ``num_actors`` concurrent actor replicas."""
         n_actors = self.pipeline.num_actors
         queue = self._make_queue(n_actors)
-        slot = PingPongParamSlot(self.params, version=0)
         quota = [iterations // n_actors + (1 if i < iterations % n_actors else 0)
                  for i in range(n_actors)]
-        actors = [
-            ActorThread(
-                self._make_collect(i), queue, slot, key, quota[i],
-                lockstep=self.pipeline.lockstep, actor_id=i,
+        # the actor-plane split: everything below this differs by backend
+        # (thread replicas collecting in-process vs subprocess workers with
+        # parent-side drainers); everything after it is backend-agnostic —
+        # both backends expose the same queue payloads and the same
+        # reserve/commit param-slot protocol to the learner loop.
+        if self._backend == "process":
+            slot, actors = self._process_plane.begin_run(
+                queue, quota, self.pipeline.lockstep, self.params
             )
-            for i, key in enumerate(self._actor_keys(n_actors))
-        ]
+        else:
+            slot = PingPongParamSlot(self.params, version=0)
+            actors = [
+                ActorThread(
+                    self._make_collect(i), queue, slot, key, quota[i],
+                    lockstep=self.pipeline.lockstep, actor_id=i,
+                )
+                for i, key in enumerate(self._actor_keys(n_actors))
+            ]
         # device plane: never sync the learner loop — metric scalars are
         # stashed and converted once at result(), so update i+1 dispatches
         # while update i still executes. Host plane: eager (the blocking
@@ -382,6 +464,20 @@ class PipelinedRL:
                     pass
                 for a in actors:
                     a.join(timeout=0.02)
+            # actors are gone, but the queue may still hold unconsumed
+            # payloads (learner bailed with rollouts buffered): fire their
+            # release() hooks so staging buffers return to their pools —
+            # on the process plane the free-lists persist across run()
+            # calls, and leaked indices would starve the next run.
+            while True:
+                try:
+                    p = queue.get(timeout=0)
+                except _stdlib_queue.Empty:
+                    break
+                if p is CLOSED:
+                    break
+                if getattr(p, "release", None):
+                    p.release()
         errors = [a for a in actors if a.error is not None]
         if errors:
             raise RuntimeError(
@@ -392,7 +488,13 @@ class PipelinedRL:
                 f"pipeline stopped early: {completed}/{iterations} iterations"
             )
         if n_actors == 1:
-            self.key = actors[0]._key
+            if self._backend == "process":
+                # the worker owns the acting key; sync it back so repeated
+                # run() calls continue the same stream the thread plane would
+                if actors[0].final_key is not None:
+                    self.key = jnp.asarray(actors[0].final_key)
+            else:
+                self.key = actors[0]._key
         per_actor_idle = [a.put_wait_s + a.wait_s for a in actors]
         return acc.result(
             self.total_steps,
@@ -401,3 +503,22 @@ class PipelinedRL:
             learner_idle_s=queue.get_wait_s,
             per_actor_idle_s=per_actor_idle,
         )
+
+    # -- teardown (process plane + pools built from specs) -------------------
+    def close(self) -> None:
+        """Release resources this backend *owns*: worker subprocesses and
+        their shared memory (process backend), and any ``HostEnvPool`` built
+        here from a ``HostEnvSpec``. Live pools the caller handed in stay
+        the caller's to close. Idempotent."""
+        if self._process_plane is not None:
+            self._process_plane.close()
+            self._process_plane = None
+        for pool in self._owned_pools:
+            pool.close()
+        self._owned_pools = []
+
+    def __enter__(self) -> "PipelinedRL":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

@@ -1,0 +1,334 @@
+"""Shared-memory plumbing for the multi-process actor plane.
+
+The process backend moves rollout collection into worker subprocesses —
+the only way to scale *GIL-holding* Python emulators, where the thread
+plane's env stepping serializes no matter how many actor replicas run.
+Everything that crosses the process boundary in steady state rides
+``multiprocessing.shared_memory`` so the per-rollout cost is a memcpy, not
+a pickle:
+
+* ``ShmStagingSet`` — the process twin of ``repro.pipeline.actor.
+  StagingSet``: one ``(t_max, E, ...)`` trajectory plus the bootstrap
+  observation, laid out in a single named shared-memory block. The child
+  writes rows in place during collection (``collect_host(staging=...)``)
+  and the parent's drainer wraps *views of the same block* into the
+  ``Rollout`` it feeds the ``TrajectoryQueue`` — the payload is never
+  copied or pickled, only its index is. Sets follow the exact
+  ``HostStagingRing`` sizing/lease contract (``queue_depth + 2`` per
+  actor: depth enqueued + 1 consumed-but-unreleased + 1 being written);
+  the free-list itself lives in an ``mp.Queue`` of set indices (see
+  ``repro.pipeline.worker``), since the lease must hop processes.
+
+* ``ShmParamSlot`` — ``PingPongParamSlot``'s reserve/commit protocol over
+  shared memory: two alternating param buffers, per-buffer cross-process
+  reader counts, and a monotone version, all guarded by one
+  ``mp.Condition``. The learner ``reserve``s buffer ``v % 2`` (blocks
+  until its readers drain), ``commit``s the new params into it (one
+  device→host copy per update) and bumps the version; each worker
+  ``acquire``s a read lease only long enough to copy the newest buffer
+  onto its own device, so the learner's reserve wait is bounded by one
+  param copy — strictly shorter than the thread plane's one-collect bound.
+  ``ShmParamSlot.handle()`` is the picklable half a spawned child rebuilds
+  its ``ShmParamView`` from.
+
+Ownership: the parent creates every segment and is the only process that
+``unlink``s (``ShmStagingSet.unlink`` / ``ShmParamSlot.unlink``); children
+attach by name and only ever ``close`` their mappings. Attach-side
+mappings are untracked (``_attach``) so a child's exit cannot tear down
+segments the parent still serves from.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+from multiprocessing import shared_memory
+
+import jax
+
+from repro.core.rollout import Transition
+from repro.pipeline.actor import staging_fields
+
+__all__ = ["ShmStagingSet", "ShmParamSlot", "ShmParamView"]
+
+_ALIGN = 64  # leaf/field alignment inside a block (cache line)
+
+
+def _attach(name: str) -> shared_memory.SharedMemory:
+    """Attach to an existing segment, untracked where the runtime allows.
+
+    Python 3.13's ``track=False`` skips resource-tracker registration for
+    attachments. On 3.10–3.12 the attach *is* registered (bpo-39959), but
+    workers spawned by ``multiprocessing`` share the parent's tracker
+    process, so the duplicate registration collapses into the parent's own
+    (``cache`` is a set) and teardown stays balanced: do NOT "fix" this by
+    unregistering after attach — that removes the parent's entry from the
+    shared tracker and double-frees at unlink."""
+    try:
+        return shared_memory.SharedMemory(name=name, track=False)
+    except TypeError:  # pragma: no cover - cpython < 3.13
+        return shared_memory.SharedMemory(name=name)
+
+
+def _quiet_close(shm: shared_memory.SharedMemory) -> None:
+    """``shm.close()`` that survives live views. If a numpy view (a carried
+    bootstrap obs, an unconsumed payload riding a reference cycle) still
+    pins the mapping, ``mmap.close`` raises BufferError — and would keep
+    raising from ``SharedMemory.__del__`` at GC time. Detach the
+    bookkeeping instead: drop the handle's mmap/fd so no retry ever fires;
+    the mapping itself is freed when the last view dies (the views hold the
+    mmap object alive until then)."""
+    try:
+        shm.close()
+    except BufferError:
+        shm._mmap = None
+        if getattr(shm, "_fd", -1) >= 0:
+            os.close(shm._fd)
+            shm._fd = -1
+
+
+def _layout(fields: List[Tuple[Tuple[int, ...], np.dtype]]):
+    """(offset per field, total bytes) for one aligned shared block."""
+    offsets, off = [], 0
+    for shape, dtype in fields:
+        off = _ALIGN * math.ceil(off / _ALIGN)
+        offsets.append(off)
+        off += int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+    return offsets, max(off, 1)
+
+
+def _views(shm: shared_memory.SharedMemory, fields, offsets) -> List[np.ndarray]:
+    out = []
+    for (shape, dtype), off in zip(fields, offsets):
+        n = int(np.prod(shape, dtype=np.int64))
+        out.append(
+            np.frombuffer(shm.buf, dtype=dtype, count=n, offset=off)
+            .reshape(shape)
+        )
+    return out
+
+
+class ShmStagingSet:
+    """One reusable cross-process rollout payload in a named shm block.
+
+    Same field set and write-in-place discipline as ``StagingSet`` (the
+    arrays satisfy ``collect_host``'s ``staging=`` contract), but the
+    parent and any child that knows ``self.name`` see the *same* memory.
+    Construct with ``create=True`` (parent, allocates + zero-fills) or
+    ``create=False`` with the creator's ``name`` (child, attaches).
+    """
+
+    def __init__(self, t_max: int, n_envs: int, obs_shape: Tuple[int, ...],
+                 obs_dtype, name: Optional[str] = None, create: bool = True):
+        # the one layout shared with the thread plane's StagingSet
+        fields = staging_fields(t_max, n_envs, obs_shape, obs_dtype)
+        offsets, nbytes = _layout(fields)
+        if create:
+            # POSIX shm is zero-filled on allocation — no memset needed
+            self.shm = shared_memory.SharedMemory(create=True, size=nbytes)
+        else:
+            if name is None:
+                raise ValueError("attaching (create=False) requires a name")
+            self.shm = _attach(name)
+        self.name = self.shm.name
+        self._created = create
+        views = _views(self.shm, fields, offsets)
+        self.traj = Transition(*views[:6])
+        self.last_obs = views[6]
+
+    def close(self) -> None:
+        """Drop this process's mapping. Tolerates live views (the carried
+        bootstrap obs, an unconsumed payload): the mmap then stays pinned
+        until those die with the process, which is exactly the semantics a
+        teardown wants — never a crash in a ``finally``."""
+        self.traj = None
+        self.last_obs = None
+        _quiet_close(self.shm)
+
+    def unlink(self) -> None:
+        """Destroy the segment (creator only, after every mapping closed)."""
+        if self._created:
+            self.shm.unlink()
+
+
+class ShmParamSlot:
+    """Parent half of the cross-process ping-pong param broadcast.
+
+    Mirrors ``PingPongParamSlot``'s learner-side protocol::
+
+        ok = slot.reserve(v)      # blocks until shm readers[v % 2] == 0
+        slot.commit(tree, v)      # shm buffer v%2 <- tree, version = v
+
+    with reader leases taken by worker-side ``ShmParamView.acquire`` /
+    ``release``. ``reserve`` returns ``False`` on timeout (mirroring the
+    thread slot's ``None``), never silently proceeds. The flattened leaf
+    layout (shapes/dtypes/offsets) is fixed at construction from a
+    template tree; ``handle()`` packages it, the two segment names, and
+    the shared synchronization primitives for a spawned child.
+    """
+
+    def __init__(self, template_tree: Any, ctx, version: int = 0):
+        # force real host copies for seeding: np.asarray of a CPU jax array
+        # can alias the device buffer, and the learner donates its initial
+        # params on the very first update
+        flat, treedef = jax.tree_util.tree_flatten(template_tree)
+        leaves = [np.array(l) for l in flat]
+        fields = [(l.shape, l.dtype) for l in leaves]
+        self._fields = fields
+        # what children rebuild the tree from: shape/dtype placeholders with
+        # the original structure — bytes to pickle, not a param-sized copy
+        self._spec_tree = jax.tree_util.tree_unflatten(
+            treedef, [_LeafSpec(s, d) for s, d in fields]
+        )
+        self._offsets, nbytes = _layout(fields)
+        self._shms = [shared_memory.SharedMemory(create=True, size=nbytes)
+                      for _ in range(2)]
+        self._bufs = [_views(s, fields, self._offsets) for s in self._shms]
+        self._cond = ctx.Condition()
+        self._version = ctx.Value("q", version, lock=False)
+        self._readers = [ctx.Value("i", 0, lock=False) for _ in range(2)]
+        for buf in self._bufs:  # version 0 is readable before any commit
+            for dst, src in zip(buf, leaves):
+                np.copyto(dst, src)
+
+    # -- learner side --------------------------------------------------------
+    def reserve(self, version: int, timeout: Optional[float] = None) -> bool:
+        """Claim shm buffer ``version % 2``: wait out its readers."""
+        idx = version % 2
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._readers[idx].value == 0, timeout=timeout
+            )
+
+    def commit(self, tree: Any, version: int) -> None:
+        """Install ``tree`` (device or host) into the reserved buffer and
+        publish ``version`` — one D2H copy per leaf, then notify waiters."""
+        idx = version % 2
+        leaves = [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+        for dst, src in zip(self._bufs[idx], leaves):
+            np.copyto(dst, src)
+        with self._cond:
+            assert self._readers[idx].value == 0, "commit while buffer leased"
+            self._version.value = version
+            self._cond.notify_all()
+
+    def publish(self, tree: Any, version: int,
+                timeout: Optional[float] = 60.0) -> None:
+        """reserve + commit, loud on lease starvation (also the run-start
+        reset path: workers are idle between runs, so rewinding the version
+        to 0 cannot race a reader)."""
+        if not self.reserve(version, timeout=timeout):
+            raise RuntimeError(
+                f"ShmParamSlot.publish(version={version}): reserve timed "
+                f"out after {timeout}s — a worker died holding its lease?"
+            )
+        self.commit(tree, version)
+
+    def handle(self) -> "ShmParamHandle":
+        return ShmParamHandle(
+            names=tuple(s.name for s in self._shms),
+            template=self._spec_tree,
+            cond=self._cond,
+            version=self._version,
+            readers=tuple(self._readers),
+        )
+
+    def close(self) -> None:
+        self._bufs = None
+        for s in self._shms:
+            _quiet_close(s)
+
+    def unlink(self) -> None:
+        for s in self._shms:
+            s.unlink()
+
+
+class _LeafSpec:
+    """Shape/dtype placeholder leaf: lets the param tree's *structure*
+    cross the process boundary without shipping (or pinning) a full host
+    copy of the params — the values already live in the shm buffers."""
+
+    __slots__ = ("shape", "dtype")
+
+    def __init__(self, shape, dtype):
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+
+    def __getstate__(self):
+        return self.shape, self.dtype.str
+
+    def __setstate__(self, state):
+        self.shape = state[0]
+        self.dtype = np.dtype(state[1])
+
+
+class ShmParamHandle:
+    """Picklable ingredients for a worker-side ``ShmParamView``.
+
+    ``template`` is the param tree with every leaf replaced by a
+    ``_LeafSpec`` — structure and layout only, no values."""
+
+    def __init__(self, names, template, cond, version, readers):
+        self.names = names
+        self.template = template
+        self.cond = cond
+        self.version = version
+        self.readers = readers
+
+
+class ShmParamView:
+    """Worker half: lease-bracketed reads of the newest published params.
+
+    ``acquire`` takes the read lease (``readers[v % 2] += 1``) and returns
+    host views of the leased buffer plus its version; the caller copies
+    them out (e.g. onto its device) and ``release``s. ``read_params``
+    packages that into one call returning a fresh jnp tree, holding the
+    lease only for the copy. ``wait_for`` is the lockstep gate.
+    """
+
+    def __init__(self, handle: ShmParamHandle):
+        specs, self._treedef = jax.tree_util.tree_flatten(handle.template)
+        fields = [(s.shape, s.dtype) for s in specs]
+        offsets, _ = _layout(fields)
+        self._shms = [_attach(n) for n in handle.names]
+        self._bufs = [_views(s, fields, offsets) for s in self._shms]
+        self._cond = handle.cond
+        self._version = handle.version
+        self._readers = handle.readers
+
+    def acquire(self) -> Tuple[List[np.ndarray], int]:
+        with self._cond:
+            v = int(self._version.value)
+            self._readers[v % 2].value += 1
+            return self._bufs[v % 2], v
+
+    def release(self, version: int) -> None:
+        with self._cond:
+            self._readers[version % 2].value -= 1
+            assert self._readers[version % 2].value >= 0, "unbalanced release"
+            self._cond.notify_all()
+
+    def read_params(self) -> Tuple[Any, int]:
+        """Newest params as a device tree + their version (lease-bracketed:
+        the copy is the entire critical section)."""
+        import jax.numpy as jnp
+
+        views, version = self.acquire()
+        try:
+            leaves = [jnp.array(v) for v in views]
+        finally:
+            self.release(version)
+        return jax.tree_util.tree_unflatten(self._treedef, leaves), version
+
+    def wait_for(self, version: int, timeout: Optional[float] = None) -> bool:
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._version.value >= version, timeout=timeout
+            )
+
+    def close(self) -> None:
+        self._bufs = None
+        for s in self._shms:
+            _quiet_close(s)

@@ -1,0 +1,372 @@
+"""The multi-process actor plane: worker subprocesses for GIL-bound envs.
+
+The thread plane (``ActorThread``) scales exactly as far as the emulator
+releases the GIL: a C++ simulator stepped through a thin binding overlaps
+fine, but a *Python-bound* emulator (ALE-style wrappers, pure-Python
+simulators) serializes every replica's env stepping on one interpreter
+lock — adding actors adds nothing (A3C and Stooke & Abbeel's accelerated
+methods both reach for processes at this exact wall). This module is the
+third execution plane: ``PipelineConfig.actor_backend = "process"`` puts
+each actor replica in its own interpreter.
+
+Topology (everything below the ``TrajectoryQueue`` is new; everything
+above it — learner loop, V-trace update, ping-pong donation, metrics — is
+untouched)::
+
+    worker subprocess i                     parent process
+    ───────────────────                     ──────────────
+    spec.build() → private HostEnvPool      ProcessActorDrainer i (thread)
+    jitted act_step (own compile)             ready_q.get() → wrap shm views
+    loop: lease params ← ShmParamView         → Rollout → TrajectoryQueue
+          free_q.get() → ShmStagingSet        (ActorBase quota/shutdown/
+          collect_host(staging=set)            never-drop protocol, shared
+          ready_q.put(set index)               verbatim with ActorThread)
+                                            learner: get → update → commit
+    params ← shm ping-pong slot  ◀──────────  (D2H publish once per update)
+
+Wire protocol (per worker, all ``mp.Queue``):
+
+* ``cmd_q``   parent→child: ``("run", quota, lockstep)`` | ``("stop",)``
+* ``ready_q`` child→parent: ``("rollout", set_idx, seq, version)`` …
+  terminated by exactly one of ``("done", final_key)`` (quota finished —
+  graceful checkout), ``("aborted",)`` (stop event honoured), or
+  ``("error", traceback)`` (collection died; the drainer re-raises it so
+  the stream hard-closes exactly like a crashed ``ActorThread``).
+* ``free_q``  both ways: staging-set indices — the cross-process
+  ``HostStagingRing`` lease. The parent seeds ``queue_depth + 2`` indices
+  (the ring's sizing contract), the child acquires before writing, the
+  learner's ``Rollout.release`` returns them after consuming.
+
+Child lifecycle: workers are spawned once per ``PipelinedRL`` (spawn
+context — fork would duplicate JAX runtime state) and persist across
+``run()`` calls so re-runs don't pay the child's jit compile; they are
+daemonic *and* poll ``multiprocessing.parent_process().is_alive()`` in
+every blocking loop, so neither a clean parent exit nor a hard kill
+leaves orphans stepping envs. A worker that dies silently (segfault, OOM
+kill) is detected by its drainer's liveness poll and surfaced as the
+actor error — EOF propagation without deadlock.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import queue as _stdlib_queue
+import traceback
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.envs.host_env import HostEnvSpec
+from repro.pipeline.actor import ActorBase, Rollout, _copy_tree
+from repro.pipeline.shm import ShmParamSlot, ShmStagingSet
+
+__all__ = ["ProcessActorPlane", "ProcessActorDrainer"]
+
+
+def _parent_alive() -> bool:
+    p = mp.parent_process()
+    return p is not None and p.is_alive()
+
+
+def _worker_main(spec: HostEnvSpec, arch_cfg, hp, slot_handle,
+                 set_names: Sequence[str], key_host: np.ndarray,
+                 cmd_q, ready_q, free_q, stop_evt, actor_id: int) -> None:
+    """Child entry point: rebuild the env pool + acting step, then serve
+    ``run`` commands until ``stop`` (or the parent disappears)."""
+    import jax.numpy as jnp  # deferred: spawned child initializes its own JAX
+
+    from repro.core.agents.paac import PAACAgent
+    from repro.pipeline.actor import collect_host, make_host_act_step
+    from repro.pipeline.shm import ShmParamView
+
+    pool = sets = slot = None
+    try:
+        agent = PAACAgent(arch_cfg, hp)
+        act_step = make_host_act_step(agent.act_fn())
+        t_max = hp.t_max
+        pool = spec.build()
+        sets = [
+            ShmStagingSet(t_max, spec.n_envs, spec.obs_shape, spec.obs_dtype,
+                          name=n, create=False)
+            for n in set_names
+        ]
+        slot = ShmParamView(slot_handle)
+        key = jnp.asarray(key_host)
+        obs = pool.reset()
+    except Exception:
+        # setup died (unbuildable env, shm attach failure): report it so the
+        # first begin_run surfaces a traceback, not a bare dead child
+        ready_q.put(("error", traceback.format_exc()))
+        if pool is not None:
+            pool.close()
+        return
+    try:
+        while True:
+            try:
+                cmd = cmd_q.get(timeout=1.0)
+            except _stdlib_queue.Empty:
+                if not _parent_alive():
+                    return  # orphaned: the parent died without "stop"
+                continue
+            if cmd[0] == "stop":
+                return
+            _, quota, lockstep = cmd
+            try:
+                aborted = False
+                for seq in range(quota):
+                    if lockstep:
+                        while not slot.wait_for(seq, timeout=0.1):
+                            if stop_evt.is_set() or not _parent_alive():
+                                aborted = True
+                                break
+                    if aborted or stop_evt.is_set():
+                        aborted = True
+                        break
+                    # params lease is just the copy-out (inside read_params)
+                    params, version = slot.read_params()
+                    idx: Optional[int] = None
+                    while idx is None:  # cross-process staging lease
+                        try:
+                            idx = free_q.get(timeout=0.1)
+                        except _stdlib_queue.Empty:
+                            if stop_evt.is_set() or not _parent_alive():
+                                aborted = True
+                                break
+                    if aborted:
+                        break
+                    try:
+                        obs, key, _traj, _last = collect_host(
+                            act_step, pool, params, obs, key, t_max,
+                            staging=sets[idx],
+                        )
+                    except Exception:
+                        free_q.put(idx)  # don't leak the staging lease
+                        raise
+                    ready_q.put(("rollout", idx, seq, version))
+                if aborted:
+                    ready_q.put(("aborted",))
+                else:
+                    ready_q.put(("done", np.asarray(key)))
+            except Exception:
+                # collection died (env crash, shm torn down, ...): report and
+                # survive — the drainer turns this into the actor error and
+                # the plane decides whether to reuse or stop us.
+                ready_q.put(("error", traceback.format_exc()))
+    finally:
+        pool.close()
+        for s in sets:
+            s.close()
+        slot.close()
+
+
+class _WorkerHandle:
+    """Parent-side bookkeeping for one spawned worker."""
+
+    def __init__(self, actor_id: int, proc, cmd_q, ready_q, free_q, stop_evt,
+                 sets: List[ShmStagingSet]):
+        self.actor_id = actor_id
+        self.proc = proc
+        self.cmd_q = cmd_q
+        self.ready_q = ready_q
+        self.free_q = free_q
+        self.stop_evt = stop_evt
+        self.sets = sets  # parent-side views of the same shm blocks
+
+
+class ProcessActorDrainer(ActorBase):
+    """Parent-side thread standing in for one worker subprocess.
+
+    To everything above the plane split this *is* the actor replica: it
+    honours ``ActorBase``'s quota/shutdown/never-drop protocol (checkout
+    via ``producer_done``, hard ``close()`` on error) — it just sources
+    payloads from its worker's ``ready_q`` instead of collecting them
+    itself, wrapping the named shm staging set each descriptor points at
+    into a zero-copy ``Rollout`` whose ``release`` returns the set index
+    to the worker's free list.
+    """
+
+    def __init__(self, worker: _WorkerHandle, queue):
+        super().__init__(queue, worker.actor_id)
+        self._worker = worker
+        self.final_key: Optional[np.ndarray] = None
+
+    def stop(self) -> None:
+        super().stop()
+        self._worker.stop_evt.set()  # reaches the child's blocking loops
+
+    def _next_msg(self) -> Tuple:
+        while True:
+            try:
+                return self._worker.ready_q.get(timeout=0.1)
+            except _stdlib_queue.Empty:
+                if not self._worker.proc.is_alive():
+                    raise RuntimeError(
+                        f"actor worker {self.actor_id} died without a "
+                        f"message (exitcode "
+                        f"{self._worker.proc.exitcode}) — envs or shm torn "
+                        "down underneath it?"
+                    ) from None
+
+    def _produce(self) -> None:
+        discard = False  # after stop/close: recycle sets, put nothing
+        while True:
+            msg = self._next_msg()
+            kind = msg[0]
+            if kind == "rollout":
+                idx, seq, version = msg[1], msg[2], msg[3]
+                free_q = self._worker.free_q
+                if discard or self._stop_requested.is_set():
+                    free_q.put(idx)  # keep the child's lease flowing
+                    discard = True
+                    continue
+                s = self._worker.sets[idx]
+                if not self._put(Rollout(
+                    s.traj, s.last_obs, version, self.actor_id, seq,
+                    release=(lambda i=idx: free_q.put(i)),
+                )):
+                    free_q.put(idx)
+                    discard = True  # drain to the terminal message
+            elif kind == "done":
+                self.final_key = msg[1]
+                return  # graceful checkout (ActorBase -> producer_done)
+            elif kind == "aborted":
+                return
+            elif kind == "error":
+                raise RuntimeError(
+                    f"actor worker {self.actor_id} failed:\n{msg[1]}"
+                )
+            else:  # pragma: no cover - protocol violation
+                raise RuntimeError(f"unknown worker message {msg!r}")
+
+
+class _ShmSlotBridge:
+    """Learner-facing twin of ``PingPongParamSlot`` for the process plane.
+
+    ``reserve`` waits out the *cross-process* readers of shm buffer
+    ``v % 2`` and hands back the device-side stale buffer (the fused
+    step's donation target, exactly like the thread slot); ``commit``
+    stores the published device copy and lands it in shared memory (the
+    one D2H param copy per update that broadcasting to subprocesses
+    costs). No in-process readers exist, so the device buffers need no
+    reference counting.
+    """
+
+    def __init__(self, params: Any, shm_slot: ShmParamSlot):
+        self._bufs = [_copy_tree(params), _copy_tree(params)]
+        self._shm = shm_slot
+
+    def reserve(self, version: int, timeout: Optional[float] = None):
+        if not self._shm.reserve(version, timeout=timeout):
+            return None
+        return self._bufs[version % 2]
+
+    def commit(self, published: Any, version: int) -> None:
+        self._bufs[version % 2] = published
+        self._shm.commit(published, version)
+
+
+class ProcessActorPlane:
+    """Owner of the worker subprocesses and their shared-memory estate.
+
+    Spawned once per ``PipelinedRL`` (process backend): allocates the
+    param slot + per-worker staging sets, validates and ships each
+    ``HostEnvSpec``, and keeps the children alive across ``run()`` calls.
+    ``begin_run`` rebroadcasts the current params as version 0, hands each
+    worker its quota, and returns the learner-side slot bridge plus one
+    ``ProcessActorDrainer`` per worker; ``close`` is the orderly teardown
+    (stop command, bounded join, terminate stragglers, unlink shm).
+    """
+
+    def __init__(self, specs: Sequence[HostEnvSpec], agent, queue_depth: int,
+                 params: Any, keys: Sequence) -> None:
+        if len(keys) != len(specs):
+            raise ValueError("one RNG key per worker spec required")
+        self._ctx = mp.get_context("spawn")
+        self._slot = ShmParamSlot(params, self._ctx)
+        n_sets = queue_depth + 2  # the HostStagingRing sizing contract
+        self._workers: List[_WorkerHandle] = []
+        self._closed = False
+        try:
+            for i, spec in enumerate(specs):
+                spec.validate_picklable()
+                sets = [
+                    ShmStagingSet(agent.hp.t_max, spec.n_envs,
+                                  spec.obs_shape, spec.obs_dtype)
+                    for _ in range(n_sets)
+                ]
+                cmd_q = self._ctx.Queue()
+                ready_q = self._ctx.Queue()
+                free_q = self._ctx.Queue()
+                for j in range(n_sets):
+                    free_q.put(j)
+                stop_evt = self._ctx.Event()
+                proc = self._ctx.Process(
+                    target=_worker_main,
+                    args=(spec, agent.cfg, agent.hp, self._slot.handle(),
+                          [s.name for s in sets], np.asarray(keys[i]),
+                          cmd_q, ready_q, free_q, stop_evt, i),
+                    name=f"pipeline-worker-{i}",
+                    daemon=True,  # orphan reaping: die with the parent
+                )
+                proc.start()
+                self._workers.append(_WorkerHandle(
+                    i, proc, cmd_q, ready_q, free_q, stop_evt, sets))
+        except BaseException:
+            self.close()
+            raise
+
+    @property
+    def n_workers(self) -> int:
+        return len(self._workers)
+
+    def begin_run(self, queue, quota: Sequence[int], lockstep: bool,
+                  params: Any):
+        """Start one ``run()``'s worth of collection on every worker.
+
+        Returns ``(slot, drainers)`` with ``slot`` speaking the learner
+        loop's reserve/commit protocol. The version counter rewinds to 0
+        each run (workers are idle between runs, so no reader can hold a
+        stale lease across the reset) — identical to the thread plane
+        building a fresh ``PingPongParamSlot`` per run.
+        """
+        if self._closed:
+            raise RuntimeError("begin_run() on a closed ProcessActorPlane")
+        self._slot.publish(params, 0)
+        drainers = []
+        for w, q in zip(self._workers, quota):
+            w.stop_evt.clear()
+            w.cmd_q.put(("run", int(q), bool(lockstep)))
+            drainers.append(ProcessActorDrainer(w, queue))
+        return _ShmSlotBridge(params, self._slot), drainers
+
+    def close(self, join_timeout: float = 10.0) -> None:
+        """Stop workers (politely, then hard) and release the shm estate.
+        Idempotent; safe to call with workers already dead."""
+        if self._closed:
+            return
+        self._closed = True
+        for w in self._workers:
+            w.stop_evt.set()
+            try:
+                w.cmd_q.put(("stop",))
+            except (ValueError, OSError):  # queue already torn down
+                pass
+        for w in self._workers:
+            w.proc.join(timeout=join_timeout)
+            if w.proc.is_alive():  # hung child: reap it hard
+                w.proc.terminate()
+                w.proc.join(timeout=join_timeout)
+        for w in self._workers:
+            for q in (w.cmd_q, w.ready_q, w.free_q):
+                q.cancel_join_thread()
+                q.close()
+            for s in w.sets:
+                s.close()
+                s.unlink()
+        self._slot.close()
+        self._slot.unlink()
+
+    def __del__(self):  # best-effort: never leave orphan shm segments
+        try:
+            self.close(join_timeout=1.0)
+        except Exception:
+            pass

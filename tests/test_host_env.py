@@ -1,8 +1,11 @@
 """HostEnvPool: the paper's n_w-worker path for external environments."""
+import pickle
+
 import numpy as np
 import pytest
 
-from repro.envs import HostEnvPool
+from repro.envs import HostEnvPool, HostEnvSpec
+from repro.envs.pyemu import make_py_bound_env
 
 
 class _ToyEnv:
@@ -111,6 +114,77 @@ def test_host_env_obs_dtype_property():
                      n_workers=2, obs_shape=(1,)) as pool:
         assert pool.obs_dtype == np.float32
         assert pool.shard(2)[0].obs_dtype == np.float32
+
+
+def test_stepping_closed_pool_raises_diagnosable_error():
+    """Regression: step/reset on a closed pool used to die inside the
+    executor with an opaque 'cannot schedule new futures after shutdown' —
+    indistinguishable from an env crash during multi-process teardown."""
+    n = 4
+    pool = HostEnvPool([lambda s=i: _ToyEnv(s) for i in range(n)],
+                       n_workers=2, obs_shape=(1,))
+    pool.reset()
+    shard = pool.shard(2)[0]
+    shard.reset()
+    pool.close()
+    with pytest.raises(RuntimeError, match="closed env pool"):
+        pool.step_host(np.zeros((n,), np.int64))
+    with pytest.raises(RuntimeError, match="closed env pool"):
+        pool.reset()
+    # shards inherit the parent's closed state (parent owns envs + executor)
+    with pytest.raises(RuntimeError, match="closed env pool"):
+        shard.step_host(np.zeros((shard.n_envs,), np.int64))
+    with pytest.raises(RuntimeError, match="closed env pool"):
+        shard.reset()
+    with pytest.raises(RuntimeError, match="closed"):
+        pool.shard(2)
+
+
+# ---------------------------------------------------------------------------
+# HostEnvSpec — the picklable pool recipe (process actor plane contract)
+# ---------------------------------------------------------------------------
+
+
+def test_host_env_spec_builds_equivalent_pool():
+    spec = HostEnvSpec(
+        env_fn=make_py_bound_env,
+        env_args=tuple((i, 3, 0) for i in range(6)),
+        n_workers=2, obs_shape=(3,), obs_dtype=np.float32,
+    )
+    assert spec.n_envs == 6
+    with spec.build() as pool:
+        obs = np.asarray(pool.reset())
+        assert obs.shape == (6, 3)
+        expect = np.array([make_py_bound_env(i, 3, 0).reset()
+                           for i in range(6)])
+        np.testing.assert_array_equal(obs, expect)
+
+
+def test_host_env_spec_shard_partitions_args_and_workers():
+    spec = HostEnvSpec(
+        env_fn=make_py_bound_env,
+        env_args=tuple((i, 2, 0) for i in range(8)),
+        n_workers=4, obs_shape=(2,),
+    )
+    shards = spec.shard(2)
+    assert [s.n_envs for s in shards] == [4, 4]
+    assert shards[0].env_args == spec.env_args[:4]
+    assert shards[1].env_args == spec.env_args[4:]
+    assert all(s.n_workers == 2 for s in shards)  # concurrency budget split
+    with pytest.raises(ValueError):
+        spec.shard(3)  # 8 envs don't split into 3 equal shards
+
+
+def test_host_env_spec_pickles_and_rejects_closures():
+    good = HostEnvSpec(env_fn=make_py_bound_env,
+                       env_args=((0, 2, 0),), obs_shape=(2,))
+    good.validate_picklable()
+    rebuilt = pickle.loads(pickle.dumps(good))
+    assert rebuilt.env_args == good.env_args
+    bad = HostEnvSpec(env_fn=lambda s: _ToyEnv(s), env_args=((0,),),
+                      obs_shape=(1,))
+    with pytest.raises(ValueError, match="module-level"):
+        bad.validate_picklable()
 
 
 def test_host_env_pool_context_manager_and_idempotent_close():

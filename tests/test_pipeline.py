@@ -306,6 +306,21 @@ def test_ping_pong_publish_alternates_and_versions():
     assert slot.wait_for(3, timeout=0.1)
 
 
+def test_ping_pong_publish_raises_loudly_on_leased_buffer():
+    """Regression: publish() used to discard reserve()'s result, so a
+    timed-out reserve fell through to commit on a still-leased buffer —
+    handing actors a tree mutating under them. Now it raises."""
+    slot = PingPongParamSlot({"w": jax.numpy.zeros(2)}, version=0)
+    params, v = slot.acquire()  # lease buffer 0; version-2 publish needs it
+    with pytest.raises(RuntimeError, match="still leased"):
+        slot.publish({"w": jax.numpy.ones(2)}, 2, timeout=0.1)
+    # the leased snapshot was never clobbered mid-lease
+    np.testing.assert_array_equal(np.asarray(params["w"]), np.zeros(2))
+    slot.release(v)
+    slot.publish({"w": jax.numpy.ones(2)}, 2, timeout=0.1)  # now fine
+    assert slot.version == 2
+
+
 # ---------------------------------------------------------------------------
 # host staging ring (reusable pinned payload buffers)
 # ---------------------------------------------------------------------------
@@ -648,6 +663,48 @@ def test_multi_actor_one_crash_propagates_without_deadlock():
         with pytest.raises(RuntimeError, match="actor 1"):
             prl.run(30)
         assert time.perf_counter() - t0 < 60.0  # unwound, not deadlocked
+
+
+def test_host_act_step_logp_matches_rollout_gather():
+    """The fused host acting step computes the behaviour log-prob the same
+    way ``core/rollout.step`` does (gather the sampled logit + logsumexp,
+    never the full log_softmax matrix) — the two acting paths must agree on
+    log π(a|s) for the V-trace ratios to mean the same thing on both."""
+    from repro.models import init_policy
+    from repro.pipeline.actor import make_host_act_step
+
+    cfg = get_config("paac_vector").replace(obs_shape=(3,), num_actions=5)
+    agent = PAACAgent(cfg, PAACConfig(t_max=2))
+    act = agent.act_fn()
+    act_step = make_host_act_step(act)
+    key = jax.random.PRNGKey(0)
+    params = init_policy(jax.random.PRNGKey(1), cfg)
+    obs = jax.random.normal(jax.random.PRNGKey(2), (8, 3))
+    action, value, logp, _ = act_step(params, obs, key)
+    # reference: the full log_softmax gather (the pre-PR-3 formulation)
+    logits, _ = act(params, obs)
+    ref = jax.numpy.take_along_axis(
+        jax.nn.log_softmax(logits), action[:, None], axis=1)[:, 0]
+    np.testing.assert_allclose(np.asarray(logp), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_zero_quota_actors_check_out_cleanly_thread_backend():
+    """iterations < num_actors hands some replicas quota 0: they must check
+    out via producer_done without hanging the stream, and learned_ids still
+    covers every (actor_id, seq) exactly once."""
+    agent = _vector_agent(t_max=2)
+    with HostEnvPool([lambda s=i: _ToyGymEnv(s) for i in range(6)],
+                     n_workers=3, obs_shape=(1,)) as pool:
+        prl = PipelinedRL(
+            pool, agent, lr_schedule=constant(0.003), seed=0,
+            pipeline=PipelineConfig(queue_depth=2, num_actors=3),
+        )
+        t0 = time.perf_counter()
+        res = prl.run(2)  # quota [1, 1, 0]
+        assert time.perf_counter() - t0 < 60.0  # no shutdown hang
+    assert res.steps == 2 * 2 * 2
+    assert sorted(prl.learned_ids) == [(0, 0), (1, 0)]
 
 
 def test_multi_actor_config_validation():
