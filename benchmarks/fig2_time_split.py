@@ -263,6 +263,24 @@ class WideObsJaxEnv(VectorEnv):
         return new, reward, done
 
 
+def _best_of(make_rl, iters: int, warmup: int, repeats: int):
+    """Best steps/s over ``repeats`` fresh runs (plus that run's learner
+    idle time and mean staleness): the multi-thread sweeps' scheduler-noise
+    filter, mirroring ``time_call``'s median for single-program benches —
+    on a small shared CPU the actor/learner threads and XLA's pool
+    oversubscribe the cores, and best-of drops the transients."""
+    best, idle, stale = 0.0, 0.0, 0.0
+    for _ in range(repeats):
+        rl = make_rl()
+        rl.run(max(warmup, 2))  # compile + fill the pipeline
+        res = rl.run(iters)
+        if res.timesteps_per_sec > best:
+            best = res.timesteps_per_sec
+            idle = res.learner_idle_s
+            stale = res.mean_metrics.get("staleness", 0.0)
+    return best, idle, stale
+
+
 def run_device_ring(n_e: int = 16, obs_dim: int = 32768, width: int = 16,
                     t_max: int = 6, iters: int = 40,
                     actor_counts=(1, 2, 4), warmup: int = 4,
@@ -303,18 +321,7 @@ def run_device_ring(n_e: int = 16, obs_dim: int = 32768, width: int = 16,
         return WideObsJaxEnv(n_e, obs_dim)
 
     def best_of(make_rl):
-        best = 0.0
-        idle = 0.0
-        stale = 0.0
-        for _ in range(repeats):
-            rl = make_rl()
-            rl.run(max(warmup, 2))  # compile + fill the pipeline
-            res = rl.run(iters)
-            if res.timesteps_per_sec > best:
-                best = res.timesteps_per_sec
-                idle = res.learner_idle_s
-                stale = res.mean_metrics.get("staleness", 0.0)
-        return best, idle, stale
+        return _best_of(make_rl, iters, warmup, repeats)
 
     results = {"sync": {}, "host": {}, "device": {}}
     tps, _, _ = best_of(lambda: ParallelRL(
@@ -361,6 +368,104 @@ def run_device_ring(n_e: int = 16, obs_dim: int = 32768, width: int = 16,
         "steps_per_s": results,
         "device_vs_host_speedup": {"num_actors": pivot, "speedup": speedup,
                                    "target": target},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mesh plane — device-ring scaling across a ("data",) device mesh
+# ---------------------------------------------------------------------------
+
+
+def run_mesh_ring(n_e: int = 4, obs_dim: int = 128, width: int = 16,
+                  t_max: int = 64, iters: int = 40, mesh_counts=(1, 2, 4),
+                  warmup: int = 3, repeats: int = 3, target: float = 1.3):
+    """Steps/s of the mesh rollout plane at 1/2/4 devices (weak scaling).
+
+    The follow-on rung to ``run_device_ring``: the same device-resident
+    pipeline sharded across a 1-axis ``("data",)`` mesh. Following this
+    file's established sweep shape (per-actor pools — GA3C's "actors scale
+    emulators"), each mesh lane owns its *own* ``n_e``-env pool, so
+    ``mesh=D`` trains on ``D·n_e`` envs per update: the env axis grows with
+    the mesh, which is precisely the scaling a data-parallel mesh buys
+    (Stooke & Abbeel 2018's synchronous multi-GPU regime — more emulators
+    *and* an all-reduced optimizer step, not a faster single stream).
+
+    Run in the *synchronous lockstep* configuration (depth 1, every lane
+    contributes one sub-rollout to every update, zero staleness): that is
+    the regime whose math is invariant in ``D`` — and, on CPU hosts with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``, the one where
+    the scaling is honestly measurable. The run-ahead variant overlaps each
+    lane's next collect with the sharded update, but XLA's CPU collectives
+    rendezvous across *all* device threads, so on an oversubscribed host
+    the all-reduce convoys behind whichever lane is mid-collect (measured
+    ~6x update-latency inflation); lockstep alternates the phases instead.
+    On real accelerator meshes (one core-complex per device) the overlap is
+    free and the run-ahead mesh is the right configuration.
+
+    The latency-bound default shape (thin trunk, deep ``t_max``: a long
+    scan of small per-step programs) is where a CPU host shows the mesh
+    win at all — one device executes its scan serially on one core, so
+    parallel lanes genuinely overlap; compute-bound shapes saturate the
+    host's cores on a single device and bury the scaling. The acceptance
+    figure is steps/s at the largest available mesh vs ``mesh=1`` (target
+    ≥ ``target``); each cell is best-of-``repeats`` (same scheduler-noise
+    filter as the rest of this file). Mesh counts beyond the visible device
+    count are skipped with a note row, so the sweep degrades gracefully on
+    a 1-device host (CI's default) and covers the full grid under the
+    mesh-smoke job's 4 forced host devices.
+    """
+    cfg = get_config("paac_vector").replace(
+        obs_shape=(obs_dim,), num_actions=3, cnn_dense=width, d_model=width
+    )
+    agent = PAACAgent(cfg, PAACConfig(t_max=t_max))
+    n_dev = len(jax.devices())
+    counts = [d for d in mesh_counts if d <= n_dev]
+    skipped = [d for d in mesh_counts if d > n_dev]
+    if skipped:
+        emit(
+            "fig2_time_split/mesh_ring/skipped",
+            0.0,
+            f"mesh_counts={skipped} need more devices (visible={n_dev}); "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=4",
+        )
+
+    results = {}
+    for D in counts:
+        best, idle, _ = _best_of(
+            lambda D=D: PipelinedRL(
+                [WideObsJaxEnv(n_e, obs_dim) for _ in range(D)], agent,
+                lr_schedule=constant(0.003), seed=0,
+                pipeline=PipelineConfig(queue_depth=1, lockstep=True,
+                                        num_actors=D, mesh_shape=D,
+                                        rollout_plane="mesh"),
+            ),
+            iters, warmup, repeats,
+        )
+        results[D] = best
+        steps = D * n_e * t_max  # per-lane pools: the batch grows with D
+        wall = iters * steps / max(best, 1e-9)
+        emit(
+            f"fig2_time_split/mesh_ring/mesh={D}",
+            1e6 * steps / max(best, 1e-9),
+            f"steps_per_s={best:.0f};envs={D * n_e};"
+            f"learner_idle%={100 * idle / max(wall, 1e-9):.0f}",
+        )
+    pivot, base = max(results), min(results)
+    speedup = results[pivot] / max(results[base], 1e-9)
+    emit(
+        "fig2_time_split/mesh_ring_speedup",
+        0.0,
+        f"mesh{pivot}_vs_mesh{base}={speedup:.2f}x (target >={target}x)",
+    )
+    return {
+        "config": {
+            "n_e_per_lane": n_e, "obs_dim": obs_dim, "width": width,
+            "t_max": t_max, "iters": iters, "repeats": repeats,
+            "mesh_counts": counts, "lockstep": True, "queue_depth": 1,
+        },
+        "steps_per_s": results,
+        "mesh_vs_mesh1_speedup": {"mesh": pivot, "baseline_mesh": base,
+                                  "speedup": speedup, "target": target},
     }
 
 
@@ -577,7 +682,8 @@ def run_multi_actor_host(n_e: int = 8, n_w: int = 8, obs_dim: int = 256,
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=("fig2", "pipelined", "multi", "procs"),
+    ap.add_argument("--only",
+                    choices=("fig2", "pipelined", "multi", "procs", "mesh"),
                     default="")
     ap.add_argument("--num-actors", type=int, nargs="+", default=(1, 2, 4),
                     help="actor counts for the multi-actor sweep")
@@ -594,3 +700,5 @@ if __name__ == "__main__":
     if args.only in ("", "procs"):
         run_process_actors(actor_counts=tuple(args.num_actors),
                            **({"iters": args.iters} if args.iters else {}))
+    if args.only in ("", "mesh"):
+        run_mesh_ring(**({"iters": args.iters} if args.iters else {}))

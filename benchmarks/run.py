@@ -63,6 +63,14 @@ PARAMS = {
         "ci": {"n_e": 2, "n_w": 2, "obs_dim": 16, "width": 32, "t_max": 2,
                "iters": 3, "actor_counts": (1, 2), "spin": 300, "warmup": 1},
     },
+    "fig2_mesh": {
+        "quick": {}, "full": {"iters": 120, "repeats": 3},
+        # the ci profile runs whatever mesh counts the visible devices
+        # allow: mesh=1 on a plain runner, the full 1/2/4 grid under the
+        # mesh-smoke job's forced 4 host devices
+        "ci": {"n_e": 2, "obs_dim": 32, "width": 16, "t_max": 8, "iters": 4,
+               "warmup": 1, "repeats": 1},
+    },
     "fig34": {
         "quick": {"n_envs_list": (16, 32, 64), "total_steps": 30_000},
         "full": {"n_envs_list": (16, 32, 64, 128, 256),
@@ -112,12 +120,16 @@ def main() -> None:
 
     ring_result = {}
     procs_result = {}
+    mesh_result = {}
 
     def fig2_ring_job(**kw):
         ring_result.update(fig2_time_split.run_device_ring(**kw))
 
     def fig2_procs_job(**kw):
         procs_result.update(fig2_time_split.run_process_actors(**kw))
+
+    def fig2_mesh_job(**kw):
+        mesh_result.update(fig2_time_split.run_mesh_ring(**kw))
 
     runners = {
         "kernels": kernels_bench.run,
@@ -127,6 +139,7 @@ def main() -> None:
         "fig2_actors": fig2_time_split.run_multi_actor_host,
         "fig2_ring": fig2_ring_job,
         "fig2_procs": fig2_procs_job,
+        "fig2_mesh": fig2_mesh_job,
         "fig34": fig34_ne_scaling.run,
         "baselines": baselines.run,
         "roofline": roofline.run,
@@ -147,17 +160,31 @@ def main() -> None:
             # keep the harness going; record the failure
             print(f"{name},0.0,ERROR={type(e).__name__}:{e}", file=sys.stdout)
 
-    if ring_result or procs_result:
-        payload = {
-            "bench": "pipeline_planes",
-            "profile": profile,
-            "unix_time": time.time(),
-            **ring_result,
-        }
+    if ring_result or procs_result or mesh_result:
+        # merge-on-write: a partial run (e.g. the mesh-smoke job's
+        # `--only fig2_mesh` under forced host devices) refreshes only its
+        # own grid and leaves the other committed rows intact. Each grid
+        # carries its own profile/unix_time stamp so a partial refresh
+        # cannot misattribute the grids it did NOT regenerate; the
+        # file-level stamp belongs to the fig2_ring grid (whose rows live
+        # at the top level for backward compatibility).
+        stamp = {"profile": profile, "unix_time": time.time()}
+        payload = {}
+        try:
+            with open(args.out_json) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            pass
+        payload["bench"] = "pipeline_planes"
+        if ring_result:
+            payload.update({**stamp, **ring_result})
         if procs_result:
             # the actor-backend grid (run_process_actors): thread vs
             # process steps/s over a GIL-holding Python env
-            payload["process_actors"] = procs_result
+            payload["process_actors"] = {**procs_result, **stamp}
+        if mesh_result:
+            # the mesh-plane grid (run_mesh_ring): steps/s at 1/2/4 devices
+            payload["mesh_ring"] = {**mesh_result, **stamp}
         with open(args.out_json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -73,8 +73,13 @@ class PipelineConfig:
       only option for ``HostEnvPool``, whose rollouts are born on the host;
       for JAX-native envs it is the GA3C-style baseline the benchmarks
       compare against),
-    * ``"auto"`` (default) — device ring for JAX-native envs, host queue for
-      ``HostEnvPool``.
+    * ``"mesh"`` — ``MeshTrajectoryRing``: the device plane scaled across a
+      1-axis ``("data",)`` device mesh (see ``mesh_shape`` below); with
+      ``mesh_shape=1`` it is the device ring routed through the mesh
+      machinery on one device — the configuration the bitwise mesh=1
+      lockstep test pins against the flat device plane,
+    * ``"auto"`` (default) — mesh ring when ``mesh_shape > 1``, else device
+      ring for JAX-native envs, host queue for ``HostEnvPool``.
 
     ``actor_backend`` selects where the actor replicas *execute*:
 
@@ -91,6 +96,43 @@ class PipelineConfig:
       Python emulators (ALE-style wrappers, pure-Python simulators), whose
       env stepping serializes the thread plane no matter how many replicas
       run; it implies the host rollout plane.
+
+    ``mesh_shape`` scales the device plane across accelerators:
+    ``mesh_shape=D > 1`` builds a 1-axis ``("data",)`` ``jax.sharding.Mesh``
+    over the first ``D`` devices and partitions the env/batch axis of every
+    rollout over it — one actor lane per device feeds a per-device sub-ring
+    (``MeshTrajectoryRing``), the learner consumes a globally-sharded batch
+    (one sub-rollout from *every* lane per update) and its gradients
+    all-reduce across the data axis (Stooke & Abbeel 2018's multi-GPU
+    synchronous regime). CPU CI exercises it via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+    **Valid combinations** (the plane matrix — everything else raises
+    ``ValueError`` here or in ``PipelinedRL``):
+
+    ====================  ===============  ==========================
+    actor_backend         rollout_plane    mesh_shape
+    ====================  ===============  ==========================
+    thread, JAX env       auto/mesh        1 or D (mesh plane)
+    thread, JAX env       auto/device      1 only (flat device ring)
+    thread, JAX env       host             1 only (GA3C baseline)
+    thread, HostEnvPool   auto/host        1 only (host plane)
+    process, HostEnvSpec  auto/host        1 only (host plane; a
+                                           device plane would require
+                                           rollouts born on-device)
+    ====================  ===============  ==========================
+
+    In particular: the process backend *forces* the host plane (its
+    rollouts are born in worker shared memory), so a device/mesh plane or
+    ``mesh_shape > 1`` with ``actor_backend="process"`` is a contradiction
+    and raises immediately; ``mesh_shape > 1`` likewise rejects
+    ``rollout_plane="host"`` (mesh payloads are device-resident by
+    construction — a sharded rollout on the host queue would force a
+    cross-device gather) and ``rollout_plane="device"`` (the flat
+    single-device ring cannot carry more than one lane — say ``"mesh"`` or
+    ``"auto"``). ``lockstep`` requires a single actor *stream*:
+    ``num_actors == 1``, or the mesh plane (whose lanes are consumed in
+    lockstep sets anyway — one sub-rollout per lane per update).
     """
 
     queue_depth: int = 2
@@ -98,8 +140,40 @@ class PipelineConfig:
     c_bar: float = 1.0
     num_actors: int = 1
     lockstep: bool = False
-    rollout_plane: str = "auto"  # "auto" | "device" | "host"
+    rollout_plane: str = "auto"  # "auto" | "device" | "host" | "mesh"
     actor_backend: str = "thread"  # "thread" | "process"
+    mesh_shape: int = 1  # devices on the ("data",) rollout mesh
+
+    def __post_init__(self):
+        if self.mesh_shape < 1:
+            raise ValueError(f"mesh_shape must be >= 1, got {self.mesh_shape}")
+        if self.mesh_shape > 1:
+            if self.actor_backend == "process":
+                raise ValueError(
+                    "mesh_shape > 1 requires actor_backend='thread': process"
+                    " rollouts are born in host shared memory and cannot ride"
+                    " the device-resident mesh plane"
+                )
+            if self.rollout_plane in ("host", "device"):
+                raise ValueError(
+                    f"mesh_shape={self.mesh_shape} requires rollout_plane="
+                    "'auto' or 'mesh': the host TrajectoryQueue cannot carry"
+                    " a sharded rollout, and the flat single-device ring"
+                    " cannot carry more than one lane"
+                )
+            if self.num_actors not in (1, self.mesh_shape):
+                raise ValueError(
+                    "the mesh plane runs exactly one actor lane per mesh"
+                    f" device: num_actors must be 1 (auto) or mesh_shape"
+                    f"={self.mesh_shape}, got {self.num_actors}"
+                )
+        if self.actor_backend == "process" and self.rollout_plane in (
+                "device", "mesh"):
+            raise ValueError(
+                "actor_backend='process' forces the host rollout plane"
+                " (worker rollouts are born in shared memory); rollout_plane"
+                f"={self.rollout_plane!r} is a contradiction"
+            )
 
 
 # ---------------------------------------------------------------------------

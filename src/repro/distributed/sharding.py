@@ -195,3 +195,38 @@ def to_named(tree_of_specs, mesh: Mesh):
         lambda s: NamedSharding(mesh, s), tree_of_specs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# Rollout sharding — the pipeline's mesh plane (env/batch data parallelism)
+# ---------------------------------------------------------------------------
+#
+# RL trajectories have two canonical layouts: time-major ``(T, E, ...)``
+# (``Transition`` leaves) and batch-leading ``(E, ...)`` (observations,
+# bootstrap obs). The mesh rollout plane partitions exactly one axis — the
+# env axis E — over the mesh's data axes; everything else (time, feature
+# dims) stays unsharded, and the policy params replicate (they are small;
+# the learner's gradient all-reduce over "data" is the only collective).
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement (params, opt state, scalars)."""
+    return NamedSharding(mesh, P())
+
+
+def traj_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Time-major ``(T, E, ...)`` leaf: env axis (dim 1) over the data axes."""
+    if ndim < 2:
+        raise ValueError(f"time-major trajectory leaves are >= 2D, got {ndim}")
+    data = _data_axes(mesh)
+    axes = data if len(data) > 1 else data[0]
+    return NamedSharding(mesh, P(*((None, axes) + (None,) * (ndim - 2))))
+
+
+def batch_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Batch-leading ``(E, ...)`` leaf: env axis (dim 0) over the data axes."""
+    if ndim < 1:
+        raise ValueError("batch-leading leaves are >= 1D")
+    data = _data_axes(mesh)
+    axes = data if len(data) > 1 else data[0]
+    return NamedSharding(mesh, P(*((axes,) + (None,) * (ndim - 1))))

@@ -24,6 +24,28 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_rollout_mesh(n_devices: int = 0):
+    """1-axis ``("data",)`` mesh for the pipeline's mesh rollout plane.
+
+    The RL pipeline (``repro.pipeline``) is pure data parallelism: the env
+    axis of every rollout shards over ``"data"`` and the learner's gradients
+    all-reduce across it, so its mesh has no ``"model"`` axis (the policy
+    networks are small; contrast the production inference mesh above).
+    ``n_devices=0`` takes every visible device; CI exercises multi-device
+    shapes on CPU via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (set *before* the first jax import — device count is fixed at init).
+    """
+    devices = jax.devices()
+    n = n_devices or len(devices)
+    if n > len(devices):
+        raise ValueError(
+            f"mesh_shape={n} but only {len(devices)} device(s) visible — on "
+            "CPU, export XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before the first jax import"
+        )
+    return jax.make_mesh((n,), ("data",), devices=devices[:n])
+
+
 # Hardware constants for the roofline (TPU v5e)
 PEAK_FLOPS_BF16 = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip

@@ -21,7 +21,11 @@ GA3C-style baseline for benchmarking JAX envs). ``--actor-backend process``
 moves each actor replica into a worker subprocess (shared-memory rollouts
 and param broadcast) — the only backend that scales GIL-holding Python
 emulators; it drives the ``--host-env`` Python-bound emulator pool with
-``--env-spin`` pure-Python work per step.
+``--env-spin`` pure-Python work per step. ``--mesh D`` scales the device
+plane across ``D`` accelerators: one actor lane per device feeds a
+per-device sub-ring, the learner consumes a globally-sharded batch and
+all-reduces its gradients over the mesh's data axis (on CPU, expose fake
+devices first: ``XLA_FLAGS=--xla_force_host_platform_device_count=D``).
 
 Examples:
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
@@ -63,6 +67,10 @@ def run_rl(args):
             "--actor-backend process is a pipeline backend: add --pipeline "
             "(the synchronous ParallelRL driver has no actor replicas)"
         )
+    if args.mesh > 1 and not args.pipeline:
+        raise SystemExit(
+            "--mesh is a pipeline (mesh rollout plane) knob: add --pipeline"
+        )
     host_env = args.host_env or args.actor_backend == "process"
     if host_env:
         # GIL-holding external-emulator path (repro.envs.pyemu): the regime
@@ -96,7 +104,8 @@ def run_rl(args):
                                     rho_bar=args.rho_bar, c_bar=args.c_bar,
                                     num_actors=args.num_actors,
                                     rollout_plane=args.rollout_plane,
-                                    actor_backend=args.actor_backend),
+                                    actor_backend=args.actor_backend,
+                                    mesh_shape=args.mesh),
         )
     else:
         rl = ParallelRL(env, agent, lr_schedule=constant(args.lr),
@@ -176,10 +185,17 @@ def main():
                     help="V-trace c̄: clip on the backward-propagation product")
     ap.add_argument("--num-actors", type=int, default=1,
                     help="actor replicas feeding the learner (env axis split)")
-    ap.add_argument("--rollout-plane", choices=("auto", "device", "host"),
+    ap.add_argument("--rollout-plane",
+                    choices=("auto", "device", "host", "mesh"),
                     default="auto",
                     help="trajectory queue plane: device-resident ring "
-                    "(JAX envs), host staging queue, or auto by env type")
+                    "(JAX envs), host staging queue, mesh sub-rings "
+                    "(multi-device), or auto by env type / --mesh")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="mesh rollout plane over this many devices: one "
+                    "actor lane per device, env axis sharded, gradients "
+                    "all-reduced over the mesh's data axis (CPU: set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     ap.add_argument("--actor-backend", choices=("thread", "process"),
                     default="thread",
                     help="where actor replicas run: threads (GIL-free env "

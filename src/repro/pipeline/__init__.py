@@ -35,6 +35,22 @@ memory) and the GA3C-style baseline for JAX envs (``rollout_plane="host"``)::
                   learner consumes the update)                 learner (H2D
                                                                at dispatch)
 
+Mesh plane — the device plane scaled across a multi-device mesh
+(``PipelineConfig.mesh_shape = D``, following Stooke & Abbeel 2018's
+synchronous multi-GPU regime): a 1-axis ``("data",)`` ``jax.sharding.Mesh``
+over ``D`` devices, one actor lane pinned to each. Every lane collects into
+its own per-device sub-ring (``MeshTrajectoryRing`` — the device ring grown
+one sub-ring per device), and ``get()`` reassembles one seq-aligned
+sub-rollout from *every* lane into a single globally-sharded ``Rollout``
+(env axis partitioned over ``"data"`` via
+``jax.make_array_from_single_device_arrays`` — a zero-copy view, no host
+round trip). The learner runs the sharded twin of its update
+(``make_learner_step`` → ``make_sharded_learner_step``): params/opt state
+replicated, batch sharded, per-device partial gradients all-reduced across
+the data axis inside the same fused-publish donated dispatch. CPU CI
+exercises the full grid via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
 Process plane — *GIL-holding* Python emulators (``PipelineConfig.
 actor_backend = "process"``): the host plane's actor replicas moved into
 worker subprocesses, because a Python-bound emulator's ``step`` executes
@@ -49,6 +65,17 @@ cannot tell the backends apart. Params broadcast worker-ward through a
 shared-memory ping-pong slot (``ShmParamSlot``) speaking
 ``PingPongParamSlot``'s reserve/commit protocol (``repro.pipeline.shm`` /
 ``repro.pipeline.worker``).
+
+The three knobs compose along a **valid matrix** (anything else raises a
+``ValueError`` at config or construction time): the thread backend drives
+any plane; the process backend forces the host plane (its rollouts are
+born in worker shared memory — ``rollout_plane="device"``/``"mesh"`` or
+``mesh_shape > 1`` with it is a contradiction); the mesh plane requires
+JAX-native envs and runs exactly one lane per mesh device (``num_actors``
+must be 1 or ``mesh_shape``); and a mesh-sharded rollout that leaks onto
+the host ``TrajectoryQueue`` raises loudly at ``put()`` rather than
+silently forcing a cross-device gather. See ``PipelineConfig``'s docstring
+for the full table.
 
 Each replica owns a private slice of the environments — a single env's axis
 is split N ways (``HostEnvPool.shard`` / ``narrow_vector_env``), or a list
@@ -86,19 +113,24 @@ Modules:
 * ``DeviceTrajectoryRing`` — its device-plane twin: ticket-ordered
   preallocated slots whose payloads never leave the accelerator
   (``repro.pipeline.ring``),
+* ``MeshTrajectoryRing`` — the device ring grown per-device sub-rings for
+  the mesh plane, reassembling lane sub-rollouts into globally-sharded
+  payloads (``repro.pipeline.ring``),
 * ``ActorThread`` / ``ParamSlot`` / ``PingPongParamSlot`` /
   ``HostStagingRing`` / ``collect_host`` — leased double-buffered rollout
   collection for JAX-native envs and ``HostEnvPool``
   (``repro.pipeline.actor``),
 * ``make_learner_step`` — PAAC update with full V-trace staleness
-  correction, optionally fused with the param publish for full donation
-  (``repro.pipeline.learner``),
+  correction, optionally fused with the param publish for full donation;
+  ``make_sharded_learner_step`` is its mesh twin (jit-with-shardings,
+  gradients all-reduced over the data axis — ``repro.pipeline.learner``),
 * ``PipelinedRL`` — orchestrator mirroring ``ParallelRL``'s API
   (``repro.pipeline.orchestrator``).
 
 Configure via ``repro.configs.PipelineConfig`` (num_actors, queue depth,
-ρ̄/c̄, lockstep, rollout_plane); select from the launcher with
-``repro.launch.train --pipeline --num-actors N --rollout-plane device``.
+ρ̄/c̄, lockstep, rollout_plane, actor_backend, mesh_shape); select from the
+launcher with ``repro.launch.train --pipeline --num-actors N
+--rollout-plane device`` / ``--actor-backend process`` / ``--mesh D``.
 """
 from repro.configs.base import PipelineConfig
 from repro.pipeline.actor import (
@@ -111,10 +143,10 @@ from repro.pipeline.actor import (
     StagingSet,
     collect_host,
 )
-from repro.pipeline.learner import make_learner_step
+from repro.pipeline.learner import make_learner_step, make_sharded_learner_step
 from repro.pipeline.orchestrator import PipelinedRL
 from repro.pipeline.queue import CLOSED, QueueClosed, TrajectoryQueue
-from repro.pipeline.ring import DeviceTrajectoryRing
+from repro.pipeline.ring import DeviceTrajectoryRing, MeshTrajectoryRing
 from repro.pipeline.shm import ShmParamSlot, ShmParamView, ShmStagingSet
 from repro.pipeline.worker import ProcessActorDrainer, ProcessActorPlane
 
@@ -124,6 +156,7 @@ __all__ = [
     "CLOSED",
     "DeviceTrajectoryRing",
     "HostStagingRing",
+    "MeshTrajectoryRing",
     "ParamSlot",
     "PingPongParamSlot",
     "PipelineConfig",
@@ -139,4 +172,5 @@ __all__ = [
     "TrajectoryQueue",
     "collect_host",
     "make_learner_step",
+    "make_sharded_learner_step",
 ]

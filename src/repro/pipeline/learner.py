@@ -42,6 +42,19 @@ shape that makes full donation safe — the orchestrator jits it with
 aliases a shape-identical output, so the update is allocation-free in
 steady state), and actors never see a donated buffer because they only
 ever lease the published copies.
+
+``make_sharded_learner_step`` is the mesh twin: the same update jitted with
+``NamedSharding``s over a 1-axis ``("data",)`` rollout mesh — trajectory and
+bootstrap batch sharded along the env axis, params/opt state replicated —
+so XLA's SPMD partitioner turns the batch-mean gradients into per-device
+partial gradients plus an all-reduce across the data axis (Stooke & Abbeel
+2018's synchronous multi-GPU step). The fused-publish donation path is
+preserved verbatim: params, opt state and the stale publish buffer are
+donated replicated trees whose shards alias the outputs shard-for-shard, so
+the sharded update is just as allocation-free as the single-device one. On
+a 1-device mesh the partitioner's annotations are no-ops and the step is
+bit-identical to the flat ``make_learner_step`` jit (pinned by the mesh=1
+lockstep test).
 """
 from __future__ import annotations
 
@@ -162,3 +175,39 @@ def make_learner_step(agent, optimizer, lr_schedule, rho_bar: float = 1.0,
         return params, opt_state, published, metrics
 
     return learner_step
+
+
+def make_sharded_learner_step(agent, optimizer, lr_schedule, mesh,
+                              rho_bar: float = 1.0, c_bar: float = 1.0,
+                              fused_publish: bool = True) -> Callable:
+    """The mesh-plane twin of ``make_learner_step``: jitted with shardings.
+
+    ``mesh`` is a 1-axis ``("data",)`` rollout mesh
+    (``repro.launch.mesh.make_rollout_mesh``). Inputs arrive pre-sharded —
+    the trajectory/bootstrap batch env-axis-partitioned over ``"data"``
+    (``MeshTrajectoryRing.get`` assembles exactly that), params/opt
+    state/publish buffer replicated — and every output is pinned replicated,
+    which is what makes XLA all-reduce the per-device partial gradients
+    across the data axis inside the step. Donation semantics are inherited
+    unchanged from the flat step: with ``fused_publish`` (the orchestrator's
+    configuration) params, opt state and the stale publish target are
+    donated and alias their shard-identical outputs.
+
+    Returns the *jitted* callable (unlike ``make_learner_step``, which
+    leaves jitting to the caller): the sharding spec is part of the step's
+    identity here.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    step = make_learner_step(agent, optimizer, lr_schedule, rho_bar=rho_bar,
+                             c_bar=c_bar, fused_publish=fused_publish)
+    replicated = NamedSharding(mesh, P())
+    # a single sharding broadcasts over the whole output tree: new params,
+    # new opt state, published snapshot and the metric scalars are all
+    # replicated (the batch means/sums inside the loss already force the
+    # cross-device reduction)
+    return jax.jit(
+        step,
+        out_shardings=replicated,
+        donate_argnums=(0, 1, 5) if fused_publish else (0, 1),
+    )

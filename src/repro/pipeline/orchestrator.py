@@ -77,12 +77,34 @@ from repro.pipeline.actor import (
     Rollout,
     collect_host,
 )
-from repro.pipeline.learner import make_learner_step
+from repro.pipeline.learner import make_learner_step, make_sharded_learner_step
 from repro.pipeline.queue import CLOSED, TrajectoryQueue
-from repro.pipeline.ring import DeviceTrajectoryRing
+from repro.pipeline.ring import DeviceTrajectoryRing, MeshTrajectoryRing
 from repro.utils import get_logger
 
 log = get_logger("pipeline")
+
+
+def _device_view(tree, device):
+    """Zero-copy single-device view of a mesh-replicated param tree.
+
+    A fully-replicated global array holds one shard per mesh device;
+    ``addressable_shards[i].data`` *is* the device-local array backing that
+    shard — no copy, no host round trip. Actor lane ``i`` extracts its view
+    under the ping-pong read lease, feeds its single-device collect, and
+    drops it before release, so the learner's donation of the stale buffer
+    can never race a live view (same invariant as the flat device plane).
+    """
+    def leaf(l):
+        for s in l.addressable_shards:
+            if s.device == device:
+                return s.data
+        raise RuntimeError(
+            f"replicated param leaf has no shard on {device} — params are "
+            "not placed on the rollout mesh"
+        )
+
+    return jax.tree_util.tree_map(leaf, tree)
 
 
 class PipelinedRL:
@@ -110,9 +132,24 @@ class PipelinedRL:
         n_actors = pipeline.num_actors
         if n_actors < 1:
             raise ValueError(f"num_actors must be >= 1, got {n_actors}")
-        if pipeline.lockstep and n_actors > 1:
+        # the mesh plane runs one actor lane per mesh device: num_actors is
+        # normalized to mesh_shape (PipelineConfig rejects anything else)
+        self._want_mesh = pipeline.rollout_plane == "mesh" or (
+            pipeline.rollout_plane == "auto" and pipeline.mesh_shape > 1
+        )
+        if self._want_mesh:
+            if pipeline.num_actors not in (1, pipeline.mesh_shape):
+                raise ValueError(
+                    "the mesh plane runs exactly one actor lane per mesh "
+                    f"device: num_actors must be 1 (auto) or mesh_shape="
+                    f"{pipeline.mesh_shape}, got {pipeline.num_actors}"
+                )
+            n_actors = pipeline.mesh_shape
+        if pipeline.lockstep and n_actors > 1 and not self._want_mesh:
             raise ValueError(
-                "lockstep (synchronous semantics) requires num_actors == 1"
+                "lockstep (synchronous semantics) requires num_actors == 1 "
+                "(or the mesh plane, whose lanes are consumed in lockstep "
+                "sets — one sub-rollout per lane per update)"
             )
         self._backend = pipeline.actor_backend
         if self._backend not in ("thread", "process"):
@@ -171,12 +208,31 @@ class PipelinedRL:
         else:
             self._proc_specs = None
             self._host = hasattr(env, "step_host")
+        self._n_actors = n_actors  # mesh plane: one lane per mesh device
         self._plane = self._resolve_plane(pipeline.rollout_plane)
+        if self._plane == "mesh":
+            from repro.launch.mesh import make_rollout_mesh
+
+            self._rollout_mesh = make_rollout_mesh(pipeline.mesh_shape)
+            self._mesh_devices = list(self._rollout_mesh.devices.flat)
+        else:
+            self._rollout_mesh = None
+            self._mesh_devices = None
         # shared with ParallelRL — identical RNG layout so a lock-stepped
         # single-actor pipeline reproduces the synchronous run bit-for-bit.
         (self.optimizer, self.lr_schedule, self.key, k_env, self.params,
          self.opt_state) = init_rl_common(env, agent, optimizer, lr_schedule,
                                           seed)
+        if self._plane == "mesh":
+            # learner state lives replicated on the rollout mesh: every
+            # device holds a full copy, the sharded step's gradient
+            # all-reduce keeps the copies bit-identical, and actor lanes
+            # read their device-local shard view for free
+            from repro.distributed.sharding import replicated_sharding
+
+            repl = replicated_sharding(self._rollout_mesh)
+            self.params = jax.device_put(self.params, repl)
+            self.opt_state = jax.device_put(self.opt_state, repl)
 
         act = agent.act_fn()
         if self._backend == "process":
@@ -194,6 +250,16 @@ class PipelinedRL:
         else:
             self._actor_envs, self._actor_obs, self._actor_env_state = \
                 self._split_envs(env, per_actor_envs, n_actors, k_env)
+            if self._plane == "mesh":
+                # pin each lane's carried state to its mesh device: with all
+                # of a lane's inputs committed there, the shared collect jit
+                # dispatches to that device (one executable per device, all
+                # lanes same shapes) and its outputs land in the lane's
+                # sub-ring already device-resident
+                for i, d in enumerate(self._mesh_devices):
+                    self._actor_obs[i] = jax.device_put(self._actor_obs[i], d)
+                    self._actor_env_state[i] = jax.device_put(
+                        self._actor_env_state[i], d)
             if self._host:
                 from repro.pipeline.actor import make_host_act_step
 
@@ -217,27 +283,49 @@ class PipelinedRL:
         # (nothing output-shaped to alias). The bootstrap obs must NOT be
         # donated on the device plane: the actor carries the same array into
         # its next rollout.
-        self._update_step = jax.jit(
-            make_learner_step(agent, self.optimizer, self.lr_schedule,
-                              rho_bar=pipeline.rho_bar, c_bar=pipeline.c_bar,
-                              fused_publish=True),
-            donate_argnums=(0, 1, 5),
-        )
+        if self._plane == "mesh":
+            # the sharded twin: same math, jitted with shardings, per-device
+            # partial gradients all-reduced over the mesh's data axis
+            self._update_step = make_sharded_learner_step(
+                agent, self.optimizer, self.lr_schedule, self._rollout_mesh,
+                rho_bar=pipeline.rho_bar, c_bar=pipeline.c_bar,
+                fused_publish=True,
+            )
+        else:
+            self._update_step = jax.jit(
+                make_learner_step(agent, self.optimizer, self.lr_schedule,
+                                  rho_bar=pipeline.rho_bar,
+                                  c_bar=pipeline.c_bar, fused_publish=True),
+                donate_argnums=(0, 1, 5),
+            )
         self.total_steps = 0
-        # one learned rollout = one actor shard's n_envs·t_max timesteps
+        # one learned rollout = one actor shard's n_envs·t_max timesteps —
+        # except on the mesh plane, where every update consumes one
+        # sub-rollout from each of the n_actors lanes
         shard_envs = (self._proc_specs[0].n_envs if self._proc_specs
                       else self._actor_envs[0].n_envs)
-        self._steps_per_iter = shard_envs * agent.hp.t_max
+        lanes_per_update = n_actors if self._plane == "mesh" else 1
+        self._steps_per_iter = lanes_per_update * shard_envs * agent.hp.t_max
         # (actor_id, seq) of every payload consumed by the last run() —
-        # the never-drop contract the pipeline tests pin down
+        # the never-drop contract the pipeline tests pin down (mesh payloads
+        # are lane-assembled: actor_id is -1, seq the common lane seq)
         self.learned_ids: List[Tuple[int, int]] = []
 
     # -- queue plane ---------------------------------------------------------
     def _resolve_plane(self, plane: str) -> str:
-        if plane not in ("auto", "device", "host"):
+        if plane not in ("auto", "device", "host", "mesh"):
             raise ValueError(
-                f"rollout_plane must be 'auto', 'device' or 'host', got {plane!r}"
+                "rollout_plane must be 'auto', 'device', 'host' or 'mesh', "
+                f"got {plane!r}"
             )
+        if self._want_mesh:
+            if self._host:
+                raise ValueError(
+                    "rollout_plane='mesh' requires a JAX-native env: "
+                    "HostEnvPool (and process-backend) rollouts are born in "
+                    "host memory and cannot ride per-device sub-rings"
+                )
+            return "mesh"
         if plane == "auto":
             return "host" if self._host else "device"
         if plane == "device" and self._host:
@@ -249,6 +337,9 @@ class PipelinedRL:
         return plane
 
     def _make_queue(self, n_actors: int):
+        if self._plane == "mesh":
+            return MeshTrajectoryRing(self.pipeline.queue_depth,
+                                      self._rollout_mesh)
         if self._plane == "device":
             return DeviceTrajectoryRing(self.pipeline.queue_depth,
                                         producers=n_actors)
@@ -343,6 +434,27 @@ class PipelinedRL:
                     return key, s.traj, s.last_obs, \
                         (lambda: staging.release(s))
 
+            elif self._plane == "mesh":
+                dev = self._mesh_devices[i]
+
+                def collect(params, key):
+                    # params arrive as the leased replicated snapshot; the
+                    # lane consumes its zero-copy device-local view so the
+                    # shared collect jit dispatches on this lane's device
+                    pv = _device_view(params, dev)
+                    env_state, last_obs, key, traj = collect_jit(
+                        pv, self._actor_env_state[i], self._actor_obs[i],
+                        key,
+                    )
+                    # block before the lease is released: the learner may
+                    # donate the stale snapshot the moment readers reach
+                    # zero, so the collect must have fully executed (and the
+                    # view dropped) first — also what bounds in-flight work
+                    jax.block_until_ready(traj.reward)
+                    self._actor_env_state[i] = env_state
+                    self._actor_obs[i] = last_obs
+                    return key, traj, last_obs, None
+
             else:
 
                 def collect(params, key):
@@ -368,10 +480,16 @@ class PipelinedRL:
     def run(self, iterations: int, log_every: int = 0) -> RunResult:
         """Run `iterations` learner updates (each = one shard's n_e·t_max
         timesteps), fed by ``num_actors`` concurrent actor replicas."""
-        n_actors = self.pipeline.num_actors
+        n_actors = self._n_actors
         queue = self._make_queue(n_actors)
-        quota = [iterations // n_actors + (1 if i < iterations % n_actors else 0)
-                 for i in range(n_actors)]
+        if self._plane == "mesh":
+            # every lane contributes one sub-rollout to every update: the
+            # quota is `iterations` per lane, not split across lanes
+            quota = [iterations] * n_actors
+        else:
+            quota = [iterations // n_actors
+                     + (1 if i < iterations % n_actors else 0)
+                     for i in range(n_actors)]
         # the actor-plane split: everything below this differs by backend
         # (thread replicas collecting in-process vs subprocess workers with
         # parent-side drainers); everything after it is backend-agnostic —
@@ -383,19 +501,28 @@ class PipelinedRL:
             )
         else:
             slot = PingPongParamSlot(self.params, version=0)
+            keys = self._actor_keys(n_actors)
+            if self._plane == "mesh":
+                # each lane's RNG stream is pinned to its device so the
+                # collect jit (whose other inputs live there) never pulls
+                # the key across devices
+                keys = [jax.device_put(k, d)
+                        for k, d in zip(keys, self._mesh_devices)]
             actors = [
                 ActorThread(
-                    self._make_collect(i), queue, slot, key, quota[i],
+                    self._make_collect(i),
+                    queue.lane(i) if self._plane == "mesh" else queue,
+                    slot, key, quota[i],
                     lockstep=self.pipeline.lockstep, actor_id=i,
                 )
-                for i, key in enumerate(self._actor_keys(n_actors))
+                for i, key in enumerate(keys)
             ]
         # device plane: never sync the learner loop — metric scalars are
         # stashed and converted once at result(), so update i+1 dispatches
         # while update i still executes. Host plane: eager (the blocking
         # float() conversion is what certifies consume-completion before a
         # staging set is release()d back to its ring).
-        acc = MetricsAccumulator(lazy=self._plane == "device")
+        acc = MetricsAccumulator(lazy=self._plane in ("device", "mesh"))
         self.learned_ids = []
         for a in actors:
             a.start()

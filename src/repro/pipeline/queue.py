@@ -37,6 +37,27 @@ from collections import deque
 from typing import Any, Optional
 
 
+def _assert_host_payload(item: Any) -> None:
+    """Reject mesh-sharded (multi-device) array leaves on the host plane.
+
+    Single-device jax arrays pass (the forced-host baseline stages them down
+    explicitly, and ``np.asarray`` on one device is the intended D2H copy);
+    a leaf spanning several devices means a ``MeshTrajectoryRing`` payload
+    leaked onto the ``TrajectoryQueue`` — raise with the routing fix named.
+    """
+    import jax
+
+    for leaf in jax.tree_util.tree_leaves(item):
+        if isinstance(leaf, jax.Array) and len(leaf.devices()) > 1:
+            raise TypeError(
+                "TrajectoryQueue (host plane) got an array leaf sharded "
+                f"over {len(leaf.devices())} devices — a mesh-plane rollout "
+                "leaked to the host queue. Mesh rollouts must stay on the "
+                "MeshTrajectoryRing (rollout_plane='mesh'); the host plane "
+                "carries numpy/single-device payloads only."
+            )
+
+
 class Closed:
     """Sentinel delivered to a consumer after the stream closes and drains."""
 
@@ -64,13 +85,26 @@ class TrajectoryQueue:
         self._closed = False
         self.put_wait_s = 0.0  # producers idle (queue full), all actors merged
         self.get_wait_s = 0.0  # learner idle (queue empty)
+        self._validated: Any = None  # last payload to pass the plane check
 
     def put(self, item: Any, timeout: Optional[float] = None) -> None:
         """Blocking put; accumulates the time spent waiting on a full queue.
 
         Raises ``QueueClosed`` if the queue is (or becomes, while blocked)
         closed, and stdlib ``queue.Full`` when ``timeout`` elapses first.
+        Raises ``TypeError`` for payloads carrying *multi-device* (sharded)
+        array leaves: a mesh-plane rollout on the host queue is always a
+        plumbing bug — consuming it would force a cross-device gather plus
+        the host round trip both device planes exist to avoid — so it is
+        rejected loudly at the boundary (the ``validate_picklable`` idiom)
+        instead of surfacing as a slow, mysterious ``np.asarray`` deep in
+        the learner.
         """
+        # actors retry a blocked put with short timeouts; the payload is
+        # unchanged across retries, so don't re-walk its tree every 0.1 s
+        if item is not self._validated:
+            _assert_host_payload(item)
+            self._validated = item
         t0 = time.perf_counter()
         try:
             with self._cond:
@@ -84,6 +118,9 @@ class TrajectoryQueue:
                     raise _queue.Full
                 self._items.append(item)
                 self._cond.notify_all()
+            # cache only spans the Full-retry loop — don't retain a
+            # reference to a payload the consumer may since have released
+            self._validated = None
         finally:
             self.put_wait_s += time.perf_counter() - t0
 

@@ -40,6 +40,16 @@ The ring additionally enforces its plane: payloads must be device-resident
 (``jax.Array`` leaves). A numpy leaf on the fast path is a bug — it means a
 host staging step crept back in — and raises ``TypeError`` immediately
 rather than silently re-introducing the round trip.
+
+With a multi-device mesh the ring grows **per-device sub-rings**
+(``MeshTrajectoryRing``): one single-producer ``DeviceTrajectoryRing`` per
+mesh device, each fed by the actor lane pinned to that device, and a
+``get()`` that takes one seq-aligned sub-rollout from *every* lane and
+reassembles them into a single globally-sharded ``Rollout`` via
+``jax.make_array_from_single_device_arrays`` — the env axis partitioned
+over the mesh's ``"data"`` axis with zero host round trips (the global
+array is a view of the per-device buffers, not a copy).
+
 """
 from __future__ import annotations
 
@@ -53,7 +63,7 @@ import numpy as np
 
 from repro.pipeline.queue import CLOSED, QueueClosed
 
-__all__ = ["DeviceTrajectoryRing"]
+__all__ = ["DeviceTrajectoryRing", "MeshTrajectoryRing"]
 
 
 class _Slot:
@@ -196,3 +206,210 @@ class DeviceTrajectoryRing:
         """Total puts accepted over the ring's lifetime (monotone)."""
         with self._cond:
             return self._tail
+
+
+# ---------------------------------------------------------------------------
+# Mesh plane — per-device sub-rings feeding a sharded learner
+# ---------------------------------------------------------------------------
+
+
+class _MeshLane:
+    """One actor lane's view of a ``MeshTrajectoryRing``.
+
+    Exposes the producer half of the queue surface (``put`` /
+    ``producer_done`` / ``close``) bound to the lane's own sub-ring, so
+    ``ActorThread`` drives a mesh lane exactly like any other queue plane.
+    ``put`` additionally enforces the lane's *device* contract: every array
+    leaf must be a single-device array committed to this lane's mesh device
+    — a leaf on the wrong device would silently turn the ``get()``-side
+    reassembly into a cross-device copy (or fail deep inside
+    ``make_array_from_single_device_arrays``), so it raises here, at the
+    boundary, with the lane and device named.
+    """
+
+    def __init__(self, ring: "MeshTrajectoryRing", index: int, device):
+        self._ring = ring
+        self._sub = ring._subs[index]
+        self._index = index
+        self._device = device
+        self._validated: Any = None  # last payload to pass the device check
+
+    def put(self, item: Any, timeout: Optional[float] = None) -> None:
+        # ActorBase._put retries a blocked put with short timeouts; the
+        # payload object is unchanged across retries, so validate it once
+        if item is not self._validated:
+            for leaf in jax.tree_util.tree_leaves(item):
+                if (isinstance(leaf, jax.Array)
+                        and leaf.devices() != {self._device}):
+                    raise TypeError(
+                        f"mesh lane {self._index} (device {self._device}) "
+                        f"got a payload leaf on "
+                        f"{sorted(leaf.devices(), key=str)} — each lane's "
+                        "rollouts must be collected on its own mesh device "
+                        "(actor state mis-pinned?)"
+                    )
+            self._validated = item
+        self._sub.put(item, timeout=timeout)
+        # the cache only needs to survive the Full-retry loop: clearing it
+        # on success keeps the ring's ownership contract intact (a lane
+        # must not pin a consumed rollout's device memory behind a stale
+        # validation reference)
+        self._validated = None
+
+    def producer_done(self) -> None:
+        self._sub.producer_done()
+
+    def close(self) -> None:
+        # a lane abort (actor died) aborts the whole stream: the learner can
+        # never assemble another full batch without this lane
+        self._ring.close()
+
+    @property
+    def put_wait_s(self) -> float:
+        return self._sub.put_wait_s
+
+
+class MeshTrajectoryRing:
+    """Per-device sub-rings + sharded reassembly: the mesh queue plane.
+
+    One single-producer ``DeviceTrajectoryRing`` per device of a 1-axis
+    ``("data",)`` mesh (``repro.launch.mesh.make_rollout_mesh``). Actor lane
+    ``i`` (pinned to ``mesh`` device ``i``) produces into ``lane(i)``;
+    ``get()`` takes the oldest payload from *every* sub-ring — one
+    seq-aligned sub-rollout per lane — and reassembles a single global
+    ``Rollout`` whose array leaves are sharded over the mesh's data axis via
+    ``jax.make_array_from_single_device_arrays``: a zero-copy view of the
+    per-device buffers, never a host (or cross-device) transfer. Sole-slot
+    ownership transfers exactly as in the flat ring — after ``get()`` the
+    assembled global array holds the only references, so the buffers return
+    to their device allocators the moment the sharded learner step retires
+    them.
+
+    Payload contract: items are ``repro.pipeline.actor.Rollout``s with
+    time-major ``(T, E, ...)`` trajectory leaves and batch-leading
+    ``(E, ...)`` ``last_obs``; every lane must produce identical shapes
+    (equal env shards). The assembled rollout spans ``(T, D*E, ...)`` /
+    ``(D*E, ...)``, carries ``actor_id=-1`` (mesh-global), the common seq,
+    and the *minimum* behaviour version across lanes (staleness reports the
+    worst lane). Backpressure is per-lane (each sub-ring blocks its own
+    producer at ``depth``); ``close()`` aborts every lane, and the stream
+    ends (``CLOSED``) once all lanes' producers checked out and drained.
+    """
+
+    def __init__(self, depth: int, mesh):
+        from repro.distributed.sharding import batch_sharding, traj_sharding
+
+        if tuple(mesh.axis_names) != ("data",):
+            raise ValueError(
+                f"MeshTrajectoryRing needs a 1-axis ('data',) rollout mesh "
+                f"(make_rollout_mesh), got axes {tuple(mesh.axis_names)}"
+            )
+        self.mesh = mesh
+        self.devices = list(mesh.devices.flat)
+        self.depth = depth
+        self._subs = [DeviceTrajectoryRing(depth, producers=1)
+                      for _ in self.devices]
+        self._lanes = [_MeshLane(self, i, d)
+                       for i, d in enumerate(self.devices)]
+        self._traj_sharding = lambda ndim: traj_sharding(mesh, ndim)
+        self._batch_sharding = lambda ndim: batch_sharding(mesh, ndim)
+        # sub-rollouts already popped for a batch whose later lanes timed
+        # out: resumed by the next get() (single consumer), so a timeout can
+        # never lose a lane's payload or desynchronize the seq streams
+        self._pending: List[Any] = []
+        self.get_wait_s = 0.0  # learner idle (any lane empty)
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self._subs)
+
+    def lane(self, i: int) -> _MeshLane:
+        """The producer facade actor lane ``i`` drives (device ``i``)."""
+        return self._lanes[i]
+
+    @property
+    def put_wait_s(self) -> float:
+        """Merged producer idle time across all lanes."""
+        return sum(s.put_wait_s for s in self._subs)
+
+    def qsize(self) -> int:
+        """Complete batches ready to assemble (min over lanes)."""
+        return min(s.qsize() for s in self._subs)
+
+    @property
+    def tickets_issued(self) -> int:
+        """Per-lane accepted put counts (the never-drop audit surface)."""
+        return [s.tickets_issued for s in self._subs]
+
+    def _assemble(self, parts: List[Any]):
+        """Zero-copy reassembly: D per-device Rollouts -> one sharded one."""
+        from repro.pipeline.actor import Rollout
+
+        D = len(parts)
+        seqs = [p.seq for p in parts]
+        assert len(set(seqs)) == 1, (
+            f"mesh lanes desynchronized: per-lane seqs {seqs} — each lane "
+            "must contribute exactly one sub-rollout per learner update"
+        )
+
+        def leaf(*ls):
+            l0 = ls[0]
+            gshape = (l0.shape[0], l0.shape[1] * D) + l0.shape[2:]
+            return jax.make_array_from_single_device_arrays(
+                gshape, self._traj_sharding(l0.ndim), list(ls)
+            )
+
+        traj = jax.tree_util.tree_map(leaf, *[p.traj for p in parts])
+        l0 = parts[0].last_obs
+        last_obs = jax.make_array_from_single_device_arrays(
+            (l0.shape[0] * D,) + l0.shape[1:],
+            self._batch_sharding(l0.ndim),
+            [p.last_obs for p in parts],
+        )
+        return Rollout(
+            traj=traj,
+            last_obs=last_obs,
+            behavior_version=min(p.behavior_version for p in parts),
+            actor_id=-1,  # mesh-global: assembled from every lane
+            seq=seqs[0],
+            release=None,  # device plane: the learner's consume retires it
+        )
+
+    def get(self, timeout: Optional[float] = None) -> Any:
+        """One sharded ``Rollout`` assembled from every lane's oldest slot.
+
+        Blocks until *all* lanes have a payload (the sharded learner step
+        needs every shard), accumulating learner idle time. Returns
+        ``CLOSED`` once any lane is closed-and-drained — a partial batch can
+        never be consumed, so remaining sub-rollouts on other lanes are
+        discarded (device arrays; their buffers just return to the
+        allocator). Raises stdlib ``queue.Empty`` on timeout.
+        """
+        t0 = time.perf_counter()
+        deadline = None if timeout is None else t0 + timeout
+        parts = self._pending
+        try:
+            for sub in self._subs[len(parts):]:
+                remaining = (None if deadline is None
+                             else max(deadline - time.perf_counter(), 0.0))
+                item = sub.get(timeout=remaining)
+                if item is CLOSED:
+                    self.close()  # no lane can complete a batch anymore
+                    self._pending = []
+                    return CLOSED
+                parts.append(item)
+            self._pending = []
+            return self._assemble(parts)
+        finally:
+            self.get_wait_s += time.perf_counter() - t0
+
+    def producer_done(self) -> None:
+        raise RuntimeError(
+            "producer_done() on the mesh ring itself — actors check out "
+            "through their lane: ring.lane(i).producer_done()"
+        )
+
+    def close(self) -> None:
+        """Hard abort: closes every lane's sub-ring. Idempotent."""
+        for sub in self._subs:
+            sub.close()

@@ -1,0 +1,433 @@
+"""Mesh rollout plane: config matrix, sub-ring contracts, sharded learner.
+
+Pins the tentpole contracts of the multi-device plane:
+
+* ``PipelineConfig`` rejects every invalid plane/backend/mesh combination
+  with a diagnosable ``ValueError`` (the documented matrix),
+* ``MeshTrajectoryRing`` sub-rings transfer per-device slot ownership,
+  apply per-lane backpressure, abort every lane on ``close()``, and
+  reassemble seq-aligned sub-rollouts into one globally-sharded ``Rollout``
+  with zero host round trips,
+* a sharded rollout leaking onto the host ``TrajectoryQueue`` raises loudly
+  at the ``put`` boundary (the ``validate_picklable`` idiom),
+* mesh=1 depth-1 lockstep reproduces the flat device plane (and therefore
+  synchronous ``ParallelRL``) **bitwise** through the sharded learner step,
+* at mesh=2 the sharded learner step matches the replicated (flat) step
+  numerically (allclose — the gradient all-reduce changes float order),
+* mesh=2 end-to-end: zero staleness at lockstep, every lane contributes
+  exactly one sub-rollout per update (never-drop).
+
+Multi-device cases skip unless >= 2 devices are visible; the mesh-smoke CI
+job runs this file under ``XLA_FLAGS=--xla_force_host_platform_device_count
+=4`` so the full grid executes there. mesh=1 cases run everywhere.
+"""
+import queue as stdq
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PipelineConfig, get_config
+from repro.core import ParallelRL
+from repro.core.agents import PAACAgent, PAACConfig
+from repro.core.rollout import Transition
+from repro.envs import GridWorld
+from repro.launch.mesh import make_rollout_mesh
+from repro.optim import constant, make_optimizer
+from repro.pipeline import (
+    CLOSED,
+    MeshTrajectoryRing,
+    PipelinedRL,
+    QueueClosed,
+    Rollout,
+    TrajectoryQueue,
+)
+from repro.pipeline.learner import make_learner_step, make_sharded_learner_step
+
+needs2 = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=N; the mesh-smoke CI job sets it)",
+)
+
+
+# ---------------------------------------------------------------------------
+# config matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    dict(mesh_shape=0),
+    dict(mesh_shape=2, actor_backend="process"),
+    dict(mesh_shape=2, rollout_plane="host"),
+    dict(mesh_shape=2, rollout_plane="device"),
+    dict(mesh_shape=2, num_actors=3),
+    dict(actor_backend="process", rollout_plane="device"),
+    dict(actor_backend="process", rollout_plane="mesh"),
+])
+def test_pipeline_config_rejects_invalid_combos(kw):
+    with pytest.raises(ValueError):
+        PipelineConfig(**kw)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(mesh_shape=2),
+    dict(mesh_shape=4, num_actors=4),
+    dict(mesh_shape=2, rollout_plane="mesh"),
+    dict(rollout_plane="mesh"),  # 1-lane mesh: the bitwise-pin config
+    dict(mesh_shape=2, lockstep=True),
+])
+def test_pipeline_config_accepts_valid_combos(kw):
+    cfg = PipelineConfig(**kw)
+    assert cfg.mesh_shape == kw.get("mesh_shape", 1)
+
+
+def test_make_rollout_mesh_overflow_names_the_flag():
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_rollout_mesh(len(jax.devices()) + 1)
+
+
+def test_mesh_lockstep_with_lanes_is_accepted():
+    """lockstep + multiple lanes is valid on the mesh plane only."""
+    with pytest.raises(ValueError):
+        PipelinedRL(
+            GridWorld(8, size=4, max_steps=10),
+            PAACAgent(_vector_cfg(GridWorld(8, size=4, max_steps=10)),
+                      PAACConfig(t_max=3)),
+            pipeline=PipelineConfig(num_actors=2, lockstep=True),
+        )
+
+
+def test_mesh1_plane_rejects_extra_actors():
+    """rollout_plane='mesh' with mesh_shape=1 cannot carry >1 actor stream
+    (one lane per device) — rejected loudly, not silently normalized."""
+    with pytest.raises(ValueError, match="one actor lane per mesh"):
+        PipelinedRL(
+            GridWorld(8, size=4, max_steps=10),
+            PAACAgent(_vector_cfg(GridWorld(8, size=4, max_steps=10)),
+                      PAACConfig(t_max=3)),
+            pipeline=PipelineConfig(num_actors=4, rollout_plane="mesh"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# sub-ring contracts
+# ---------------------------------------------------------------------------
+
+
+def _rollout_on(device, seq=0, t=3, e=2, obs=4, fill=1.0, version=0):
+    """A device-committed Rollout with time-major (t, e, ...) leaves."""
+    traj = Transition(
+        obs=jnp.full((t, e, obs), fill, jnp.float32),
+        action=jnp.zeros((t, e), jnp.int32),
+        reward=jnp.full((t, e), fill, jnp.float32),
+        done=jnp.zeros((t, e), bool),
+        value=jnp.zeros((t, e), jnp.float32),
+        logp=jnp.zeros((t, e), jnp.float32),
+    )
+    traj = jax.device_put(traj, device)
+    last = jax.device_put(jnp.full((e, obs), fill, jnp.float32), device)
+    return Rollout(traj, last, version, 0, seq, None)
+
+
+def test_mesh_ring_requires_data_axis_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="1-axis"):
+        MeshTrajectoryRing(2, mesh)
+
+
+def test_mesh1_ring_roundtrip_and_ownership():
+    """1-lane mesh ring: put/get roundtrip; get() leaves the sub-ring's
+    slot free (sole ownership transferred to the assembled payload)."""
+    ring = MeshTrajectoryRing(2, make_rollout_mesh(1))
+    dev = ring.devices[0]
+    ring.lane(0).put(_rollout_on(dev, seq=0, fill=3.0))
+    out = ring.get(timeout=5.0)
+    assert isinstance(out, Rollout)
+    assert out.seq == 0 and out.actor_id == -1 and out.release is None
+    np.testing.assert_array_equal(np.asarray(out.traj.reward),
+                                  np.full((3, 2), 3.0))
+    assert ring.qsize() == 0
+    assert ring._subs[0]._slots[0].payload is None  # slot reference cleared
+    assert ring.tickets_issued == [1]
+
+
+def test_mesh_ring_backpressure_blocks_per_lane():
+    ring = MeshTrajectoryRing(1, make_rollout_mesh(1))
+    dev = ring.devices[0]
+    lane = ring.lane(0)
+    lane.put(_rollout_on(dev, seq=0))
+    with pytest.raises(stdq.Full):
+        lane.put(_rollout_on(dev, seq=1), timeout=0.05)
+    assert lane.put_wait_s > 0.0
+    ring.get(timeout=1.0)
+    lane.put(_rollout_on(dev, seq=1), timeout=1.0)  # slot recycled
+
+
+def test_mesh_ring_close_aborts_every_lane():
+    ring = MeshTrajectoryRing(1, make_rollout_mesh(1))
+    dev = ring.devices[0]
+    lane = ring.lane(0)
+    lane.put(_rollout_on(dev, seq=0))
+    blocked = {}
+
+    def producer():
+        try:
+            lane.put(_rollout_on(dev, seq=1), timeout=30.0)
+            blocked["result"] = "returned"
+        except QueueClosed:
+            blocked["result"] = "closed"
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    time.sleep(0.1)
+    lane.close()  # a lane abort closes the whole ring
+    t.join(timeout=5.0)
+    assert blocked["result"] == "closed"
+    # drain, then CLOSED
+    assert isinstance(ring.get(timeout=1.0), Rollout)
+    assert ring.get(timeout=1.0) is CLOSED
+
+
+def test_mesh_ring_rejects_host_payload():
+    ring = MeshTrajectoryRing(2, make_rollout_mesh(1))
+    np_rollout = Rollout(
+        Transition(*(np.zeros((2, 2)) for _ in range(6))),
+        np.zeros((2, 4)), 0, 0, 0, None,
+    )
+    with pytest.raises(TypeError, match="host staging step"):
+        ring.lane(0).put(np_rollout)
+
+
+def test_mesh_ring_producer_done_is_per_lane():
+    ring = MeshTrajectoryRing(2, make_rollout_mesh(1))
+    with pytest.raises(RuntimeError, match="lane"):
+        ring.producer_done()
+    ring.lane(0).producer_done()
+    assert ring.get(timeout=1.0) is CLOSED
+
+
+@needs2
+def test_mesh_ring_assembles_globally_sharded_rollout():
+    """Two lanes' sub-rollouts reassemble into one env-axis-sharded Rollout
+    whose shards are the original per-device buffers (no host round trip:
+    lane values land verbatim in their half of the global array)."""
+    ring = MeshTrajectoryRing(2, make_rollout_mesh(2))
+    d0, d1 = ring.devices
+    ring.lane(0).put(_rollout_on(d0, seq=0, fill=1.0, version=5))
+    ring.lane(1).put(_rollout_on(d1, seq=0, fill=2.0, version=7))
+    out = ring.get(timeout=5.0)
+    assert out.seq == 0 and out.actor_id == -1
+    assert out.behavior_version == 5  # min across lanes (worst staleness)
+    r = out.traj.reward
+    assert r.shape == (3, 4)  # (t, 2 lanes * e)
+    assert len(r.devices()) == 2  # genuinely sharded, not gathered
+    spec = r.sharding.spec
+    assert tuple(spec) == (None, "data")
+    np.testing.assert_array_equal(
+        np.asarray(r), np.concatenate(
+            [np.full((3, 2), 1.0), np.full((3, 2), 2.0)], axis=1)
+    )
+    assert out.last_obs.shape == (4, 4)
+    assert out.last_obs.sharding.spec[0] == "data"
+
+
+@needs2
+def test_mesh_ring_get_blocks_until_every_lane_has_a_payload():
+    ring = MeshTrajectoryRing(2, make_rollout_mesh(2))
+    d0, d1 = ring.devices
+    ring.lane(0).put(_rollout_on(d0, seq=0))
+    with pytest.raises(stdq.Empty):
+        ring.get(timeout=0.05)  # lane 1 empty: no full batch yet
+    ring.lane(1).put(_rollout_on(d1, seq=0))
+    out = ring.get(timeout=5.0)  # lane 0's stashed payload was not lost
+    assert isinstance(out, Rollout) and out.seq == 0
+
+
+@needs2
+def test_mesh_ring_closed_lane_ends_the_stream():
+    ring = MeshTrajectoryRing(2, make_rollout_mesh(2))
+    d0, _ = ring.devices
+    ring.lane(0).put(_rollout_on(d0, seq=0))
+    ring.lane(1).producer_done()  # lane 1 checks out without producing
+    # a full batch can never assemble again -> CLOSED (partial discarded)
+    assert ring.get(timeout=5.0) is CLOSED
+
+
+@needs2
+def test_mesh_lane_rejects_wrong_device_payload():
+    ring = MeshTrajectoryRing(2, make_rollout_mesh(2))
+    _, d1 = ring.devices
+    with pytest.raises(TypeError, match="mesh lane 0"):
+        ring.lane(0).put(_rollout_on(d1, seq=0))
+
+
+@needs2
+def test_sharded_rollout_rejected_on_host_plane():
+    """The validate_picklable-style loud error: a mesh-sharded rollout on
+    the host TrajectoryQueue raises at put() with the routing fix named."""
+    ring = MeshTrajectoryRing(2, make_rollout_mesh(2))
+    d0, d1 = ring.devices
+    ring.lane(0).put(_rollout_on(d0, seq=0))
+    ring.lane(1).put(_rollout_on(d1, seq=0))
+    sharded = ring.get(timeout=5.0)
+    q = TrajectoryQueue(depth=2)
+    with pytest.raises(TypeError, match="mesh-plane rollout leaked"):
+        q.put(sharded)
+    # numpy payloads still pass
+    q.put(Rollout(Transition(*(np.zeros((2, 2)) for _ in range(6))),
+                  np.zeros((2, 4)), 0, 0, 0, None))
+
+
+# ---------------------------------------------------------------------------
+# sharded learner step vs replicated step
+# ---------------------------------------------------------------------------
+
+
+def _vector_cfg(env):
+    return get_config("paac_vector").replace(
+        obs_shape=env.obs_shape, num_actions=env.num_actions
+    )
+
+
+@needs2
+@pytest.mark.parametrize("clips", [(float("inf"), float("inf")), (1.0, 1.0)])
+def test_mesh2_sharded_step_allclose_vs_replicated(clips):
+    """One sharded learner step on a mesh=2-sharded batch matches the flat
+    step on the same batch numerically (the all-reduce only reorders the
+    float reduction), for both the compiled-out and active V-trace paths."""
+    from repro.distributed.sharding import (
+        batch_sharding, replicated_sharding, traj_sharding,
+    )
+    from repro.models import init_policy
+
+    rho_bar, c_bar = clips
+    t, e, obs_dim = 4, 8, 6
+    cfg = get_config("paac_vector").replace(obs_shape=(obs_dim,),
+                                            num_actions=3)
+    agent = PAACAgent(cfg, PAACConfig(t_max=t))
+    opt = make_optimizer("rmsprop")
+    key = jax.random.PRNGKey(0)
+    params = init_policy(key, cfg)
+    opt_state = opt.init(params)
+    ks = jax.random.split(key, 4)
+    traj = Transition(
+        obs=jax.random.normal(ks[0], (t, e, obs_dim)),
+        action=jax.random.randint(ks[1], (t, e), 0, 3),
+        reward=jax.random.normal(ks[2], (t, e)),
+        done=jnp.zeros((t, e), bool),
+        value=jnp.zeros((t, e), jnp.float32),
+        logp=jnp.full((t, e), -1.1, jnp.float32),
+    )
+    last_obs = jax.random.normal(ks[3], (e, obs_dim))
+    step = jnp.asarray(0, jnp.int32)
+
+    flat = jax.jit(make_learner_step(agent, opt, constant(0.01),
+                                     rho_bar=rho_bar, c_bar=c_bar))
+    p_flat, o_flat, m_flat = flat(params, opt_state, traj, last_obs, step)
+
+    mesh = make_rollout_mesh(2)
+    repl = replicated_sharding(mesh)
+    traj_sh = Transition(*(
+        jax.device_put(l, traj_sharding(mesh, l.ndim)) for l in traj))
+    last_sh = jax.device_put(last_obs, batch_sharding(mesh, last_obs.ndim))
+    sharded = make_sharded_learner_step(
+        agent, opt, constant(0.01), mesh, rho_bar=rho_bar, c_bar=c_bar,
+        fused_publish=False,
+    )
+    p_mesh, o_mesh, m_mesh = sharded(
+        jax.device_put(params, repl), jax.device_put(opt_state, repl),
+        traj_sh, last_sh, step,
+    )
+    for k in ("loss", "policy_loss", "value_loss", "entropy"):
+        np.testing.assert_allclose(float(m_mesh[k]), float(m_flat[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+    for a, b in zip(jax.tree_util.tree_leaves(p_flat),
+                    jax.tree_util.tree_leaves(p_mesh)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lockstep equivalence + end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_mesh1_depth1_lockstep_bitwise_vs_device_plane():
+    """The tentpole pin: mesh=1 depth-1 lockstep through the full mesh
+    machinery (1-lane sub-ring, sharded reassembly, sharded learner step
+    with fused-publish donation) reproduces the flat device plane — and
+    therefore synchronous ``ParallelRL`` — bit for bit."""
+    inf = float("inf")
+
+    def make(plane, mesh_shape=1):
+        agent = PAACAgent(_vector_cfg(GridWorld(8, size=4, max_steps=20)),
+                          PAACConfig(t_max=5))
+        return PipelinedRL(
+            GridWorld(8, size=4, max_steps=20), agent,
+            lr_schedule=constant(0.01), seed=1,
+            pipeline=PipelineConfig(queue_depth=1, rho_bar=inf, c_bar=inf,
+                                    lockstep=True, rollout_plane=plane,
+                                    mesh_shape=mesh_shape),
+        )
+
+    dev = make("device")
+    r_dev = dev.run(10)
+    mesh = make("mesh")
+    assert mesh._plane == "mesh"
+    r_mesh = mesh.run(10)
+    assert r_mesh.mean_metrics["staleness"] == 0.0
+    for k in ("loss", "policy_loss", "value_loss", "entropy", "reward_sum"):
+        assert r_mesh.mean_metrics[k] == r_dev.mean_metrics[k], k
+    for a, b in zip(jax.tree_util.tree_leaves(dev.params),
+                    jax.tree_util.tree_leaves(mesh.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@needs2
+def test_mesh2_end_to_end_lockstep():
+    """mesh=2 full run: every update consumes one sub-rollout from every
+    lane (zero staleness at lockstep, seqs 0..n-1 learned exactly once),
+    learner params stay replicated, and the donated learner state is
+    genuinely recycled (stale trees raise on read)."""
+    env = GridWorld(8, size=4, max_steps=20)
+    agent = PAACAgent(_vector_cfg(env), PAACConfig(t_max=5))
+    prl = PipelinedRL(
+        env, agent, lr_schedule=constant(0.01), seed=1,
+        pipeline=PipelineConfig(queue_depth=1, lockstep=True, mesh_shape=2),
+    )
+    assert prl._plane == "mesh"
+    old_params = prl.params
+    iters = 8
+    res = prl.run(iters)
+    assert res.steps == iters * 8 * 5  # both lanes' envs count
+    assert res.mean_metrics["staleness"] == 0.0
+    assert prl.learned_ids == [(-1, i) for i in range(iters)]
+    # donation really happened (params were consumed by the sharded step)
+    assert all(l.is_deleted()
+               for l in jax.tree_util.tree_leaves(old_params))
+    # live params stay replicated over both mesh devices
+    for leaf in jax.tree_util.tree_leaves(prl.params):
+        assert len(leaf.sharding.device_set) == 2
+    # a second run continues from the survivors
+    res2 = prl.run(4)
+    assert res2.steps == res.steps + 4 * 8 * 5
+
+
+@needs2
+def test_mesh2_per_lane_env_pools():
+    """A list of per-lane envs gives each lane its own full-width pool
+    (the weak-scaling shape run_mesh_ring sweeps)."""
+    envs = [GridWorld(4, size=4, max_steps=10) for _ in range(2)]
+    agent = PAACAgent(_vector_cfg(envs[0]), PAACConfig(t_max=3))
+    prl = PipelinedRL(
+        envs, agent, lr_schedule=constant(0.01), seed=0,
+        pipeline=PipelineConfig(queue_depth=1, lockstep=True, mesh_shape=2,
+                                num_actors=2),
+    )
+    res = prl.run(5)
+    assert res.steps == 5 * 2 * 4 * 3
