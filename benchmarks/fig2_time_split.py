@@ -51,6 +51,13 @@ from repro.envs.base import VectorEnv
 from repro.optim import constant
 from repro.pipeline import PipelinedRL
 from repro.pipeline.actor import collect_host
+from repro.telemetry import (
+    LEASE,
+    QUEUE_GET_WAIT,
+    QUEUE_PUT_WAIT,
+    SpanEmitter,
+    set_capture,
+)
 
 
 def run(n_envs_list=(16, 32, 64), arch: str = "paac_nips", t_max: int = 5,
@@ -589,6 +596,155 @@ def run_process_actors(n_e: int = 4, n_w: int = 2, obs_dim: int = 32,
 
 
 # ---------------------------------------------------------------------------
+# Telemetry overhead — span capture on vs off on the host and device grids
+# ---------------------------------------------------------------------------
+
+
+def run_telemetry_overhead(n_e: int = 8, obs_dim: int = 8192, width: int = 16,
+                           t_max: int = 4, iters: int = 24, warmup: int = 3,
+                           repeats: int = 3, host_n_w: int = 4,
+                           host_delay: float = 0.002, pair_n: int = 100_000,
+                           budget: float = 0.98):
+    """Cost of always-on telemetry, plus the trace/accounting cross-check.
+
+    Every hot-path wait in the pipeline is now a recorded span
+    (``repro.telemetry``) and ``RunResult``'s idle fields are derived from
+    the span totals, so the instrumentation runs whether or not anyone
+    exports a trace. This bench prices that:
+
+    * a microbench of one ``begin``/``end`` pair (capture on vs
+      ``set_capture(False)`` — the totals-only cost model),
+    * pipelined steps/s with capture on vs off on both fig2 grids — the
+      host ``TrajectoryQueue`` plane over ``SleepyExternalEnv`` pools and
+      the device-ring plane over ``WideObsJaxEnv`` — best-of ``repeats``
+      each (acceptance: on/off ratio ≥ ``budget``, i.e. within 2%),
+    * a trace-derived time-split cross-check: one captured device run,
+      learner/actor idle recomputed from the exported span rings and
+      compared against the ``RunResult`` fields they are supposed to
+      derive from (ratio ≈ 1.0 by construction — same spans, same sums —
+      so drift here means the accounting and the trace diverged).
+
+    Returns the grid for ``BENCH_pipeline.json``'s ``telemetry_overhead``
+    entry.
+    """
+    # -- microbench: one begin/end pair on a private single-writer emitter ---
+    bench_em = SpanEmitter("bench", capacity=pair_n)
+    t0 = time.perf_counter()
+    for _ in range(pair_n):
+        bench_em.begin(0)
+        bench_em.end()
+    pair_on_us = 1e6 * (time.perf_counter() - t0) / pair_n
+    bench_em.reset()
+    set_capture(False)
+    try:
+        t0 = time.perf_counter()
+        for _ in range(pair_n):
+            bench_em.begin(0)
+            bench_em.end()
+        pair_off_us = 1e6 * (time.perf_counter() - t0) / pair_n
+    finally:
+        set_capture(True)
+    emit(
+        "fig2_time_split/telemetry_span_pair",
+        pair_on_us,
+        f"capture_off_us={pair_off_us:.3f};drops={bench_em.drops}",
+    )
+
+    cfg = get_config("paac_vector").replace(
+        obs_shape=(obs_dim,), num_actions=3, cnn_dense=width, d_model=width
+    )
+    agent = PAACAgent(cfg, PAACConfig(t_max=t_max))
+
+    def make_pool():
+        return HostEnvPool(
+            [lambda s=i: SleepyExternalEnv(s, obs_dim, host_delay)
+             for i in range(n_e)],
+            n_workers=host_n_w, obs_shape=(obs_dim,),
+        )
+
+    def make_device_rl():
+        return PipelinedRL(
+            [WideObsJaxEnv(n_e, obs_dim) for _ in range(2)], agent,
+            lr_schedule=constant(0.003), seed=0,
+            pipeline=PipelineConfig(queue_depth=2, num_actors=2,
+                                    rollout_plane="device"),
+        )
+
+    def best_tps(plane: str) -> float:
+        best = 0.0
+        for _ in range(repeats):
+            if plane == "device":
+                rl = make_device_rl()
+                rl.run(max(warmup, 2))
+                res = rl.run(iters)
+            else:
+                with make_pool() as pool:
+                    rl = PipelinedRL(
+                        pool, agent, lr_schedule=constant(0.003), seed=0,
+                        pipeline=PipelineConfig(queue_depth=2),
+                    )
+                    rl.run(max(warmup, 2))
+                    res = rl.run(iters)
+            best = max(best, res.timesteps_per_sec)
+        return best
+
+    grids = {}
+    for plane in ("host", "device"):
+        on = best_tps(plane)
+        set_capture(False)
+        try:
+            off = best_tps(plane)
+        finally:
+            set_capture(True)
+        ratio = on / max(off, 1e-9)
+        grids[plane] = {"capture_on": on, "capture_off": off, "ratio": ratio}
+        emit(
+            f"fig2_time_split/telemetry_overhead/{plane}",
+            0.0,
+            f"on_steps_per_s={on:.0f};off_steps_per_s={off:.0f};"
+            f"ratio={ratio:.3f} (target >={budget})",
+        )
+
+    # -- trace-derived time-split cross-check (one captured device run) ------
+    prl = make_device_rl()
+    prl.run(max(warmup, 2))
+    res = prl.run(iters)
+    by_name = {em.name: em for _, _, em in prl.telemetry.tracks()}
+    trace_learner_idle = sum(
+        t1 - t0 for c, t0, t1 in by_name["ring"].snapshot()
+        if c == QUEUE_GET_WAIT
+    )
+    trace_actor_idle = sum(
+        t1 - t0
+        for name in ("actor0", "actor1")
+        for c, t0, t1 in by_name[name].snapshot()
+        if c in (QUEUE_PUT_WAIT, LEASE)
+    )
+    learner_ratio = trace_learner_idle / max(res.learner_idle_s, 1e-9)
+    actor_ratio = trace_actor_idle / max(res.actor_idle_s, 1e-9)
+    emit(
+        "fig2_time_split/telemetry_trace_crosscheck",
+        0.0,
+        f"learner_idle_trace_s={trace_learner_idle:.4f};"
+        f"learner_idle_result_s={res.learner_idle_s:.4f};"
+        f"learner_ratio={learner_ratio:.4f};actor_ratio={actor_ratio:.4f}"
+        " (target 1.00 each — trace and accounting share the spans)",
+    )
+    return {
+        "config": {
+            "n_e": n_e, "obs_dim": obs_dim, "width": width, "t_max": t_max,
+            "iters": iters, "repeats": repeats, "host_n_w": host_n_w,
+            "host_delay": host_delay, "pair_n": pair_n,
+        },
+        "span_pair_us": {"capture_on": pair_on_us, "capture_off": pair_off_us},
+        "steps_per_s": grids,
+        "budget_ratio": budget,
+        "trace_crosscheck": {"learner_idle_ratio": learner_ratio,
+                             "actor_idle_ratio": actor_ratio},
+    }
+
+
+# ---------------------------------------------------------------------------
 # Multi-actor scaling — GA3C-style n_actors sweep on external envs
 # ---------------------------------------------------------------------------
 
@@ -683,7 +839,8 @@ def run_multi_actor_host(n_e: int = 8, n_w: int = 8, obs_dim: int = 256,
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--only",
-                    choices=("fig2", "pipelined", "multi", "procs", "mesh"),
+                    choices=("fig2", "pipelined", "multi", "procs", "mesh",
+                             "telemetry"),
                     default="")
     ap.add_argument("--num-actors", type=int, nargs="+", default=(1, 2, 4),
                     help="actor counts for the multi-actor sweep")
@@ -702,3 +859,5 @@ if __name__ == "__main__":
                            **({"iters": args.iters} if args.iters else {}))
     if args.only in ("", "mesh"):
         run_mesh_ring(**({"iters": args.iters} if args.iters else {}))
+    if args.only in ("", "telemetry"):
+        run_telemetry_overhead(**({"iters": args.iters} if args.iters else {}))

@@ -14,12 +14,14 @@ profile, so a new benchmark cannot land in ``quick``/``full`` while
 silently missing from the CI smoke: any job without a ``ci`` column must be
 listed in ``CI_EXCLUDED`` (with a reason), or the harness refuses to start.
 
-The ``fig2_ring`` and ``fig2_procs`` jobs additionally write
-``BENCH_pipeline.json`` (path via ``--out-json``): the machine-readable
-steps/s grids for sync vs host-queue vs device-ring (``steps_per_s``) and
-thread vs process actor backends on a GIL-holding env
-(``process_actors``), at actor counts 1/2/4 — the perf trajectory future
-PRs diff against.
+The ``fig2_ring``, ``fig2_procs``, ``fig2_mesh`` and ``fig2_telemetry``
+jobs additionally write ``BENCH_pipeline.json`` (path via ``--out-json``):
+the machine-readable steps/s grids for sync vs host-queue vs device-ring
+(``steps_per_s``), thread vs process actor backends on a GIL-holding env
+(``process_actors``), the mesh plane at 1/2/4 devices (``mesh_ring``),
+and span capture on vs off (``telemetry_overhead`` — the proof the
+always-on instrumentation stays within its 2% budget) — the perf
+trajectory future PRs diff against.
 """
 from __future__ import annotations
 
@@ -71,6 +73,13 @@ PARAMS = {
         "ci": {"n_e": 2, "obs_dim": 32, "width": 16, "t_max": 8, "iters": 4,
                "warmup": 1, "repeats": 1},
     },
+    "fig2_telemetry": {
+        "quick": {}, "full": {"iters": 60, "repeats": 5},
+        # tiny but end-to-end: both planes really run with capture on and
+        # off, and the trace cross-check reads a real exported span ring
+        "ci": {"n_e": 4, "obs_dim": 64, "width": 16, "t_max": 2, "iters": 3,
+               "warmup": 1, "repeats": 1, "pair_n": 2_000},
+    },
     "fig34": {
         "quick": {"n_envs_list": (16, 32, 64), "total_steps": 30_000},
         "full": {"n_envs_list": (16, 32, 64, 128, 256),
@@ -121,6 +130,7 @@ def main() -> None:
     ring_result = {}
     procs_result = {}
     mesh_result = {}
+    telemetry_result = {}
 
     def fig2_ring_job(**kw):
         ring_result.update(fig2_time_split.run_device_ring(**kw))
@@ -131,6 +141,9 @@ def main() -> None:
     def fig2_mesh_job(**kw):
         mesh_result.update(fig2_time_split.run_mesh_ring(**kw))
 
+    def fig2_telemetry_job(**kw):
+        telemetry_result.update(fig2_time_split.run_telemetry_overhead(**kw))
+
     runners = {
         "kernels": kernels_bench.run,
         "table1": table1_throughput.run,
@@ -140,6 +153,7 @@ def main() -> None:
         "fig2_ring": fig2_ring_job,
         "fig2_procs": fig2_procs_job,
         "fig2_mesh": fig2_mesh_job,
+        "fig2_telemetry": fig2_telemetry_job,
         "fig34": fig34_ne_scaling.run,
         "baselines": baselines.run,
         "roofline": roofline.run,
@@ -160,7 +174,7 @@ def main() -> None:
             # keep the harness going; record the failure
             print(f"{name},0.0,ERROR={type(e).__name__}:{e}", file=sys.stdout)
 
-    if ring_result or procs_result or mesh_result:
+    if ring_result or procs_result or mesh_result or telemetry_result:
         # merge-on-write: a partial run (e.g. the mesh-smoke job's
         # `--only fig2_mesh` under forced host devices) refreshes only its
         # own grid and leaves the other committed rows intact. Each grid
@@ -185,6 +199,11 @@ def main() -> None:
         if mesh_result:
             # the mesh-plane grid (run_mesh_ring): steps/s at 1/2/4 devices
             payload["mesh_ring"] = {**mesh_result, **stamp}
+        if telemetry_result:
+            # span capture on/off steps/s + trace/accounting cross-check
+            # (run_telemetry_overhead): proof the always-on instrumentation
+            # stays within the 2% budget
+            payload["telemetry_overhead"] = {**telemetry_result, **stamp}
         with open(args.out_json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")

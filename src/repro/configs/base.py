@@ -143,10 +143,24 @@ class PipelineConfig:
     rollout_plane: str = "auto"  # "auto" | "device" | "host" | "mesh"
     actor_backend: str = "thread"  # "thread" | "process"
     mesh_shape: int = 1  # devices on the ("data",) rollout mesh
+    # observability (repro.telemetry; see docs/observability.md). Span
+    # recording itself is always on — it *is* the RunResult idle accounting;
+    # these knobs control the exports and the observer threads:
+    trace_path: str = ""  # "" -> no Chrome trace written at run end
+    metrics_jsonl: str = ""  # "" -> no JSONL heartbeat stream
+    heartbeat_s: float = 1.0  # heartbeat tick interval
+    stall_timeout_s: float = 0.0  # 0 -> stall watchdog off
 
     def __post_init__(self):
         if self.mesh_shape < 1:
             raise ValueError(f"mesh_shape must be >= 1, got {self.mesh_shape}")
+        if self.heartbeat_s <= 0:
+            raise ValueError(
+                f"heartbeat_s must be > 0, got {self.heartbeat_s}")
+        if self.stall_timeout_s < 0:
+            raise ValueError(
+                f"stall_timeout_s must be >= 0 (0 = off), got "
+                f"{self.stall_timeout_s}")
         if self.mesh_shape > 1:
             if self.actor_backend == "process":
                 raise ValueError(

@@ -82,6 +82,7 @@ class MetricsAccumulator:
         self.iters = 0
         self.lazy = lazy
         self._pending: List[Dict] = []
+        self._last: Dict = {}  # most recently *folded* metrics dict
         self._t0 = time.perf_counter()
 
     def update(self, metrics: Dict) -> None:
@@ -95,17 +96,46 @@ class MetricsAccumulator:
         for k, v in metrics.items():
             self.acc[k] = self.acc.get(k, 0.0) + float(v)
         self.episodes += float(metrics.get("episodes", 0.0))
+        self._last = metrics
 
     def _drain(self) -> None:
         for metrics in self._pending:
             self._fold(metrics)
         self._pending.clear()
 
+    @staticmethod
+    def _ready(metrics: Dict) -> bool:
+        # jax.Array.is_ready() == "execution producing this buffer retired";
+        # host values (python/numpy scalars) have no is_ready and are ready
+        return all(
+            is_ready() if (is_ready := getattr(v, "is_ready", None)) else True
+            for v in metrics.values()
+        )
+
+    def drain_ready(self) -> None:
+        """Fold only the pending dicts whose device scalars have already
+        materialized, front of the queue first, stopping at the first
+        still-executing update. Never blocks and never forces a device
+        sync — the in-flight tail keeps pipelining."""
+        while self._pending and self._ready(self._pending[0]):
+            self._fold(self._pending.pop(0))
+
     def cumulative(self, key: str, default: float = 0.0) -> float:
         """Running sum of one metric (drains pending device scalars first —
         a sync point, so only for explicit logging paths)."""
         self._drain()
         return self.acc.get(key, default)
+
+    def cumulative_nowait(self, key: str, default: float = 0.0) -> float:
+        """Running sum over *already-executed* updates only: the hot-loop
+        logging read. Same float arithmetic as ``cumulative`` but the tail
+        of still-dispatching updates is simply not yet included."""
+        self.drain_ready()
+        return self.acc.get(key, default)
+
+    def last(self, key: str, default: float = 0.0) -> float:
+        """Latest folded value of one metric (already host-side — free)."""
+        return float(self._last.get(key, default))
 
     def result(self, steps: int, steps_per_iter: int, **extra) -> RunResult:
         self._drain()  # blocks until every dispatched update has executed

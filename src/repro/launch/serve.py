@@ -5,6 +5,12 @@ actors — i.e. modern batched LLM inference. Prefill builds the KV/state
 cache for a batch of prompts; the decode loop then emits one token per
 actor per step through ``serve_step``.
 
+``--trace`` records each phase as telemetry spans — one ``prefill`` span,
+one ``decode`` span per generated token — and writes a Chrome trace-event
+JSON at exit (same format as the pipeline's ``--trace``; ``SpanEmitter``
+takes a custom category table, so the serving vocabulary rides the same
+machinery).
+
 Example:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
         --batch 8 --prompt-len 64 --gen 32
@@ -20,9 +26,12 @@ import jax.numpy as jnp
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.launch.steps import build_prefill_step, build_serve_step
 from repro.models import init_policy, init_policy_cache
+from repro.telemetry import Telemetry
 from repro.utils import get_logger
 
 log = get_logger("serve")
+
+_PREFILL, _DECODE = 0, 1
 
 
 def main():
@@ -33,7 +42,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace-event JSON of prefill/decode "
+                    "spans here (open in Perfetto)")
     args = ap.parse_args()
+
+    hub = Telemetry()
+    em = hub.emitter("serve", categories=("prefill", "decode"))
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -54,10 +69,14 @@ def main():
     t0 = time.perf_counter()
     from repro.models import policy_prefill
 
-    logits, values, cache = jax.jit(
-        lambda p, t: policy_prefill(p, cfg, t, prefix, max_len=max_len)
-    )(params, prompts)
-    jax.block_until_ready(logits)
+    em.begin(_PREFILL)
+    try:
+        logits, values, cache = jax.jit(
+            lambda p, t: policy_prefill(p, cfg, t, prefix, max_len=max_len)
+        )(params, prompts)
+        jax.block_until_ready(logits)
+    finally:
+        em.end()
     t_prefill = time.perf_counter() - t0
     log.info("prefill %.3fs (%.0f tok/s)", t_prefill, B * S / t_prefill)
 
@@ -67,10 +86,14 @@ def main():
     t0 = time.perf_counter()
     for i in range(args.gen):
         key, sub = jax.random.split(key)
-        token, value, cache = serve_step(
-            params, cache, token, jnp.asarray(S + i, jnp.int32),
-            jax.random.key_data(sub),
-        )
+        em.begin(_DECODE)
+        try:
+            token, value, cache = serve_step(
+                params, cache, token, jnp.asarray(S + i, jnp.int32),
+                jax.random.key_data(sub),
+            )
+        finally:
+            em.end()
         toks.append(token)
     jax.block_until_ready(token)
     dt = time.perf_counter() - t0
@@ -78,6 +101,8 @@ def main():
     log.info("decode %d tokens x %d actors: %.3fs (%.0f tok/s)",
              args.gen, B, dt, args.gen * B / dt)
     log.info("sample actor 0 tokens: %s", out[0, :16].tolist())
+    if args.trace:
+        hub.write_trace(args.trace)
 
 
 if __name__ == "__main__":

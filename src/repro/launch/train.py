@@ -26,6 +26,11 @@ plane across ``D`` accelerators: one actor lane per device feeds a
 per-device sub-ring, the learner consumes a globally-sharded batch and
 all-reduces its gradients over the mesh's data axis (on CPU, expose fake
 devices first: ``XLA_FLAGS=--xla_force_host_platform_device_count=D``).
+``--trace``/``--metrics-jsonl``/``--stall-timeout`` turn on the pipeline's
+observability exports (``repro.telemetry``; see docs/observability.md): a
+Perfetto-viewable Chrome trace of every plane's spans, a JSONL liveness
+heartbeat, and the stall watchdog naming the stage each party is blocked
+in when progress stops.
 
 Examples:
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
@@ -71,6 +76,12 @@ def run_rl(args):
         raise SystemExit(
             "--mesh is a pipeline (mesh rollout plane) knob: add --pipeline"
         )
+    if (args.trace or args.metrics_jsonl or args.stall_timeout) \
+            and not args.pipeline:
+        raise SystemExit(
+            "--trace/--metrics-jsonl/--stall-timeout observe the pipeline "
+            "backend's telemetry hub: add --pipeline"
+        )
     host_env = args.host_env or args.actor_backend == "process"
     if host_env:
         # GIL-holding external-emulator path (repro.envs.pyemu): the regime
@@ -105,7 +116,10 @@ def run_rl(args):
                                     num_actors=args.num_actors,
                                     rollout_plane=args.rollout_plane,
                                     actor_backend=args.actor_backend,
-                                    mesh_shape=args.mesh),
+                                    mesh_shape=args.mesh,
+                                    trace_path=args.trace,
+                                    metrics_jsonl=args.metrics_jsonl,
+                                    stall_timeout_s=args.stall_timeout),
         )
     else:
         rl = ParallelRL(env, agent, lr_schedule=constant(args.lr),
@@ -207,6 +221,16 @@ def main():
     ap.add_argument("--env-spin", type=int, default=2000,
                     help="pure-Python work per host-env step (GIL-holding "
                     "emulator cost model)")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace-event JSON of the run's spans "
+                    "here (open in Perfetto); pipeline backend only")
+    ap.add_argument("--metrics-jsonl", default="",
+                    help="append a JSONL metrics heartbeat (steps/s EMA, "
+                    "queue depth, staleness, per-actor liveness) here")
+    ap.add_argument("--stall-timeout", type=float, default=0.0,
+                    help="stall watchdog window in seconds: when the learner "
+                    "or an actor makes no progress for this long, log which "
+                    "stage each party is blocked in (0 = off)")
     args = ap.parse_args()
     if args.mode == "rl":
         run_rl(args)

@@ -127,10 +127,21 @@ Modules:
 * ``PipelinedRL`` — orchestrator mirroring ``ParallelRL``'s API
   (``repro.pipeline.orchestrator``).
 
+Observability: every plane's hot path records bounded-ring monotonic-clock
+spans (``repro.telemetry`` — collect, queue.put_wait, queue.get_wait,
+lease, publish, learner.update, shm.copy, mesh.reassemble), and the
+``RunResult`` idle accounting (``put_wait_s``/``get_wait_s``/
+``per_actor_idle_s``) is *derived from* those spans' per-category totals,
+so the numbers the benchmarks report and the trace the hub exports can
+never disagree. ``PipelineConfig.trace_path``/``metrics_jsonl``/
+``stall_timeout_s`` turn on the Chrome trace export, the JSONL liveness
+heartbeat, and the stall watchdog (see ``docs/observability.md``).
+
 Configure via ``repro.configs.PipelineConfig`` (num_actors, queue depth,
-ρ̄/c̄, lockstep, rollout_plane, actor_backend, mesh_shape); select from the
-launcher with ``repro.launch.train --pipeline --num-actors N
---rollout-plane device`` / ``--actor-backend process`` / ``--mesh D``.
+ρ̄/c̄, lockstep, rollout_plane, actor_backend, mesh_shape, plus the
+observability knobs above); select from the launcher with
+``repro.launch.train --pipeline --num-actors N --rollout-plane device`` /
+``--actor-backend process`` / ``--mesh D`` / ``--trace out.json``.
 """
 from repro.configs.base import PipelineConfig
 from repro.pipeline.actor import (

@@ -34,7 +34,6 @@ the buffers instead).
 from __future__ import annotations
 
 import threading
-import time
 from queue import Full
 from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
@@ -44,6 +43,12 @@ import numpy as np
 
 from repro.core.rollout import Transition, make_collect_fn  # noqa: F401
 from repro.pipeline.queue import QueueClosed
+from repro.telemetry.spans import (
+    COLLECT,
+    LEASE,
+    QUEUE_PUT_WAIT,
+    SpanEmitter,
+)
 
 __all__ = [
     "ParamSlot",
@@ -396,14 +401,29 @@ class ActorBase(threading.Thread):
     error-vs-checkout epilogue.
     """
 
-    def __init__(self, queue, actor_id: int = 0):
+    def __init__(self, queue, actor_id: int = 0, telemetry=None):
         super().__init__(name=f"pipeline-actor-{actor_id}", daemon=True)
         self._queue = queue
         self.actor_id = actor_id
         self._stop_requested = threading.Event()
-        self.wait_s = 0.0  # time blocked waiting for params (lockstep)
-        self.put_wait_s = 0.0  # time blocked in queue.put (backpressure)
+        # this replica's span track (single-writer: only this thread records).
+        # wait_s/put_wait_s are *derived* from its per-category totals — the
+        # same float accumulation the old ad-hoc counters performed.
+        if telemetry is not None:
+            self.span_emitter = telemetry.emitter(f"actor{actor_id}")
+        else:
+            self.span_emitter = SpanEmitter(f"actor{actor_id}")
         self.error: Optional[BaseException] = None
+
+    @property
+    def wait_s(self) -> float:
+        """Time blocked waiting for params (lockstep) — span-derived."""
+        return self.span_emitter.total(LEASE)
+
+    @property
+    def put_wait_s(self) -> float:
+        """Time blocked in queue.put (backpressure) — span-derived."""
+        return self.span_emitter.total(QUEUE_PUT_WAIT)
 
     def stop(self) -> None:
         """Ask the actor to exit at its next blocking point (learner died)."""
@@ -412,7 +432,7 @@ class ActorBase(threading.Thread):
     def _put(self, rollout: Rollout) -> bool:
         """Bounded put, interruptible by stop()/close(). Returns False when
         the actor should exit instead of producing more."""
-        t0 = time.perf_counter()
+        self.span_emitter.begin(QUEUE_PUT_WAIT)
         try:
             while True:
                 try:
@@ -424,7 +444,7 @@ class ActorBase(threading.Thread):
                 except QueueClosed:
                     return False  # stream aborted under us — not our error
         finally:
-            self.put_wait_s += time.perf_counter() - t0
+            self.span_emitter.end()
 
     def _produce(self) -> None:
         raise NotImplementedError
@@ -463,8 +483,9 @@ class ActorThread(ActorBase):
     """
 
     def __init__(self, collect: Callable, queue, slot: ParamSlot, key,
-                 iterations: int, lockstep: bool = False, actor_id: int = 0):
-        super().__init__(queue, actor_id)
+                 iterations: int, lockstep: bool = False, actor_id: int = 0,
+                 telemetry=None):
+        super().__init__(queue, actor_id, telemetry=telemetry)
         self._collect = collect
         self._slot = slot
         self._key = key
@@ -474,22 +495,28 @@ class ActorThread(ActorBase):
     def _produce(self) -> None:
         for i in range(self._iterations):
             if self._lockstep:
-                t0 = time.perf_counter()
+                # lease span: the stop-abort path cancels instead of ending
+                # (the pre-telemetry counter never accumulated it either)
+                self.span_emitter.begin(LEASE)
                 while not self._slot.wait_for(i, timeout=0.1):
                     if self._stop_requested.is_set():
+                        self.span_emitter.cancel()
                         return
-                self.wait_s += time.perf_counter() - t0
+                self.span_emitter.end()
             if self._stop_requested.is_set():
                 return
             # lease the params only for the collect: released before the
             # (potentially long) blocking put so the learner's reserve()
-            # wait is bounded by one rollout
+            # wait is bounded by one rollout. The instant acquire() itself is
+            # deliberately unspanned: wait_s means *blocked on the learner*.
             params, version = self._slot.acquire()
+            self.span_emitter.begin(COLLECT)
             try:
                 self._key, traj, last_obs, release = self._collect(
                     params, self._key
                 )
             finally:
+                self.span_emitter.end()
                 self._slot.release(version)
             if not self._put(
                 Rollout(traj, last_obs, version, self.actor_id, i, release)

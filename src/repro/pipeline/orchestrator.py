@@ -80,6 +80,13 @@ from repro.pipeline.actor import (
 from repro.pipeline.learner import make_learner_step, make_sharded_learner_step
 from repro.pipeline.queue import CLOSED, TrajectoryQueue
 from repro.pipeline.ring import DeviceTrajectoryRing, MeshTrajectoryRing
+from repro.telemetry import (
+    LEARNER_UPDATE,
+    LEASE,
+    PUBLISH,
+    QUEUE_GET_WAIT,
+    Telemetry,
+)
 from repro.utils import get_logger
 
 log = get_logger("pipeline")
@@ -336,14 +343,16 @@ class PipelinedRL:
             )
         return plane
 
-    def _make_queue(self, n_actors: int):
+    def _make_queue(self, n_actors: int, telemetry=None):
         if self._plane == "mesh":
             return MeshTrajectoryRing(self.pipeline.queue_depth,
-                                      self._rollout_mesh)
+                                      self._rollout_mesh, telemetry=telemetry)
         if self._plane == "device":
             return DeviceTrajectoryRing(self.pipeline.queue_depth,
-                                        producers=n_actors)
-        return TrajectoryQueue(self.pipeline.queue_depth, producers=n_actors)
+                                        producers=n_actors,
+                                        telemetry=telemetry)
+        return TrajectoryQueue(self.pipeline.queue_depth, producers=n_actors,
+                               telemetry=telemetry)
 
     # -- env splitting -------------------------------------------------------
     def _split_envs(self, env, per_actor_envs, n_actors: int, k_env):
@@ -481,7 +490,13 @@ class PipelinedRL:
         """Run `iterations` learner updates (each = one shard's n_e·t_max
         timesteps), fed by ``num_actors`` concurrent actor replicas."""
         n_actors = self._n_actors
-        queue = self._make_queue(n_actors)
+        # fresh telemetry hub per run (queues, actors and their emitters are
+        # per-run objects); kept on self so harnesses can read the tracks —
+        # e.g. benchmarks/fig2_time_split cross-checks RunResult's time
+        # split against the trace — after run() returns
+        hub = self.telemetry = Telemetry()
+        learner_em = hub.emitter("learner")
+        queue = self._make_queue(n_actors, telemetry=hub)
         if self._plane == "mesh":
             # every lane contributes one sub-rollout to every update: the
             # quota is `iterations` per lane, not split across lanes
@@ -497,7 +512,8 @@ class PipelinedRL:
         # reserve/commit param-slot protocol to the learner loop.
         if self._backend == "process":
             slot, actors = self._process_plane.begin_run(
-                queue, quota, self.pipeline.lockstep, self.params
+                queue, quota, self.pipeline.lockstep, self.params,
+                telemetry=hub,
             )
         else:
             slot = PingPongParamSlot(self.params, version=0)
@@ -514,6 +530,7 @@ class PipelinedRL:
                     queue.lane(i) if self._plane == "mesh" else queue,
                     slot, key, quota[i],
                     lockstep=self.pipeline.lockstep, actor_id=i,
+                    telemetry=hub,
                 )
                 for i, key in enumerate(keys)
             ]
@@ -526,12 +543,31 @@ class PipelinedRL:
         self.learned_ids = []
         for a in actors:
             a.start()
+        # observability side-cars: both optional, both read-only observers
+        # of the emitters the hot paths write anyway
+        hub.set_gauge("queue_depth", queue.qsize)
+        if self.pipeline.metrics_jsonl:
+            hub.heartbeat_start(
+                self.pipeline.metrics_jsonl,
+                interval=self.pipeline.heartbeat_s,
+                actor_emitters=[a.span_emitter for a in actors],
+            )
+        if self.pipeline.stall_timeout_s > 0:
+            hub.watchdog_start(self.pipeline.stall_timeout_s, [
+                ("learner", learner_em, None),
+                *[(f"actor{a.actor_id}", a.span_emitter, a.is_alive)
+                  for a in actors],
+            ])
         # same step-counter semantics as ParallelRL.run (lr_schedule parity)
         step_arr = jnp.asarray(self.total_steps, jnp.int32)
         completed = 0
         try:
             for i in range(iterations):
-                payload = queue.get()
+                learner_em.begin(QUEUE_GET_WAIT)
+                try:
+                    payload = queue.get()
+                finally:
+                    learner_em.end()
                 if payload is CLOSED:  # an actor died early
                     break
                 assert isinstance(payload, Rollout)
@@ -539,26 +575,43 @@ class PipelinedRL:
                 # collect (actors release before blocking on the queue), so a
                 # long wait means an actor died without releasing — bail out
                 # instead of hanging
-                while True:
-                    publish_dst = slot.reserve(i + 1, timeout=1.0)
-                    if publish_dst is not None:
-                        break
-                    if not any(a.is_alive() for a in actors):
-                        raise RuntimeError(
-                            "param lease never released (all actors exited)"
+                learner_em.begin(LEASE)
+                try:
+                    while True:
+                        publish_dst = slot.reserve(i + 1, timeout=1.0)
+                        if publish_dst is not None:
+                            break
+                        if not any(a.is_alive() for a in actors):
+                            raise RuntimeError(
+                                "param lease never released (all actors exited)"
+                            )
+                finally:
+                    learner_em.end()
+                # on the device planes this span covers the async *dispatch*,
+                # not the execution — by design: the learner thread's own time
+                # is what the trace's learner track attributes
+                learner_em.begin(LEARNER_UPDATE)
+                try:
+                    self.params, self.opt_state, published, metrics = \
+                        self._update_step(
+                            self.params, self.opt_state, payload.traj,
+                            payload.last_obs, step_arr, publish_dst,
                         )
-                self.params, self.opt_state, published, metrics = \
-                    self._update_step(
-                        self.params, self.opt_state, payload.traj,
-                        payload.last_obs, step_arr, publish_dst,
-                    )
-                slot.commit(published, i + 1)
+                finally:
+                    learner_em.end()
+                learner_em.begin(PUBLISH)
+                try:
+                    slot.commit(published, i + 1)
+                finally:
+                    learner_em.end()
                 step_arr = step_arr + 1
                 self.total_steps += self._steps_per_iter
                 completed += 1
+                hub.counter_add("steps", self._steps_per_iter)
                 self.learned_ids.append((payload.actor_id, payload.seq))
                 metrics = dict(metrics)
                 metrics["staleness"] = float(i - payload.behavior_version)
+                hub.set_gauge("staleness", metrics["staleness"])
                 # eager (host plane): blocks on the metric scalars => the
                 # update (and the H2D copy of the staged payload) has fully
                 # executed. Lazy (device plane): no sync — just stashes.
@@ -566,13 +619,17 @@ class PipelinedRL:
                 if payload.release is not None:
                     payload.release()  # consume certified: set is reusable
                 if log_every and (i + 1) % log_every == 0:
+                    # never sync the device planes for a log line: fold only
+                    # the already-executed updates (cumulative() would drain
+                    # every pending device scalar — a hidden blocking sync
+                    # serializing the learner against its own dispatches)
                     log.info(
                         "iter %d steps %d actor %d staleness %.0f "
                         "reward_sum %.3f loss %.4f",
                         i + 1, self.total_steps, payload.actor_id,
                         metrics["staleness"],
-                        acc.cumulative("reward_sum"),
-                        float(metrics.get("loss", 0.0)),
+                        acc.cumulative_nowait("reward_sum"),
+                        acc.last("loss"),
                     )
         finally:
             # reap all actors on every exit path (normal, learner exception,
@@ -605,6 +662,13 @@ class PipelinedRL:
                     break
                 if getattr(p, "release", None):
                     p.release()
+            # observers down, then export — after the joins above, so
+            # worker-shipped span rings have merged into the hub. Runs on
+            # every exit path: a post-mortem trace of a failed run is the
+            # tool's whole point.
+            hub.stop()
+            if self.pipeline.trace_path:
+                hub.write_trace(self.pipeline.trace_path)
         errors = [a for a in actors if a.error is not None]
         if errors:
             raise RuntimeError(

@@ -13,10 +13,17 @@ stdlib ``queue.Queue``:
 * **backpressure accounting** — the cumulative time producers (actors) spent
   blocked on a full queue (merged across all of them) and the consumer
   (learner) spent blocked on an empty one: the paper-Fig.2 style "who is on
-  the critical path" numbers, observable on the bare queue. The pipeline's
-  per-actor attribution (``RunResult.per_actor_idle_s``) is accounted by
-  each ``ActorThread`` around its own puts; ``get_wait_s`` here is the
-  learner-idle figure the benchmarks report.
+  the critical path" numbers, observable on the bare queue. Since PR 6 the
+  numbers are *derived from telemetry spans*: every ``put``/``get`` records
+  a ``queue.put_wait``/``queue.get_wait`` span into the queue's
+  ``repro.telemetry.SpanEmitter`` (its merged aggregate track), and
+  ``put_wait_s``/``get_wait_s`` read the emitter's per-category totals —
+  the identical float accumulation the old ad-hoc counters performed, so
+  the semantics (full call duration, accumulated per call in call order)
+  are unchanged. The pipeline's per-actor attribution
+  (``RunResult.per_actor_idle_s``) is accounted by each ``ActorThread``
+  around its own puts; ``get_wait_s`` here is the learner-idle figure the
+  benchmarks report.
 * **never drops** — depth bounds memory (at most ``depth`` rollouts in
   flight) by blocking producers, not by discarding trajectories; every
   collected rollout is learned from exactly once.
@@ -35,6 +42,8 @@ import threading
 import time
 from collections import deque
 from typing import Any, Optional
+
+from repro.telemetry.spans import QUEUE_GET_WAIT, QUEUE_PUT_WAIT, SpanEmitter
 
 
 def _assert_host_payload(item: Any) -> None:
@@ -73,7 +82,8 @@ class QueueClosed(RuntimeError):
 class TrajectoryQueue:
     """Bounded FIFO of rollout payloads with idle-time accounting."""
 
-    def __init__(self, depth: int = 2, producers: int = 1):
+    def __init__(self, depth: int = 2, producers: int = 1, telemetry=None,
+                 name: str = "queue"):
         if depth < 1:
             raise ValueError(f"queue depth must be >= 1, got {depth}")
         if producers < 1:
@@ -83,9 +93,26 @@ class TrajectoryQueue:
         self._cond = threading.Condition()
         self._producers_left = producers
         self._closed = False
-        self.put_wait_s = 0.0  # producers idle (queue full), all actors merged
-        self.get_wait_s = 0.0  # learner idle (queue empty)
+        # the queue's aggregate span track: put spans land here from every
+        # producer thread (hence locked), get spans from the consumer.
+        # `telemetry` (a repro.telemetry.Telemetry hub) registers the track
+        # for trace export; a bare queue gets a private unregistered emitter
+        # so put_wait_s/get_wait_s work standalone.
+        if telemetry is not None:
+            self.span_emitter = telemetry.emitter(name, locked=True)
+        else:
+            self.span_emitter = SpanEmitter(name, locked=True)
         self._validated: Any = None  # last payload to pass the plane check
+
+    @property
+    def put_wait_s(self) -> float:
+        """Producers idle (queue full), all actors merged — span-derived."""
+        return self.span_emitter.total(QUEUE_PUT_WAIT)
+
+    @property
+    def get_wait_s(self) -> float:
+        """Learner idle (queue empty) — span-derived."""
+        return self.span_emitter.total(QUEUE_GET_WAIT)
 
     def put(self, item: Any, timeout: Optional[float] = None) -> None:
         """Blocking put; accumulates the time spent waiting on a full queue.
@@ -122,7 +149,7 @@ class TrajectoryQueue:
             # reference to a payload the consumer may since have released
             self._validated = None
         finally:
-            self.put_wait_s += time.perf_counter() - t0
+            self.span_emitter.record(QUEUE_PUT_WAIT, t0)
 
     def get(self, timeout: Optional[float] = None) -> Any:
         """Blocking get; returns ``CLOSED`` once closed and drained.
@@ -140,7 +167,7 @@ class TrajectoryQueue:
                     return item
                 return CLOSED
         finally:
-            self.get_wait_s += time.perf_counter() - t0
+            self.span_emitter.record(QUEUE_GET_WAIT, t0)
 
     def producer_done(self) -> None:
         """One producer finished its quota; closes the stream when the last

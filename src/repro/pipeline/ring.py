@@ -62,6 +62,12 @@ import jax
 import numpy as np
 
 from repro.pipeline.queue import CLOSED, QueueClosed
+from repro.telemetry.spans import (
+    MESH_REASSEMBLE,
+    QUEUE_GET_WAIT,
+    QUEUE_PUT_WAIT,
+    SpanEmitter,
+)
 
 __all__ = ["DeviceTrajectoryRing", "MeshTrajectoryRing"]
 
@@ -99,7 +105,8 @@ class DeviceTrajectoryRing:
     accepted put is ticket-stamped and consumed exactly once, in order.
     """
 
-    def __init__(self, depth: int = 2, producers: int = 1):
+    def __init__(self, depth: int = 2, producers: int = 1, telemetry=None,
+                 name: str = "ring"):
         if depth < 1:
             raise ValueError(f"ring depth must be >= 1, got {depth}")
         if producers < 1:
@@ -111,8 +118,23 @@ class DeviceTrajectoryRing:
         self._cond = threading.Condition()
         self._producers_left = producers
         self._closed = False
-        self.put_wait_s = 0.0  # producers idle (ring full), all actors merged
-        self.get_wait_s = 0.0  # learner idle (ring empty)
+        # span-derived idle accounting: same contract as TrajectoryQueue —
+        # every put/get records its full duration into the ring's aggregate
+        # track, and put_wait_s/get_wait_s read the per-category totals
+        if telemetry is not None:
+            self.span_emitter = telemetry.emitter(name, locked=True)
+        else:
+            self.span_emitter = SpanEmitter(name, locked=True)
+
+    @property
+    def put_wait_s(self) -> float:
+        """Producers idle (ring full), all actors merged — span-derived."""
+        return self.span_emitter.total(QUEUE_PUT_WAIT)
+
+    @property
+    def get_wait_s(self) -> float:
+        """Learner idle (ring empty) — span-derived."""
+        return self.span_emitter.total(QUEUE_GET_WAIT)
 
     # -- producer side -------------------------------------------------------
     def put(self, item: Any, timeout: Optional[float] = None) -> None:
@@ -144,7 +166,7 @@ class DeviceTrajectoryRing:
                 slot.full = True
                 self._cond.notify_all()
         finally:
-            self.put_wait_s += time.perf_counter() - t0
+            self.span_emitter.record(QUEUE_PUT_WAIT, t0)
 
     # -- consumer side -------------------------------------------------------
     def get(self, timeout: Optional[float] = None) -> Any:
@@ -178,7 +200,7 @@ class DeviceTrajectoryRing:
                 self._cond.notify_all()
                 return item
         finally:
-            self.get_wait_s += time.perf_counter() - t0
+            self.span_emitter.record(QUEUE_GET_WAIT, t0)
 
     # -- shutdown (same protocol as TrajectoryQueue) -------------------------
     def producer_done(self) -> None:
@@ -296,7 +318,7 @@ class MeshTrajectoryRing:
     ends (``CLOSED``) once all lanes' producers checked out and drained.
     """
 
-    def __init__(self, depth: int, mesh):
+    def __init__(self, depth: int, mesh, telemetry=None):
         from repro.distributed.sharding import batch_sharding, traj_sharding
 
         if tuple(mesh.axis_names) != ("data",):
@@ -307,8 +329,10 @@ class MeshTrajectoryRing:
         self.mesh = mesh
         self.devices = list(mesh.devices.flat)
         self.depth = depth
-        self._subs = [DeviceTrajectoryRing(depth, producers=1)
-                      for _ in self.devices]
+        self._subs = [DeviceTrajectoryRing(depth, producers=1,
+                                           telemetry=telemetry,
+                                           name=f"mesh.lane{i}")
+                      for i in range(len(self.devices))]
         self._lanes = [_MeshLane(self, i, d)
                        for i, d in enumerate(self.devices)]
         self._traj_sharding = lambda ndim: traj_sharding(mesh, ndim)
@@ -317,7 +341,19 @@ class MeshTrajectoryRing:
         # out: resumed by the next get() (single consumer), so a timeout can
         # never lose a lane's payload or desynchronize the seq streams
         self._pending: List[Any] = []
-        self.get_wait_s = 0.0  # learner idle (any lane empty)
+        # the consumer-side track: the outer get (all-lane wait + assembly)
+        # as queue.get_wait spans with the zero-copy reassembly nested as
+        # mesh.reassemble. Single consumer => single writer, no lock.
+        if telemetry is not None:
+            self.span_emitter = telemetry.emitter("mesh")
+        else:
+            self.span_emitter = SpanEmitter("mesh")
+
+    @property
+    def get_wait_s(self) -> float:
+        """Learner idle (any lane empty) — span-derived, full outer-get
+        duration exactly as the pre-telemetry counter accumulated it."""
+        return self.span_emitter.total(QUEUE_GET_WAIT)
 
     @property
     def n_lanes(self) -> int:
@@ -385,6 +421,7 @@ class MeshTrajectoryRing:
         discarded (device arrays; their buffers just return to the
         allocator). Raises stdlib ``queue.Empty`` on timeout.
         """
+        self.span_emitter.begin(QUEUE_GET_WAIT)
         t0 = time.perf_counter()
         deadline = None if timeout is None else t0 + timeout
         parts = self._pending
@@ -399,9 +436,13 @@ class MeshTrajectoryRing:
                     return CLOSED
                 parts.append(item)
             self._pending = []
-            return self._assemble(parts)
+            self.span_emitter.begin(MESH_REASSEMBLE)
+            try:
+                return self._assemble(parts)
+            finally:
+                self.span_emitter.end()
         finally:
-            self.get_wait_s += time.perf_counter() - t0
+            self.span_emitter.end()
 
     def producer_done(self) -> None:
         raise RuntimeError(

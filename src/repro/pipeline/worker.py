@@ -28,6 +28,9 @@ Wire protocol (per worker, all ``mp.Queue``):
 
 * ``cmd_q``   parent→child: ``("run", quota, lockstep)`` | ``("stop",)``
 * ``ready_q`` child→parent: ``("rollout", set_idx, seq, version)`` …
+  then ``("spans", SpanEmitter.ship())`` — the child's telemetry ring
+  (collect / lease / shm.copy / staging-wait spans, recorded child-side),
+  merged parent-side under per-process trace track ``actor_id + 1`` —
   terminated by exactly one of ``("done", final_key)`` (quota finished —
   graceful checkout), ``("aborted",)`` (stop event honoured), or
   ``("error", traceback)`` (collection died; the drainer re-raises it so
@@ -58,6 +61,13 @@ import numpy as np
 from repro.envs.host_env import HostEnvSpec
 from repro.pipeline.actor import ActorBase, Rollout, _copy_tree
 from repro.pipeline.shm import ShmParamSlot, ShmStagingSet
+from repro.telemetry.spans import (
+    COLLECT,
+    LEASE,
+    QUEUE_PUT_WAIT,
+    SHM_COPY,
+    SpanEmitter,
+)
 
 __all__ = ["ProcessActorPlane", "ProcessActorDrainer"]
 
@@ -92,6 +102,11 @@ def _worker_main(spec: HostEnvSpec, arch_cfg, hp, slot_handle,
         slot = ShmParamView(slot_handle)
         key = jnp.asarray(key_host)
         obs = pool.reset()
+        # this worker's span track: recorded here (the spans describe *this*
+        # process's blocking), shipped to the parent with the terminal
+        # message of each run, merged into the run trace under pid
+        # actor_id + 1
+        em = SpanEmitter(f"worker{actor_id}")
     except Exception:
         # setup died (unbuildable env, shm attach failure): report it so the
         # first begin_run surfaces a traceback, not a bare dead child
@@ -114,17 +129,31 @@ def _worker_main(spec: HostEnvSpec, arch_cfg, hp, slot_handle,
                 aborted = False
                 for seq in range(quota):
                     if lockstep:
+                        em.begin(LEASE)
                         while not slot.wait_for(seq, timeout=0.1):
                             if stop_evt.is_set() or not _parent_alive():
                                 aborted = True
                                 break
+                        if aborted:  # abort mid-wait never counted as waiting
+                            em.cancel()
+                        else:
+                            em.end()
                     if aborted or stop_evt.is_set():
                         aborted = True
                         break
-                    # params lease is just the copy-out (inside read_params)
-                    params, version = slot.read_params()
+                    # params lease is just the copy-out (inside read_params):
+                    # the shm→host copy is the span, not a blocking wait
+                    em.begin(SHM_COPY)
+                    try:
+                        params, version = slot.read_params()
+                    finally:
+                        em.end()
+                    # cross-process staging lease: blocked here = the
+                    # child-side backpressure stage (the parent hasn't
+                    # recycled a set), this plane's queue.put_wait analog
+                    em.begin(QUEUE_PUT_WAIT)
                     idx: Optional[int] = None
-                    while idx is None:  # cross-process staging lease
+                    while idx is None:
                         try:
                             idx = free_q.get(timeout=0.1)
                         except _stdlib_queue.Empty:
@@ -132,7 +161,10 @@ def _worker_main(spec: HostEnvSpec, arch_cfg, hp, slot_handle,
                                 aborted = True
                                 break
                     if aborted:
+                        em.cancel()
                         break
+                    em.end()
+                    em.begin(COLLECT)
                     try:
                         obs, key, _traj, _last = collect_host(
                             act_step, pool, params, obs, key, t_max,
@@ -141,7 +173,11 @@ def _worker_main(spec: HostEnvSpec, arch_cfg, hp, slot_handle,
                     except Exception:
                         free_q.put(idx)  # don't leak the staging lease
                         raise
+                    finally:
+                        em.end()
                     ready_q.put(("rollout", idx, seq, version))
+                ready_q.put(("spans", em.ship()))
+                em.reset()  # a later run must not re-ship this run's spans
                 if aborted:
                     ready_q.put(("aborted",))
                 else:
@@ -150,7 +186,13 @@ def _worker_main(spec: HostEnvSpec, arch_cfg, hp, slot_handle,
                 # collection died (env crash, shm torn down, ...): report and
                 # survive — the drainer turns this into the actor error and
                 # the plane decides whether to reuse or stop us.
-                ready_q.put(("error", traceback.format_exc()))
+                tb = traceback.format_exc()
+                try:
+                    ready_q.put(("spans", em.ship()))
+                    em.reset()
+                except Exception:  # never mask the real failure
+                    pass
+                ready_q.put(("error", tb))
     finally:
         pool.close()
         for s in sets:
@@ -184,9 +226,10 @@ class ProcessActorDrainer(ActorBase):
     to the worker's free list.
     """
 
-    def __init__(self, worker: _WorkerHandle, queue):
-        super().__init__(queue, worker.actor_id)
+    def __init__(self, worker: _WorkerHandle, queue, telemetry=None):
+        super().__init__(queue, worker.actor_id, telemetry=telemetry)
         self._worker = worker
+        self._telemetry = telemetry
         self.final_key: Optional[np.ndarray] = None
 
     def stop(self) -> None:
@@ -225,6 +268,13 @@ class ProcessActorDrainer(ActorBase):
                 )):
                     free_q.put(idx)
                     discard = True  # drain to the terminal message
+            elif kind == "spans":
+                # the child's telemetry ring, shipped just before its
+                # terminal message: give it a trace track of its own process
+                if self._telemetry is not None:
+                    self._telemetry.merge_shipped(
+                        msg[1], pid=self.actor_id + 1
+                    )
             elif kind == "done":
                 self.final_key = msg[1]
                 return  # graceful checkout (ActorBase -> producer_done)
@@ -250,9 +300,10 @@ class _ShmSlotBridge:
     reference counting.
     """
 
-    def __init__(self, params: Any, shm_slot: ShmParamSlot):
+    def __init__(self, params: Any, shm_slot: ShmParamSlot, emitter=None):
         self._bufs = [_copy_tree(params), _copy_tree(params)]
         self._shm = shm_slot
+        self._emitter = emitter  # learner-thread-only writer (no lock)
 
     def reserve(self, version: int, timeout: Optional[float] = None):
         if not self._shm.reserve(version, timeout=timeout):
@@ -261,7 +312,16 @@ class _ShmSlotBridge:
 
     def commit(self, published: Any, version: int) -> None:
         self._bufs[version % 2] = published
-        self._shm.commit(published, version)
+        if self._emitter is not None:
+            # the one per-update D2H param copy the process plane costs —
+            # worth its own shm.copy span on the publish track
+            self._emitter.begin(SHM_COPY)
+            try:
+                self._shm.commit(published, version)
+            finally:
+                self._emitter.end()
+        else:
+            self._shm.commit(published, version)
 
 
 class ProcessActorPlane:
@@ -319,14 +379,16 @@ class ProcessActorPlane:
         return len(self._workers)
 
     def begin_run(self, queue, quota: Sequence[int], lockstep: bool,
-                  params: Any):
+                  params: Any, telemetry=None):
         """Start one ``run()``'s worth of collection on every worker.
 
         Returns ``(slot, drainers)`` with ``slot`` speaking the learner
         loop's reserve/commit protocol. The version counter rewinds to 0
         each run (workers are idle between runs, so no reader can hold a
         stale lease across the reset) — identical to the thread plane
-        building a fresh ``PingPongParamSlot`` per run.
+        building a fresh ``PingPongParamSlot`` per run. With a ``telemetry``
+        hub the drainers merge each worker's shipped span ring into it and
+        the slot bridge spans its per-update D2H publish copy.
         """
         if self._closed:
             raise RuntimeError("begin_run() on a closed ProcessActorPlane")
@@ -335,8 +397,10 @@ class ProcessActorPlane:
         for w, q in zip(self._workers, quota):
             w.stop_evt.clear()
             w.cmd_q.put(("run", int(q), bool(lockstep)))
-            drainers.append(ProcessActorDrainer(w, queue))
-        return _ShmSlotBridge(params, self._slot), drainers
+            drainers.append(ProcessActorDrainer(w, queue, telemetry=telemetry))
+        publish_em = (telemetry.emitter("shm.publish")
+                      if telemetry is not None else None)
+        return _ShmSlotBridge(params, self._slot, emitter=publish_em), drainers
 
     def close(self, join_timeout: float = 10.0) -> None:
         """Stop workers (politely, then hard) and release the shm estate.

@@ -1,20 +1,53 @@
-"""Minimal structured logging for the framework."""
+"""Minimal structured logging for the framework.
+
+Configuration is idempotent *per process state*, not per module import:
+the guard is "does the ``repro`` root logger already have handlers", so a
+host application that configured ``logging.getLogger("repro")`` itself is
+never double-handled, and a spawned worker subprocess (fresh interpreter,
+fresh module globals) configures exactly one handler of its own.
+
+``REPRO_LOG_LEVEL`` (e.g. ``DEBUG``, ``WARNING``, ``25``) overrides the
+default ``INFO`` level; an unrecognized value falls back to ``INFO`` with
+a one-time warning rather than crashing a launcher over a typo.
+"""
 from __future__ import annotations
 
 import logging
+import os
 import sys
 
 _FORMAT = "%(asctime)s %(name)s %(levelname)s %(message)s"
-_configured = False
+_level_applied = False
+
+
+def _env_level() -> int:
+    raw = os.environ.get("REPRO_LOG_LEVEL", "").strip()
+    if not raw:
+        return logging.INFO
+    level = logging.getLevelName(raw.upper())
+    if isinstance(level, int):
+        return level
+    if raw.isdigit():
+        return int(raw)
+    logging.getLogger("repro").warning(
+        "REPRO_LOG_LEVEL=%r is not a log level; using INFO", raw
+    )
+    return logging.INFO
 
 
 def get_logger(name: str) -> logging.Logger:
-    global _configured
-    if not _configured:
+    global _level_applied
+    root = logging.getLogger("repro")
+    if not root.handlers:
+        # nobody (us on an earlier call, or a host app) has configured the
+        # repro root yet: attach exactly one stderr handler
         handler = logging.StreamHandler(sys.stderr)
         handler.setFormatter(logging.Formatter(_FORMAT))
-        root = logging.getLogger("repro")
         root.addHandler(handler)
-        root.setLevel(logging.INFO)
-        _configured = True
+    if not _level_applied:
+        # apply the env override once per process, but never clobber a
+        # level a host app set explicitly before our first get_logger call
+        if root.level == logging.NOTSET or "REPRO_LOG_LEVEL" in os.environ:
+            root.setLevel(_env_level())
+        _level_applied = True
     return logging.getLogger(f"repro.{name}")

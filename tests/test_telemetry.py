@@ -1,0 +1,358 @@
+"""repro.telemetry: span rings, hub merge, trace export, derived accounting.
+
+Pins the observability subsystem's contracts:
+
+* ``SpanEmitter`` records nested spans inner-first with correct
+  containment, a full ring *drops trace detail but never accounting*
+  (per-category totals keep accumulating), ``cancel()`` discards an open
+  span entirely, and ``set_capture(False)`` keeps totals while skipping
+  ring/activity bookkeeping,
+* the Chrome trace export is schema-valid (X events over the category
+  vocabulary, thread/process metadata) and a pipelined run's trace
+  contains spans from the thread plane — and, on the process backend,
+  worker-side spans shipped across the process boundary onto ``pid != 0``
+  tracks,
+* the refactor's acceptance pin: ``RunResult``'s idle fields are *equal*
+  (float-for-float — same accumulators) to the span emitters' totals,
+* the device-plane ``log_every`` path never calls the draining
+  ``cumulative()`` (the hidden-sync regression), and ``drain_ready`` folds
+  exactly the already-materialized prefix of pending device metrics,
+* the heartbeat emits schema-complete JSONL lines and the stall watchdog
+  names the stage a stalled party is blocked in,
+* ``repro.utils.logging``: ``REPRO_LOG_LEVEL`` parsing and one-handler
+  idempotence.
+"""
+import json
+import logging
+import threading
+import time
+
+import pytest
+
+from repro.configs import PipelineConfig, get_config
+from repro.core.agents import PAACAgent, PAACConfig
+from repro.core.framework import MetricsAccumulator
+from repro.envs import GridWorld, py_bound_spec
+from repro.optim import constant
+from repro.pipeline import PipelinedRL
+from repro.telemetry import (
+    CATEGORIES,
+    COLLECT,
+    LEASE,
+    QUEUE_GET_WAIT,
+    QUEUE_PUT_WAIT,
+    SpanEmitter,
+    Telemetry,
+    capture_enabled,
+    set_capture,
+)
+from repro.utils.logging import _env_level, get_logger
+
+
+def _vector_cfg(env):
+    return get_config("paac_vector").replace(
+        obs_shape=env.obs_shape, num_actions=env.num_actions
+    )
+
+
+def _grid_pipeline(tmp_path=None, **pipe_kw):
+    env = GridWorld(8, size=4, max_steps=20)
+    agent = PAACAgent(_vector_cfg(env), PAACConfig(t_max=3))
+    return PipelinedRL(
+        GridWorld(8, size=4, max_steps=20), agent,
+        lr_schedule=constant(0.01), seed=0,
+        pipeline=PipelineConfig(queue_depth=2, **pipe_kw),
+    )
+
+
+# ---------------------------------------------------------------------------
+# SpanEmitter — ring, nesting, drops, capture switch
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_records_inner_first_with_containment():
+    em = SpanEmitter("t")
+    em.begin(COLLECT)
+    em.begin(LEASE)
+    em.end()  # closes the inner lease
+    em.end()  # closes the outer collect
+    spans = em.snapshot()
+    assert [c for c, _, _ in spans] == [LEASE, COLLECT]
+    (ic, it0, it1), (oc, ot0, ot1) = spans
+    assert ot0 <= it0 <= it1 <= ot1  # inner span nested inside the outer
+    assert em.total(LEASE) == it1 - it0
+    assert em.total(COLLECT) == ot1 - ot0
+
+
+def test_full_ring_drops_spans_but_never_totals():
+    em = SpanEmitter("t", capacity=2)
+    for i in range(5):
+        em.record(COLLECT, float(i), float(i) + 0.5)
+    assert em.count == 2  # ring holds the first two
+    assert em.drops == 3  # the rest were dropped...
+    assert em.records == 5
+    assert em.total(COLLECT) == pytest.approx(5 * 0.5)  # ...but still counted
+
+
+def test_cancel_discards_the_open_span():
+    em = SpanEmitter("t")
+    em.begin(COLLECT)
+    em.cancel()
+    assert em.records == 0
+    assert em.total(COLLECT) == 0.0
+    # the stack stayed balanced: a fresh begin/end still records
+    em.begin(LEASE)
+    em.end()
+    assert [c for c, _, _ in em.snapshot()] == [LEASE]
+
+
+def test_set_capture_off_keeps_totals_only():
+    em = SpanEmitter("t")
+    set_capture(False)
+    try:
+        assert not capture_enabled()
+        em.record(COLLECT, 1.0, 3.0)
+    finally:
+        set_capture(True)
+    assert em.count == 0 and em.drops == 0  # nothing stored, nothing "lost"
+    assert em.last_activity == 0.0
+    assert em.total(COLLECT) == 2.0  # the accounting of record survived
+
+
+def test_ship_roundtrips_through_hub_merge():
+    em = SpanEmitter("worker0", capacity=8)
+    em.record(COLLECT, 1.0, 2.0)
+    em.record(QUEUE_PUT_WAIT, 2.0, 2.25)
+    hub = Telemetry()
+    track = hub.merge_shipped(em.ship(), pid=1)
+    # same clock epoch (same process): timestamps arrive unshifted
+    assert track.snapshot() == [(COLLECT, 1.0, 2.0), (QUEUE_PUT_WAIT, 2.0, 2.25)]
+    assert track.total(COLLECT) == 1.0
+    assert any(pid == 1 for pid, _, e in hub.tracks() if e is track)
+
+
+# ---------------------------------------------------------------------------
+# trace export — schema, thread plane, process plane
+# ---------------------------------------------------------------------------
+
+
+def _load_trace(path):
+    with open(path) as f:
+        doc = json.load(f)
+    assert "traceEvents" in doc
+    return doc["traceEvents"]
+
+
+def test_pipelined_run_writes_schema_valid_trace(tmp_path):
+    path = str(tmp_path / "trace.json")
+    prl = _grid_pipeline(rollout_plane="host", trace_path=path)
+    prl.run(6)
+    events = _load_trace(path)
+    xs = [e for e in events if e["ph"] == "X"]
+    metas = [e for e in events if e["ph"] == "M"]
+    assert xs and metas
+    for e in xs:
+        assert e["name"] in CATEGORIES
+        assert e["dur"] >= 0 and e["ts"] >= 0
+        assert e["pid"] == 0  # thread plane: everything in the parent
+    names = {e["name"] for e in xs}
+    assert {"collect", "queue.put_wait", "queue.get_wait",
+            "learner.update", "publish"} <= names
+    # every track is labeled for the viewer
+    tracks = {e["args"]["name"] for e in metas if e["name"] == "thread_name"}
+    assert {"learner", "queue", "actor0"} <= tracks
+
+
+def test_device_plane_trace_contains_ring_spans(tmp_path):
+    path = str(tmp_path / "trace.json")
+    prl = _grid_pipeline(trace_path=path)  # JAX-native env -> device ring
+    prl.run(6)
+    events = _load_trace(path)
+    tracks = {e["args"]["name"] for e in events
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert "ring" in tracks  # the device ring registered its own track
+    names = {e["name"] for e in events if e["ph"] == "X"}
+    assert {"collect", "queue.get_wait", "learner.update", "publish"} <= names
+
+
+def test_process_plane_ships_worker_spans_into_the_trace(tmp_path):
+    path = str(tmp_path / "trace.json")
+    spec = py_bound_spec(4, obs_dim=4, spin=0, n_workers=2)
+    agent = PAACAgent(
+        get_config("paac_vector").replace(obs_shape=(4,), num_actions=3),
+        PAACConfig(t_max=3),
+    )
+    with PipelinedRL(
+        spec, agent, lr_schedule=None, seed=0,
+        pipeline=PipelineConfig(queue_depth=2, actor_backend="process",
+                                trace_path=path),
+    ) as prl:
+        prl.run(6)
+    events = _load_trace(path)
+    worker_xs = [e for e in events if e["ph"] == "X" and e["pid"] != 0]
+    assert worker_xs, "no worker-side spans made it across the process boundary"
+    worker_names = {e["name"] for e in worker_xs}
+    assert {"collect", "shm.copy"} <= worker_names
+    procs = {e["args"]["name"] for e in events
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"parent", "worker0"} <= procs
+
+
+# ---------------------------------------------------------------------------
+# derived accounting — RunResult fields ARE the span totals
+# ---------------------------------------------------------------------------
+
+
+def test_runresult_idle_fields_equal_span_totals():
+    prl = _grid_pipeline(num_actors=1)
+    res = prl.run(8)
+    by_name = {em.name: em for _, _, em in prl.telemetry.tracks()}
+    # learner idle == the queue consumer's get-wait total, bit for bit
+    # (GridWorld is JAX-native, so the auto plane is the device ring)
+    queue_em = by_name.get("ring") or by_name["queue"]
+    assert res.learner_idle_s == queue_em.total(QUEUE_GET_WAIT)
+    # per-actor idle == that actor's put-wait + lease totals
+    actor_em = by_name["actor0"]
+    assert res.per_actor_idle_s[0] == (
+        actor_em.total(QUEUE_PUT_WAIT) + actor_em.total(LEASE)
+    )
+    assert res.actor_idle_s == sum(res.per_actor_idle_s)
+
+
+# ---------------------------------------------------------------------------
+# device-plane log_every — the hidden-sync regression
+# ---------------------------------------------------------------------------
+
+
+def test_device_log_every_never_calls_the_draining_cumulative(monkeypatch):
+    def boom(self, key, default=0.0):
+        raise AssertionError(
+            "log_every called cumulative(): a hidden device sync"
+        )
+
+    monkeypatch.setattr(MetricsAccumulator, "cumulative", boom)
+    prl = _grid_pipeline()  # JAX-native env -> device plane, lazy metrics
+    res = prl.run(6, log_every=1)  # logs every iteration without draining
+    assert res.steps > 0
+
+
+def test_drain_ready_folds_only_the_materialized_prefix():
+    class FakeScalar:
+        def __init__(self, value, ready):
+            self.value, self.ready = value, ready
+
+        def is_ready(self):
+            return self.ready
+
+        def __float__(self):
+            return float(self.value)
+
+    acc = MetricsAccumulator(lazy=True)
+    first = FakeScalar(1.0, True)
+    second = FakeScalar(10.0, False)  # still executing on device
+    third = FakeScalar(100.0, True)
+    for s in (first, second, third):
+        acc.update({"loss": s})
+    # folds stop at the first still-executing update: the ready third dict
+    # behind it must NOT be folded out of order
+    assert acc.cumulative_nowait("loss") == 1.0
+    assert acc.last("loss") == 1.0
+    second.ready = True
+    assert acc.cumulative_nowait("loss") == 111.0
+    assert acc.last("loss") == 100.0
+    # host floats have no is_ready and are always foldable
+    acc.update({"loss": 0.5})
+    assert acc.cumulative_nowait("loss") == 111.5
+
+
+# ---------------------------------------------------------------------------
+# heartbeat + watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_appends_schema_complete_jsonl(tmp_path):
+    path = str(tmp_path / "hb.jsonl")
+    hub = Telemetry()
+    em = hub.emitter("actor0")
+    em.record(COLLECT, hub.t0, hub.t0 + 0.01)
+    hub.counter_add("steps", 64)
+    hub.set_gauge("queue_depth", lambda: 3)
+    hub.set_gauge("staleness", 1.0)
+    hub.set_gauge("broken", lambda: 1 / 0)  # must never kill the heartbeat
+    hub.heartbeat_start(path, interval=0.05, actor_emitters=[em])
+    time.sleep(0.2)
+    hub.stop()  # writes one final line on the way out
+    lines = [json.loads(l) for l in open(path) if l.strip()]
+    assert lines
+    for line in lines:
+        assert {"time_unix", "uptime_s", "steps", "steps_per_s_ema",
+                "span_drops", "actor_last_activity_s"} <= set(line)
+        assert line["queue_depth"] == 3
+        assert line["staleness"] == 1.0
+        assert line["broken"] is None
+        assert line["actor_last_activity_s"]["actor0"] is not None
+    assert lines[-1]["steps"] == 64
+
+
+def test_watchdog_names_the_blocked_stage(caplog):
+    hub = Telemetry()
+    learner = hub.emitter("learner")
+    actor = hub.emitter("actor0")
+    learner.begin(QUEUE_GET_WAIT)  # stuck waiting, recording nothing
+    with caplog.at_level(logging.WARNING, logger="repro.telemetry"):
+        hub.watchdog_start(0.2, [("learner", learner, None),
+                                 ("actor0", actor, lambda: False)])
+        time.sleep(0.6)
+        hub.stop()
+    learner.end()
+    text = caplog.text
+    assert "stall watchdog" in text
+    assert "learner: blocked in queue.get_wait" in text
+    assert "actor0: exited" in text
+    # one report per stall episode, not one per poll tick
+    assert text.count("stall watchdog") == 1
+
+
+def test_watchdog_stays_quiet_while_progress_flows(caplog):
+    hub = Telemetry()
+    em = hub.emitter("learner")
+    stop = threading.Event()
+
+    def ticker():
+        while not stop.is_set():
+            em.record(COLLECT, time.perf_counter() - 1e-4)
+            time.sleep(0.02)
+
+    t = threading.Thread(target=ticker, daemon=True)
+    t.start()
+    with caplog.at_level(logging.WARNING, logger="repro.telemetry"):
+        hub.watchdog_start(0.15, [("learner", em, None)])
+        time.sleep(0.5)
+        hub.stop()
+    stop.set()
+    t.join(timeout=2.0)
+    assert "stall watchdog" not in caplog.text
+
+
+# ---------------------------------------------------------------------------
+# utils.logging — REPRO_LOG_LEVEL + handler idempotence
+# ---------------------------------------------------------------------------
+
+
+def test_env_level_parses_names_digits_and_garbage(monkeypatch):
+    monkeypatch.delenv("REPRO_LOG_LEVEL", raising=False)
+    assert _env_level() == logging.INFO
+    monkeypatch.setenv("REPRO_LOG_LEVEL", "debug")
+    assert _env_level() == logging.DEBUG
+    monkeypatch.setenv("REPRO_LOG_LEVEL", "25")
+    assert _env_level() == 25
+    monkeypatch.setenv("REPRO_LOG_LEVEL", "LOUD")
+    assert _env_level() == logging.INFO  # typo falls back, never raises
+
+
+def test_get_logger_attaches_exactly_one_handler():
+    root = logging.getLogger("repro")
+    get_logger("a")
+    get_logger("b")
+    assert len(root.handlers) == 1
+    assert get_logger("a") is logging.getLogger("repro.a")
