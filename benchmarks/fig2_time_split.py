@@ -45,7 +45,7 @@ import numpy as np
 from benchmarks.common import emit, time_call
 from repro.configs import PipelineConfig, get_config
 from repro.core import ParallelRL
-from repro.core.agents import PAACAgent, PAACConfig
+from repro.core.agents import DQNAgent, DQNConfig, PAACAgent, PAACConfig
 from repro.envs import AtariLike, FrameStack, HostEnvPool, PyBoundEnv, py_bound_spec
 from repro.envs.base import VectorEnv
 from repro.optim import constant
@@ -374,6 +374,110 @@ def run_device_ring(n_e: int = 16, obs_dim: int = 32768, width: int = 16,
         },
         "steps_per_s": results,
         "device_vs_host_speedup": {"num_actors": pivot, "speedup": speedup,
+                                   "target": target},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Replay plane — pipelined replay-DQN vs the synchronous scan-based DQN
+# ---------------------------------------------------------------------------
+
+
+def run_replay_ring(n_e: int = 16, obs_dim: int = 16384, width: int = 16,
+                    t_max: int = 6, iters: int = 40,
+                    actor_counts=(1, 2, 4), warmup: int = 4,
+                    repeats: int = 3, replay_capacity: int = 16,
+                    replay_batch: int = 1, sync_capacity: int = 512,
+                    target: float = 1.2):
+    """Steps/s for the replay-plane DQN vs the synchronous scan-based DQN.
+
+    The off-policy rung of the plane ladder: ``ParallelRL``'s scan-based
+    DQN is one fused jitted program per iteration — ε-greedy acting *and*
+    per-transition replay scatter *and* a sampled TD update, all serial on
+    the critical path, with the transition-level replay buffer
+    (``sync_capacity × obs_dim``, obs + next_obs) carried through the scan.
+    The replay-plane ``PipelinedRL`` splits that program: actor threads run
+    the detached ε-greedy collector and ``put`` whole rollouts into the
+    device-resident ``ReplayRing`` (never blocking — FIFO eviction absorbs
+    a slow learner), while the learner thread samples resident rollouts and
+    updates concurrently. Because Q-learning's target is defined
+    off-policy, the sampled-stale rollouts need no correction — this is the
+    plane where acting and learning genuinely decouple.
+
+    Fairness: the sync baseline's ``batch_size`` is pinned to
+    ``n_e · t_max`` — exactly the transitions one sampled rollout feeds the
+    pipelined learner per update at ``replay_batch=1`` — so both sides do
+    the same per-update TD work and the measured gap is scheduling plus the
+    scatter/gather the scan pays and the ring does not. Same wide-obs
+    thin-trunk payload-bound shape and per-actor env pools as
+    ``run_device_ring``; each cell is best-of-``repeats``. The acceptance
+    figure is pipelined-replay steps/s at ``num_actors=2`` over the sync
+    scan baseline (target ≥ ``target``); the grid lands in
+    ``BENCH_pipeline.json`` under ``replay_ring``.
+    """
+    cfg = get_config("paac_vector").replace(
+        obs_shape=(obs_dim,), num_actions=3, cnn_dense=width, d_model=width
+    )
+    # throughput bench: the ε/target cadences just need to be well-defined
+    agent = DQNAgent(cfg, DQNConfig(t_max=t_max, batch_size=n_e * t_max,
+                                    eps_steps=1_000, target_sync=100))
+
+    def make_env():
+        return WideObsJaxEnv(n_e, obs_dim)
+
+    results = {"sync": {}, "replay": {}}
+    tps, _, _ = _best_of(
+        lambda: ParallelRL(make_env(), agent, lr_schedule=constant(1e-3),
+                           seed=0, replay_capacity=sync_capacity),
+        iters, warmup, repeats,
+    )
+    results["sync"][1] = tps
+    emit(
+        f"fig2_time_split/replay_sync/ne={n_e}",
+        1e6 * n_e * t_max / max(tps, 1e-9),
+        f"steps_per_s={tps:.0f};batch={n_e * t_max};capacity={sync_capacity}",
+    )
+    shard_steps = n_e * t_max  # per-actor pools: full width at every count
+    for n_actors in actor_counts:
+        tps, idle_s, stale = _best_of(
+            lambda: PipelinedRL(
+                [make_env() for _ in range(n_actors)], agent,
+                lr_schedule=constant(1e-3), seed=0,
+                pipeline=PipelineConfig(
+                    queue_depth=max(2, n_actors), num_actors=n_actors,
+                    rollout_plane="device", replay_plane=True,
+                    replay_capacity=replay_capacity,
+                    replay_batch=replay_batch,
+                ),
+            ),
+            iters, warmup, repeats,
+        )
+        results["replay"][n_actors] = tps
+        wall = iters * shard_steps / max(tps, 1e-9)
+        emit(
+            f"fig2_time_split/replay_ring/na={n_actors}",
+            1e6 * shard_steps / max(tps, 1e-9),
+            f"steps_per_s={tps:.0f};"
+            f"learner_idle%={100 * idle_s / max(wall, 1e-9):.0f};"
+            f"staleness={stale:.1f}",
+        )
+    pivot = 2 if 2 in results["replay"] else max(results["replay"])
+    speedup = results["replay"][pivot] / max(results["sync"][1], 1e-9)
+    emit(
+        "fig2_time_split/replay_ring_speedup",
+        0.0,
+        f"replay_vs_sync_na{pivot}={speedup:.2f}x (target >={target}x)",
+    )
+    return {
+        "config": {
+            "n_e": n_e, "obs_dim": obs_dim, "width": width, "t_max": t_max,
+            "iters": iters, "repeats": repeats,
+            "actor_counts": list(actor_counts),
+            "replay_capacity": replay_capacity, "replay_batch": replay_batch,
+            "sync_capacity": sync_capacity, "sync_batch": n_e * t_max,
+        },
+        "steps_per_s": results,
+        "replay_vs_sync_speedup": {"num_actors": pivot, "speedup": speedup,
                                    "target": target},
     }
 
@@ -840,7 +944,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--only",
                     choices=("fig2", "pipelined", "multi", "procs", "mesh",
-                             "telemetry"),
+                             "telemetry", "replay"),
                     default="")
     ap.add_argument("--num-actors", type=int, nargs="+", default=(1, 2, 4),
                     help="actor counts for the multi-actor sweep")
@@ -859,5 +963,8 @@ if __name__ == "__main__":
                            **({"iters": args.iters} if args.iters else {}))
     if args.only in ("", "mesh"):
         run_mesh_ring(**({"iters": args.iters} if args.iters else {}))
+    if args.only in ("", "replay"):
+        run_replay_ring(actor_counts=tuple(args.num_actors),
+                        **({"iters": args.iters} if args.iters else {}))
     if args.only in ("", "telemetry"):
         run_telemetry_overhead(**({"iters": args.iters} if args.iters else {}))

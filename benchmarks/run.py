@@ -14,14 +14,15 @@ profile, so a new benchmark cannot land in ``quick``/``full`` while
 silently missing from the CI smoke: any job without a ``ci`` column must be
 listed in ``CI_EXCLUDED`` (with a reason), or the harness refuses to start.
 
-The ``fig2_ring``, ``fig2_procs``, ``fig2_mesh`` and ``fig2_telemetry``
-jobs additionally write ``BENCH_pipeline.json`` (path via ``--out-json``):
-the machine-readable steps/s grids for sync vs host-queue vs device-ring
-(``steps_per_s``), thread vs process actor backends on a GIL-holding env
-(``process_actors``), the mesh plane at 1/2/4 devices (``mesh_ring``),
-and span capture on vs off (``telemetry_overhead`` — the proof the
-always-on instrumentation stays within its 2% budget) — the perf
-trajectory future PRs diff against.
+The ``fig2_ring``, ``fig2_procs``, ``fig2_mesh``, ``fig2_telemetry`` and
+``fig2_replay`` jobs additionally write ``BENCH_pipeline.json`` (path via
+``--out-json``): the machine-readable steps/s grids for sync vs host-queue
+vs device-ring (``steps_per_s``), thread vs process actor backends on a
+GIL-holding env (``process_actors``), the mesh plane at 1/2/4 devices
+(``mesh_ring``), span capture on vs off (``telemetry_overhead`` — the
+proof the always-on instrumentation stays within its 2% budget), and the
+replay plane's pipelined replay-DQN vs sync scan-DQN grid
+(``replay_ring``) — the perf trajectory future PRs diff against.
 """
 from __future__ import annotations
 
@@ -64,6 +65,15 @@ PARAMS = {
         # ships specs, and round-trips shm payloads under the ci profile
         "ci": {"n_e": 2, "n_w": 2, "obs_dim": 16, "width": 32, "t_max": 2,
                "iters": 3, "actor_counts": (1, 2), "spin": 300, "warmup": 1},
+    },
+    "fig2_replay": {
+        "quick": {}, "full": {"iters": 120, "repeats": 3},
+        # tiny but end-to-end: the replay-plane DQN really runs actor
+        # threads against a ReplayRing, and the sync scan-DQN baseline
+        # really carries its transition buffer through the scan
+        "ci": {"n_e": 4, "obs_dim": 128, "width": 16, "t_max": 2, "iters": 4,
+               "warmup": 1, "repeats": 1, "actor_counts": (1, 2),
+               "replay_capacity": 4, "sync_capacity": 64},
     },
     "fig2_mesh": {
         "quick": {}, "full": {"iters": 120, "repeats": 3},
@@ -131,6 +141,7 @@ def main() -> None:
     procs_result = {}
     mesh_result = {}
     telemetry_result = {}
+    replay_result = {}
 
     def fig2_ring_job(**kw):
         ring_result.update(fig2_time_split.run_device_ring(**kw))
@@ -144,6 +155,9 @@ def main() -> None:
     def fig2_telemetry_job(**kw):
         telemetry_result.update(fig2_time_split.run_telemetry_overhead(**kw))
 
+    def fig2_replay_job(**kw):
+        replay_result.update(fig2_time_split.run_replay_ring(**kw))
+
     runners = {
         "kernels": kernels_bench.run,
         "table1": table1_throughput.run,
@@ -154,6 +168,7 @@ def main() -> None:
         "fig2_procs": fig2_procs_job,
         "fig2_mesh": fig2_mesh_job,
         "fig2_telemetry": fig2_telemetry_job,
+        "fig2_replay": fig2_replay_job,
         "fig34": fig34_ne_scaling.run,
         "baselines": baselines.run,
         "roofline": roofline.run,
@@ -174,7 +189,8 @@ def main() -> None:
             # keep the harness going; record the failure
             print(f"{name},0.0,ERROR={type(e).__name__}:{e}", file=sys.stdout)
 
-    if ring_result or procs_result or mesh_result or telemetry_result:
+    if (ring_result or procs_result or mesh_result or telemetry_result
+            or replay_result):
         # merge-on-write: a partial run (e.g. the mesh-smoke job's
         # `--only fig2_mesh` under forced host devices) refreshes only its
         # own grid and leaves the other committed rows intact. Each grid
@@ -204,6 +220,10 @@ def main() -> None:
             # (run_telemetry_overhead): proof the always-on instrumentation
             # stays within the 2% budget
             payload["telemetry_overhead"] = {**telemetry_result, **stamp}
+        if replay_result:
+            # the replay-plane grid (run_replay_ring): pipelined replay-DQN
+            # vs the synchronous scan-based DQN at 1/2/4 actors
+            payload["replay_ring"] = {**replay_result, **stamp}
         with open(args.out_json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")

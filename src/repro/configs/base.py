@@ -133,6 +133,22 @@ class PipelineConfig:
     ``"auto"``). ``lockstep`` requires a single actor *stream*:
     ``num_actors == 1``, or the mesh plane (whose lanes are consumed in
     lockstep sets anyway — one sub-rollout per lane per update).
+
+    **Replay plane** (``replay_plane=True``): the trajectory stream becomes a
+    sampled ``ReplayRing`` instead of a FIFO ring — actors *never block* on
+    the learner (a full ring evicts its oldest rollout), sampled slots are
+    *retained* for reuse, and each learner update draws ``replay_batch``
+    resident rollouts (uniformly, or TD-error-weighted with
+    ``prioritized=True``). This is the off-policy plane: it drives
+    ``DQNAgent`` (whose TD target needs no staleness correction) and
+    off-policy PAAC/PPO (V-trace clips correct the sampled rollouts'
+    staleness ≫ 1). Replay payloads are device-resident whole rollouts, so
+    the plane requires JAX-native envs with ``actor_backend="thread"``,
+    ``rollout_plane`` of ``"auto"``/``"device"`` and ``mesh_shape == 1``;
+    ``prioritized``/``replay_capacity``/``replay_batch`` in turn require
+    ``replay_plane=True`` (they have no FIFO meaning). ``replay_capacity``
+    counts resident *rollouts* (each ``t_max × shard_envs`` transitions),
+    ``replay_batch`` is rollouts sampled per update.
     """
 
     queue_depth: int = 2
@@ -143,6 +159,11 @@ class PipelineConfig:
     rollout_plane: str = "auto"  # "auto" | "device" | "host" | "mesh"
     actor_backend: str = "thread"  # "thread" | "process"
     mesh_shape: int = 1  # devices on the ("data",) rollout mesh
+    # off-policy replay plane (sampled ReplayRing instead of the FIFO ring)
+    replay_plane: bool = False
+    replay_capacity: int = 64  # resident rollouts before FIFO eviction
+    replay_batch: int = 1  # rollouts sampled per learner update
+    prioritized: bool = False  # TD-error-weighted sampling (else uniform)
     # observability (repro.telemetry; see docs/observability.md). Span
     # recording itself is always on — it *is* the RunResult idle accounting;
     # these knobs control the exports and the observer threads:
@@ -187,6 +208,38 @@ class PipelineConfig:
                 "actor_backend='process' forces the host rollout plane"
                 " (worker rollouts are born in shared memory); rollout_plane"
                 f"={self.rollout_plane!r} is a contradiction"
+            )
+        if self.replay_capacity < 1:
+            raise ValueError(
+                f"replay_capacity must be >= 1, got {self.replay_capacity}")
+        if self.replay_batch < 1:
+            raise ValueError(
+                f"replay_batch must be >= 1, got {self.replay_batch}")
+        if self.replay_plane:
+            if self.actor_backend == "process":
+                raise ValueError(
+                    "replay_plane requires actor_backend='thread': replay"
+                    " payloads are device-resident whole rollouts and cannot"
+                    " ride the process backend's shared-memory staging"
+                )
+            if self.mesh_shape > 1 or self.rollout_plane == "mesh":
+                raise ValueError(
+                    "replay_plane does not compose with the mesh plane yet:"
+                    " a sampled batch would have to draw one sub-rollout per"
+                    " lane coherently; use mesh_shape=1"
+                )
+            if self.rollout_plane == "host":
+                raise ValueError(
+                    "replay_plane requires the device plane (rollout_plane"
+                    " 'auto' or 'device'): the ReplayRing retains sampled"
+                    " slots on the accelerator, which the host TrajectoryQueue"
+                    " staging buffers cannot do"
+                )
+        elif self.prioritized:
+            raise ValueError(
+                "prioritized=True requires replay_plane=True: FIFO rings"
+                " consume each rollout exactly once, so sampling priorities"
+                " have no meaning there"
             )
 
 

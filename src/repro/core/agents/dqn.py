@@ -29,6 +29,48 @@ class DQNConfig(NamedTuple):
     t_max: int = 5  # env steps per framework iteration (buffer fill rate)
 
 
+def dqn_td_target(q_next, reward, done, gamma: float):
+    """Double-batched Q-learning target: r + γ·(1−done)·max_a' Q_target.
+
+    ``q_next`` is the *target network's* Q-values at the successor states
+    (B, A); reward/done are (B,). Shared by the scan-based synchronous step
+    and the pipelined replay learner step so the TD math cannot drift."""
+    return reward + gamma * (1.0 - done.astype(jnp.float32)) * jnp.max(
+        q_next, axis=-1
+    )
+
+
+def dqn_loss(params, target_params, batch, cfg, gamma: float):
+    """TD MSE over a transition batch dict (obs/action/reward/next_obs/done).
+
+    Returns ``(loss, metrics)`` — the single loss definition every DQN
+    driver (scan train step, replay-plane learner step, test oracles)
+    evaluates."""
+    def q_of(p, obs):
+        q, _, _ = policy_apply(p, cfg, obs)
+        return q
+
+    q = q_of(params, batch["obs"])
+    q_a = jnp.take_along_axis(q, batch["action"][:, None], axis=1)[:, 0]
+    target = dqn_td_target(
+        q_of(target_params, batch["next_obs"]), batch["reward"], batch["done"],
+        gamma,
+    )
+    td = jax.lax.stop_gradient(target) - q_a
+    return jnp.mean(jnp.square(td)), {"q_mean": jnp.mean(q_a)}
+
+
+def dqn_sync_target(target, params, updates, target_sync: int):
+    """Post-update target maintenance: ``updates + 1`` and a hard sync of
+    the target tree every ``target_sync`` updates (Mnih et al. 2015)."""
+    updates = updates + 1
+    sync = (updates % target_sync) == 0
+    target = jax.tree_util.tree_map(
+        lambda t, p: jnp.where(sync, p, t), target, params
+    )
+    return target, updates
+
+
 class DQNAgent(Agent):
     on_policy = False
 
@@ -45,6 +87,14 @@ class DQNAgent(Agent):
 
         return fn
 
+    def epsilon(self, step):
+        """Linear ε schedule: ``eps_start → eps_end`` over ``eps_steps``
+        train steps, clamped at both endpoints. Works on concrete ints and
+        traced step counters alike."""
+        hp = self.hp
+        frac = jnp.clip(step / hp.eps_steps, 0.0, 1.0)
+        return hp.eps_start + (hp.eps_end - hp.eps_start) * frac
+
     def init_state(self, capacity: int, obs_shape, params, obs_dtype=jnp.float32):
         return {
             "replay": replay_init(capacity, obs_shape, obs_dtype),
@@ -59,19 +109,8 @@ class DQNAgent(Agent):
             q, _, _ = policy_apply(params, cfg, obs)
             return q
 
-        def eps_at(step):
-            frac = jnp.clip(step / hp.eps_steps, 0.0, 1.0)
-            return hp.eps_start + (hp.eps_end - hp.eps_start) * frac
-
         def loss_fn(params, target_params, batch):
-            q = q_of(params, batch["obs"])
-            q_a = jnp.take_along_axis(q, batch["action"][:, None], axis=1)[:, 0]
-            q_next = q_of(target_params, batch["next_obs"])
-            target = batch["reward"] + hp.gamma * (
-                1.0 - batch["done"].astype(jnp.float32)
-            ) * jnp.max(q_next, axis=-1)
-            td = jax.lax.stop_gradient(target) - q_a
-            return jnp.mean(jnp.square(td)), {"q_mean": jnp.mean(q_a)}
+            return dqn_loss(params, target_params, batch, cfg, hp.gamma)
 
         def train_step(params, opt_state, agent_state, env_state, obs, key, step):
             # ---- acting: ε-greedy master over all actors (lines 4-10) -----
@@ -81,7 +120,8 @@ class DQNAgent(Agent):
                 q = q_of(params, obs)
                 greedy = jnp.argmax(q, axis=-1)
                 rand = jax.random.randint(k_act, greedy.shape, 0, q.shape[-1])
-                explore = jax.random.uniform(k_eps, greedy.shape) < eps_at(step)
+                explore = (jax.random.uniform(k_eps, greedy.shape)
+                           < self.epsilon(step))
                 action = jnp.where(explore, rand, greedy)
                 env_state, next_obs, reward, done = env.step(env_state, action, k_env)
                 replay = replay_add(
@@ -103,10 +143,9 @@ class DQNAgent(Agent):
             lr = lr_schedule(step)
             params, opt_state = optimizer.update(grads, opt_state, params, lr)
 
-            updates = agent_state["updates"] + 1
-            sync = (updates % hp.target_sync) == 0
-            target = jax.tree_util.tree_map(
-                lambda t, p: jnp.where(sync, p, t), agent_state["target"], params
+            target, updates = dqn_sync_target(
+                agent_state["target"], params, agent_state["updates"],
+                hp.target_sync,
             )
             agent_state = dict(agent_state, target=target, updates=updates)
             metrics = dict(metrics)

@@ -26,9 +26,23 @@ def replay_init(capacity: int, obs_shape, obs_dtype=jnp.float32) -> Dict:
 
 
 def replay_add(buf: Dict, obs, action, reward, next_obs, done) -> Dict:
-    """Add a batch of transitions (E, ...) at the ring pointer."""
+    """Add a batch of transitions (E, ...) at the ring pointer.
+
+    Requires ``E <= capacity``: with a wider batch the modular index wraps
+    onto itself and ``.at[idx].set`` writes duplicate indices, whose
+    application order XLA leaves unspecified — the buffer would silently
+    hold an arbitrary subset of the batch. Both sizes are static shapes, so
+    the misuse is rejected at trace time rather than sampled as garbage
+    later.
+    """
     E = action.shape[0]
     cap = buf["action"].shape[0]
+    if E > cap:
+        raise ValueError(
+            f"replay_add: batch of {E} transitions exceeds capacity {cap} — "
+            "duplicate scatter indices have unspecified write order; grow "
+            "the buffer or split the batch"
+        )
     idx = (buf["ptr"] + jnp.arange(E)) % cap
     return {
         "obs": buf["obs"].at[idx].set(obs),
@@ -42,7 +56,24 @@ def replay_add(buf: Dict, obs, action, reward, next_obs, done) -> Dict:
 
 
 def replay_sample(buf: Dict, key, batch_size: int) -> Dict:
-    idx = jax.random.randint(key, (batch_size,), 0, jnp.maximum(buf["size"], 1))
+    """Uniformly sample ``batch_size`` stored transitions (with replacement).
+
+    An empty buffer has nothing to sample: the ``max(size, 1)`` guard below
+    exists only so the draw bound stays positive *under jit*, where ``size``
+    is a tracer and cannot be branched on — there the caller owns the
+    never-sample-before-first-add invariant (the scan-based DQN train step
+    adds ``t_max·E`` transitions before its first sample, so the invariant
+    holds by construction). When ``size`` is concrete (eager callers), an
+    empty buffer raises instead of returning the zero-initialized garbage
+    rows it used to.
+    """
+    size = buf["size"]
+    if not isinstance(size, jax.core.Tracer) and int(size) == 0:
+        raise ValueError(
+            "replay_sample on an empty buffer — it would return "
+            "zero-initialized garbage transitions; add before sampling"
+        )
+    idx = jax.random.randint(key, (batch_size,), 0, jnp.maximum(size, 1))
     return {
         "obs": buf["obs"][idx],
         "action": buf["action"][idx],

@@ -32,6 +32,16 @@ Perfetto-viewable Chrome trace of every plane's spans, a JSONL liveness
 heartbeat, and the stall watchdog naming the stage each party is blocked
 in when progress stops.
 
+``--replay`` swaps the pipeline's FIFO trajectory ring for the sampled
+``ReplayRing`` (the off-policy plane): actors never block — a full ring
+evicts its oldest rollout — and each learner update samples
+``--replay-batch`` of the ``--replay-capacity`` resident rollouts
+(uniformly, or TD-error-weighted with ``--prioritized``). ``--algo dqn``
+selects the value-based agent: synchronous scan-based DQN without
+``--pipeline``, the replay-fed pipelined TD learner with
+``--pipeline --replay``; ``--algo paac`` (default) under ``--replay``
+runs the V-trace learner off-policy on sampled stale rollouts.
+
 Examples:
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
         --iterations 20
@@ -39,6 +49,9 @@ Examples:
         --iterations 20 --pipeline --queue-depth 2 --rho-bar 1.0
     PYTHONPATH=src python -m repro.launch.train --arch paac_vector \
         --iterations 40 --pipeline --num-actors 4 --n-envs 16
+    PYTHONPATH=src python -m repro.launch.train --arch paac_vector \
+        --algo dqn --iterations 40 --pipeline --replay --num-actors 2 \
+        --replay-capacity 32 --replay-batch 1
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --reduced \
         --mode synthetic --iterations 5
 """
@@ -82,6 +95,25 @@ def run_rl(args):
             "--trace/--metrics-jsonl/--stall-timeout observe the pipeline "
             "backend's telemetry hub: add --pipeline"
         )
+    if args.replay and not args.pipeline:
+        raise SystemExit(
+            "--replay selects the pipeline's sampled ReplayRing plane: add "
+            "--pipeline (the synchronous DQN has its own scan-based replay)"
+        )
+    if args.prioritized and not args.replay:
+        raise SystemExit(
+            "--prioritized weights the ReplayRing's sampling: add --replay"
+        )
+    if args.algo == "dqn" and args.pipeline and not args.replay:
+        raise SystemExit(
+            "--algo dqn under --pipeline needs the replay plane: add "
+            "--replay (the FIFO planes feed the on-policy V-trace learner)"
+        )
+    if args.replay and (args.host_env or args.actor_backend == "process"):
+        raise SystemExit(
+            "--replay requires a JAX-native env on the device plane: it "
+            "cannot combine with --host-env/--actor-backend process"
+        )
     host_env = args.host_env or args.actor_backend == "process"
     if host_env:
         # GIL-holding external-emulator path (repro.envs.pyemu): the regime
@@ -104,7 +136,13 @@ def run_rl(args):
         cfg = cfg.replace(num_actions=env.vocab)
         if cfg.family == "cnn":  # vector/cnn policies act on the raw obs
             cfg = cfg.replace(obs_shape=env.obs_shape)
-    agent = PAACAgent(cfg, PAACConfig(t_max=args.t_max, entropy_beta=0.01))
+    if args.algo == "dqn":
+        from repro.core.agents import DQNAgent, DQNConfig
+
+        agent = DQNAgent(cfg, DQNConfig(t_max=args.t_max))
+    else:
+        agent = PAACAgent(cfg, PAACConfig(t_max=args.t_max,
+                                          entropy_beta=0.01))
     if args.pipeline:
         from repro.configs import PipelineConfig
         from repro.pipeline import PipelinedRL
@@ -117,6 +155,10 @@ def run_rl(args):
                                     rollout_plane=args.rollout_plane,
                                     actor_backend=args.actor_backend,
                                     mesh_shape=args.mesh,
+                                    replay_plane=args.replay,
+                                    replay_capacity=args.replay_capacity,
+                                    replay_batch=args.replay_batch,
+                                    prioritized=args.prioritized,
                                     trace_path=args.trace,
                                     metrics_jsonl=args.metrics_jsonl,
                                     stall_timeout_s=args.stall_timeout),
@@ -210,6 +252,21 @@ def main():
                     "actor lane per device, env axis sharded, gradients "
                     "all-reduced over the mesh's data axis (CPU: set "
                     "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--algo", choices=("paac", "dqn"), default="paac",
+                    help="agent family: on-policy PAAC (V-trace under the "
+                    "pipeline) or value-based DQN (scan-based sync, or the "
+                    "replay-fed pipelined learner with --pipeline --replay)")
+    ap.add_argument("--replay", action="store_true",
+                    help="pipeline: swap the FIFO trajectory ring for the "
+                    "sampled ReplayRing (off-policy plane; actors never "
+                    "block — a full ring evicts its oldest rollout)")
+    ap.add_argument("--replay-capacity", type=int, default=64,
+                    help="ReplayRing capacity in resident rollouts "
+                    "(each n_envs/num_actors × t_max transitions)")
+    ap.add_argument("--replay-batch", type=int, default=1,
+                    help="rollouts sampled per learner update")
+    ap.add_argument("--prioritized", action="store_true",
+                    help="TD-error-weighted replay sampling (else uniform)")
     ap.add_argument("--actor-backend", choices=("thread", "process"),
                     default="thread",
                     help="where actor replicas run: threads (GIL-free env "

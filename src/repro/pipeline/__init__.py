@@ -51,6 +51,22 @@ the data axis inside the same fused-publish donated dispatch. CPU CI
 exercises the full grid via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
+Replay plane — the off-policy stream (``PipelineConfig.replay_plane``):
+the FIFO device ring swapped for a sampled ``ReplayRing``
+(``repro.pipeline.replay_ring``). Same device-resident never-drop payload
+contract, but ``put()`` *never blocks* — a full ring evicts its oldest
+rollout FIFO-by-ticket instead of backpressuring, so actors never stall on
+a slow learner — and ``get()`` *samples* ``replay_batch`` resident
+rollouts (uniform, or TD-error-weighted with ``prioritized=True``),
+retaining the slots for reuse. One ``get()`` is licensed per fresh rollout
+ticket, so the learner loop's cadence (and the lockstep/quota machinery)
+is unchanged. It feeds two learners: ``DQNAgent`` via the replay-fed TD
+step (``repro.pipeline.offpolicy`` — collection is the jitted ε-greedy
+scan, the TD target is staleness-proof by construction) and off-policy
+PAAC, whose V-trace clips correct sampled rollouts of staleness ≫ 1.
+``SyncReplayDQN`` (same module) is the serial reference driver the
+bitwise lockstep pin compares against.
+
 Process plane — *GIL-holding* Python emulators (``PipelineConfig.
 actor_backend = "process"``): the host plane's actor replicas moved into
 worker subprocesses, because a Python-bound emulator's ``step`` executes
@@ -116,6 +132,12 @@ Modules:
 * ``MeshTrajectoryRing`` — the device ring grown per-device sub-rings for
   the mesh plane, reassembling lane sub-rollouts into globally-sharded
   payloads (``repro.pipeline.ring``),
+* ``ReplayRing`` — the sampled off-policy twin: never-block evicting
+  ``put``, retained-slot sampling ``get``, optional TD-error priorities
+  (``repro.pipeline.replay_ring``),
+* ``make_dqn_collect_fn`` / ``make_dqn_learner_step`` / ``SyncReplayDQN``
+  — ε-greedy collection, the replay-fed TD learner step, and the serial
+  reference driver for the replay plane (``repro.pipeline.offpolicy``),
 * ``ActorThread`` / ``ParamSlot`` / ``PingPongParamSlot`` /
   ``HostStagingRing`` / ``collect_host`` — leased double-buffered rollout
   collection for JAX-native envs and ``HostEnvPool``
@@ -155,8 +177,14 @@ from repro.pipeline.actor import (
     collect_host,
 )
 from repro.pipeline.learner import make_learner_step, make_sharded_learner_step
+from repro.pipeline.offpolicy import (
+    SyncReplayDQN,
+    make_dqn_collect_fn,
+    make_dqn_learner_step,
+)
 from repro.pipeline.orchestrator import PipelinedRL
 from repro.pipeline.queue import CLOSED, QueueClosed, TrajectoryQueue
+from repro.pipeline.replay_ring import ReplayRing
 from repro.pipeline.ring import DeviceTrajectoryRing, MeshTrajectoryRing
 from repro.pipeline.shm import ShmParamSlot, ShmParamView, ShmStagingSet
 from repro.pipeline.worker import ProcessActorDrainer, ProcessActorPlane
@@ -175,13 +203,17 @@ __all__ = [
     "ProcessActorDrainer",
     "ProcessActorPlane",
     "QueueClosed",
+    "ReplayRing",
     "Rollout",
     "ShmParamSlot",
+    "SyncReplayDQN",
     "ShmParamView",
     "ShmStagingSet",
     "StagingSet",
     "TrajectoryQueue",
     "collect_host",
+    "make_dqn_collect_fn",
+    "make_dqn_learner_step",
     "make_learner_step",
     "make_sharded_learner_step",
 ]

@@ -1,0 +1,252 @@
+"""DQN through the pipeline: ε-greedy collection + replay-fed learner step.
+
+The paper's framework claims algorithm agnosticism (§3); the pipeline
+cashes the off-policy half of that claim here. Three pieces:
+
+* ``make_dqn_collect_fn`` — the acting half of the scan-based DQN train
+  step (``repro.core.agents.dqn``) detached into a standalone jittable
+  rollout collector, exactly as ``make_collect_fn`` detaches PAAC acting:
+  one jitted program collects ``t_max`` ε-greedy steps whose output feeds
+  the device-resident ``ReplayRing`` without touching host memory. The ε
+  schedule is driven by the *rollout index* the caller threads through
+  (each actor replica counts its own rollouts); in lockstep mode that
+  index equals the learner step, matching the synchronous schedule.
+* ``make_dqn_learner_step`` — the learning half on a *sampled rollout*
+  batch: flatten the ``(T, E)`` trajectory into ``T·E`` transitions
+  (successor observations reconstructed from the time axis plus the
+  bootstrap ``last_obs``), one double-batched TD update against the target
+  network, periodic hard target sync. Same fused-publish/donation shape as
+  ``make_learner_step``: the extra ``target``/``updates`` state rides the
+  signature as explicit donated arguments (the orchestrator keeps them
+  learner-private, like params/opt state).
+* ``SyncReplayDQN`` — the *synchronous replay reference*: the same jitted
+  collect, the same ``ReplayRing`` (same sample seed), the same learner
+  step, driven serially by one thread (collect → put → get → update).
+  This is the driver the bitwise lockstep pin compares against — the
+  pipelined run must reproduce it bit for bit, proving the thread/queue
+  machinery adds zero numerics. (The *scan-based* ``ParallelRL`` DQN is a
+  different program — per-transition replay, interleaved acting/learning
+  RNG — and is the benchmark's throughput baseline, not the bitwise
+  reference.)
+
+DQN needs no V-trace: Q-learning's TD target is defined off-policy, so
+stale rollouts are corrected by construction. The PAAC/PPO replay path
+reuses ``make_learner_step``'s V-trace clips instead (the acting-time
+``Transition.logp`` recorded here is the ε-greedy behaviour policy's, so
+importance-corrected learners could also consume these rollouts).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.agents.dqn import dqn_loss, dqn_sync_target
+from repro.core.framework import (
+    MetricsAccumulator,
+    RunResult,
+    init_rl_common,
+)
+from repro.core.rollout import Transition
+from repro.models import policy_apply
+from repro.pipeline.replay_ring import ReplayRing
+
+__all__ = ["make_dqn_collect_fn", "make_dqn_learner_step", "SyncReplayDQN"]
+
+
+def make_dqn_collect_fn(agent, env, t_max: int) -> Callable:
+    """Standalone jittable ε-greedy rollout collector for ``DQNAgent``.
+
+    Returns ``collect(params, env_state, obs, key, rollout_idx) ->
+    (env_state, last_obs, key, traj)`` — the acting scan of the synchronous
+    DQN train step with the replay writes removed (the pipeline's ring
+    stores whole rollouts instead). Per step the key splits
+    ``(k_eps, k_act, k_env)`` exactly like the scan body; ε comes from
+    ``agent.epsilon(rollout_idx)``. ``Transition.value`` carries the greedy
+    Q-value and ``Transition.logp`` the ε-greedy behaviour log-prob
+    ``log((1−ε)·1[a = argmax Q] + ε/A)`` so the payload keeps the canonical
+    layout (and stays consumable by importance-corrected learners).
+    """
+    cfg = agent.cfg
+
+    def q_of(params, obs):
+        q, _, _ = policy_apply(params, cfg, obs)
+        return q
+
+    def collect(params, env_state, obs, key, rollout_idx):
+        eps = agent.epsilon(rollout_idx)
+
+        def body(carry, _):
+            env_state, obs, key = carry
+            key, k_eps, k_act, k_env = jax.random.split(key, 4)
+            q = q_of(params, obs)
+            greedy = jnp.argmax(q, axis=-1)
+            n_actions = q.shape[-1]
+            rand = jax.random.randint(k_act, greedy.shape, 0, n_actions)
+            explore = jax.random.uniform(k_eps, greedy.shape) < eps
+            action = jnp.where(explore, rand, greedy)
+            value = jnp.max(q, axis=-1)
+            logp = jnp.log(
+                jnp.where(action == greedy, 1.0 - eps + eps / n_actions,
+                          eps / n_actions)
+            )
+            env_state, next_obs, reward, done = env.step(
+                env_state, action, k_env)
+            tr = Transition(obs, action, reward, done, value, logp)
+            return (env_state, next_obs, key), tr
+
+        (env_state, obs, key), traj = jax.lax.scan(
+            body, (env_state, obs, key), None, length=t_max
+        )
+        return env_state, obs, key, traj
+
+    return collect
+
+
+def make_dqn_learner_step(agent, optimizer, lr_schedule,
+                          fused_publish: bool = False) -> Callable:
+    """Build the replay-fed DQN learner's jittable update step.
+
+    ``fused_publish=False``:
+    ``(params, opt_state, target, updates, traj, last_obs, step) ->
+    (params, opt_state, target, updates, metrics)``.
+    ``fused_publish=True`` appends the donation-ready publish exactly like
+    ``make_learner_step`` (extra ``publish_dst`` argument, extra
+    ``published`` output); the orchestrator jits it with
+    ``donate_argnums=(0, 1, 2, 3, 7)`` — params, opt state, target and the
+    updates counter are all learner-private and shape-alias their outputs.
+
+    The sampled rollout is time-major ``(T, E, …)``; successor observations
+    are ``obs`` shifted one step with the bootstrap ``last_obs`` closing
+    the window, flattened to a ``T·E``-transition double-batched TD update
+    (the same ``dqn_loss`` the synchronous scan step evaluates).
+    """
+    cfg, hp = agent.cfg, agent.hp
+
+    def _update(params, opt_state, target, updates, traj, last_obs, step):
+        T, E = traj.action.shape
+        next_obs = jnp.concatenate([traj.obs[1:], last_obs[None]], axis=0)
+
+        def flat(x):
+            return x.reshape((T * E,) + x.shape[2:])
+
+        batch = {
+            "obs": flat(traj.obs),
+            "action": flat(traj.action),
+            "reward": flat(traj.reward),
+            "next_obs": flat(next_obs),
+            "done": flat(traj.done),
+        }
+        (loss, metrics), grads = jax.value_and_grad(
+            dqn_loss, has_aux=True)(params, target, batch, cfg, hp.gamma)
+        lr = lr_schedule(step)
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        target, updates = dqn_sync_target(target, params, updates,
+                                          hp.target_sync)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        # |TD|-mean as the batch priority signal for prioritized replay
+        metrics["td_abs"] = jnp.sqrt(loss)
+        metrics["reward_sum"] = jnp.sum(traj.reward)
+        metrics["episodes"] = jnp.sum(traj.done)
+        return params, opt_state, target, updates, metrics
+
+    if not fused_publish:
+        return _update
+
+    def learner_step(params, opt_state, target, updates, traj, last_obs,
+                     step, publish_dst):
+        del publish_dst  # donation target only: its buffers back `published`
+        params, opt_state, target, updates, metrics = _update(
+            params, opt_state, target, updates, traj, last_obs, step
+        )
+        published = jax.tree_util.tree_map(lambda a: a.copy(), params)
+        return params, opt_state, target, updates, published, metrics
+
+    return learner_step
+
+
+class SyncReplayDQN:
+    """Synchronous replay-DQN reference driver (the bitwise pin's baseline).
+
+    ``ParallelRL``'s API (``run(iterations) -> RunResult``) over exactly
+    the components the replay-plane ``PipelinedRL`` schedules
+    asynchronously: the jitted ``make_dqn_collect_fn`` collector, a
+    ``ReplayRing`` seeded identically, and the jitted
+    ``make_dqn_learner_step`` — executed serially on the calling thread,
+    one collect → ``put`` → ``get`` (sample) → update per iteration. A
+    depth-1 lockstep pipelined run with the same seed and replay shape
+    must reproduce this driver's params and metrics *bit for bit* (the
+    test-suite pin): the RNG layout (``init_rl_common``), the per-rollout
+    ε index, the ring's ``fold_in`` sample stream and the update math are
+    all shared, so the only thing the pipeline adds is scheduling.
+    """
+
+    def __init__(self, env, agent, *, optimizer: str = "rmsprop",
+                 lr_schedule=None, seed: int = 0, replay_capacity: int = 64,
+                 replay_batch: int = 1, prioritized: bool = False):
+        self.env = env
+        self.agent = agent
+        (self.optimizer, self.lr_schedule, self.key, k_env, self.params,
+         self.opt_state) = init_rl_common(env, agent, optimizer, lr_schedule,
+                                          seed)
+        self.env_state = env.reset(k_env)
+        self.obs = env.observe(self.env_state)
+        # learner-private target tree: a copy, so donating params can never
+        # delete the target's buffers out from under the next update
+        self._target = jax.tree_util.tree_map(lambda a: a.copy(), self.params)
+        self._updates = jnp.zeros((), jnp.int32)
+        self._seed = seed
+        self._capacity = replay_capacity
+        self._batch = replay_batch
+        self._prioritized = prioritized
+        self._collect_jit = jax.jit(
+            make_dqn_collect_fn(agent, env, agent.hp.t_max))
+        self._update_step = jax.jit(
+            make_dqn_learner_step(agent, self.optimizer, self.lr_schedule),
+            donate_argnums=(1,),
+        )
+        self.total_steps = 0
+        self._rollouts = 0  # lifetime rollout counter: the ε-schedule index
+        self._steps_per_iter = env.n_envs * agent.hp.t_max
+        self.ring: ReplayRing | None = None  # per-run; kept for inspection
+
+    def run(self, iterations: int, log_every: int = 0) -> RunResult:
+        from repro.pipeline.actor import Rollout
+
+        del log_every
+        # a fresh ring per run, exactly like the pipeline's per-run queue:
+        # replay residency is a run-scoped resource, and the sample stream
+        # is a pure function of (seed, within-run consume index) — what the
+        # bitwise pin against the pipelined twin depends on
+        self.ring = ReplayRing(
+            capacity=self._capacity, batch_size=self._batch, producers=1,
+            prioritized=self._prioritized, sample_seed=self._seed,
+        )
+        acc = MetricsAccumulator()
+        step_arr = jnp.asarray(self.total_steps, jnp.int32)
+        for _ in range(iterations):
+            i = self._rollouts
+            self.env_state, self.obs, self.key, traj = self._collect_jit(
+                self.params, self.env_state, self.obs, self.key,
+                jnp.asarray(i, jnp.int32),
+            )
+            self._rollouts = i + 1
+            self.ring.put(Rollout(traj, self.obs, behavior_version=i,
+                                  actor_id=0, seq=i))
+            payload = self.ring.get()
+            (self.params, self.opt_state, self._target, self._updates,
+             metrics) = self._update_step(
+                self.params, self.opt_state, self._target, self._updates,
+                payload.traj, payload.last_obs, step_arr,
+            )
+            if self._prioritized:
+                self.ring.update_priorities(
+                    self.ring.last_sampled,
+                    [float(metrics["td_abs"])] * len(self.ring.last_sampled),
+                )
+            step_arr = step_arr + 1
+            self.total_steps += self._steps_per_iter
+            acc.update(dict(metrics))
+        return acc.result(self.total_steps, self._steps_per_iter)

@@ -55,6 +55,16 @@ Fig. 2 "50% env time" recovered, and scaled past what one actor can hide.
 On the device plane the win is the removed host round trip plus full
 donation: one fused dispatch per iteration, no staging copies, no
 steady-state allocation (``benchmarks/fig2_time_split.run_device_ring``).
+
+A third stream variant is the *replay plane* (``PipelineConfig.
+replay_plane``): the FIFO ring is swapped for a sampled ``ReplayRing`` —
+actors never block (a full ring evicts its oldest rollout), each update
+*samples* ``replay_batch`` retained rollouts, and the learner step is
+either DQN's replay-fed TD update (``repro.pipeline.offpolicy``) or the
+same V-trace PAAC step consuming rollouts whose staleness the clips
+correct. The run() loop below is unchanged: the ring speaks the queue
+surface (one ``get()`` per fresh rollout ticket), and ``_apply_update``
+hides which learner-private state rides the update signature.
 """
 from __future__ import annotations
 
@@ -127,14 +137,26 @@ class PipelinedRL:
         seed: int = 0,
         pipeline: PipelineConfig = PipelineConfig(),
     ):
+        from repro.core.agents.dqn import DQNAgent
         from repro.core.agents.paac import PAACAgent
 
-        # exact type: subclasses (LaggedPAACAgent) and look-alikes (PPOAgent)
-        # carry their own loss/state that make_learner_step would silently drop
-        if type(agent) is not PAACAgent:
+        # exact types: subclasses (LaggedPAACAgent) and look-alikes (PPOAgent)
+        # carry their own loss/state that make_learner_step would silently
+        # drop. DQNAgent rides only the replay plane (its learner step is the
+        # replay-fed TD update, not V-trace).
+        self._replay = pipeline.replay_plane
+        self._dqn = type(agent) is DQNAgent
+        if self._dqn and not self._replay:
+            raise ValueError(
+                "DQNAgent needs the replay plane: pass PipelineConfig("
+                "replay_plane=True) — the FIFO planes feed the on-policy "
+                "V-trace learner"
+            )
+        if not self._dqn and type(agent) is not PAACAgent:
             raise NotImplementedError(
-                f"PipelinedRL drives plain PAACAgent (got {type(agent).__name__}); "
-                "its learner step hard-codes the V-trace PAAC loss"
+                f"PipelinedRL drives plain PAACAgent (got {type(agent).__name__}) "
+                "on the FIFO planes, plus DQNAgent on the replay plane; other "
+                "agents carry losses the learner steps would silently drop"
             )
         n_actors = pipeline.num_actors
         if n_actors < 1:
@@ -216,7 +238,15 @@ class PipelinedRL:
             self._proc_specs = None
             self._host = hasattr(env, "step_host")
         self._n_actors = n_actors  # mesh plane: one lane per mesh device
+        self._seed = seed  # the ReplayRing's sample stream seed
         self._plane = self._resolve_plane(pipeline.rollout_plane)
+        if self._replay and self._plane != "device":
+            raise ValueError(
+                "replay_plane requires a JAX-native env on the device plane: "
+                "the ReplayRing retains sampled rollouts on the accelerator, "
+                "which host-born payloads (HostEnvPool / process backend) "
+                "cannot do"
+            )
         if self._plane == "mesh":
             from repro.launch.mesh import make_rollout_mesh
 
@@ -230,6 +260,14 @@ class PipelinedRL:
         (self.optimizer, self.lr_schedule, self.key, k_env, self.params,
          self.opt_state) = init_rl_common(env, agent, optimizer, lr_schedule,
                                           seed)
+        if self._dqn:
+            # learner-private DQN state rides the update signature next to
+            # params/opt state. The target tree must be a *copy*: the first
+            # update donates self.params, and an aliased target would have
+            # its buffers deleted out from under the TD evaluation.
+            self._target = jax.tree_util.tree_map(
+                lambda a: a.copy(), self.params)
+            self._updates = jnp.zeros((), jnp.int32)
         if self._plane == "mesh":
             # learner state lives replicated on the rollout mesh: every
             # device holds a full copy, the sharded step's gradient
@@ -275,9 +313,17 @@ class PipelinedRL:
             else:
                 self._act = None
                 # all replicas share one jitted collector (same shard shapes)
-                self._collect_jit = jax.jit(
-                    make_collect_fn(act, self._actor_envs[0], agent.hp.t_max)
-                )
+                if self._dqn:
+                    from repro.pipeline.offpolicy import make_dqn_collect_fn
+
+                    self._collect_jit = jax.jit(make_dqn_collect_fn(
+                        agent, self._actor_envs[0], agent.hp.t_max))
+                else:
+                    self._collect_jit = jax.jit(make_collect_fn(
+                        act, self._actor_envs[0], agent.hp.t_max))
+        # per-replica lifetime rollout counters: the DQN collector's ε-schedule
+        # index (persists across run() calls, like the synchronous schedule)
+        self._actor_seq = [0] * n_actors
 
         # the fused learner step: dequeue-consume + update + publish in one
         # dispatch. Donated: params and opt state (learner-private — actors
@@ -298,6 +344,16 @@ class PipelinedRL:
                 rho_bar=pipeline.rho_bar, c_bar=pipeline.c_bar,
                 fused_publish=True,
             )
+        elif self._dqn:
+            # the replay-fed TD step: target tree and updates counter are
+            # learner-private donated state exactly like params/opt state
+            from repro.pipeline.offpolicy import make_dqn_learner_step
+
+            self._update_step = jax.jit(
+                make_dqn_learner_step(agent, self.optimizer, self.lr_schedule,
+                                      fused_publish=True),
+                donate_argnums=(0, 1, 2, 3, 7),
+            )
         else:
             self._update_step = jax.jit(
                 make_learner_step(agent, self.optimizer, self.lr_schedule,
@@ -305,6 +361,26 @@ class PipelinedRL:
                                   c_bar=pipeline.c_bar, fused_publish=True),
                 donate_argnums=(0, 1, 5),
             )
+        # one adapter per agent family so the run() loop stays agnostic:
+        # (traj, last_obs, step, publish_dst) -> (published, metrics),
+        # threading whatever learner-private state the step carries
+        if self._dqn:
+            def _apply(traj, last_obs, step_arr, publish_dst):
+                (self.params, self.opt_state, self._target, self._updates,
+                 published, metrics) = self._update_step(
+                    self.params, self.opt_state, self._target, self._updates,
+                    traj, last_obs, step_arr, publish_dst,
+                )
+                return published, metrics
+        else:
+            def _apply(traj, last_obs, step_arr, publish_dst):
+                self.params, self.opt_state, published, metrics = \
+                    self._update_step(
+                        self.params, self.opt_state, traj, last_obs,
+                        step_arr, publish_dst,
+                    )
+                return published, metrics
+        self._apply_update = _apply
         self.total_steps = 0
         # one learned rollout = one actor shard's n_envs·t_max timesteps —
         # except on the mesh plane, where every update consumes one
@@ -344,6 +420,17 @@ class PipelinedRL:
         return plane
 
     def _make_queue(self, n_actors: int, telemetry=None):
+        if self._replay:
+            from repro.pipeline.replay_ring import ReplayRing
+
+            return ReplayRing(
+                capacity=self.pipeline.replay_capacity,
+                batch_size=self.pipeline.replay_batch,
+                producers=n_actors,
+                prioritized=self.pipeline.prioritized,
+                sample_seed=self._seed,
+                telemetry=telemetry,
+            )
         if self._plane == "mesh":
             return MeshTrajectoryRing(self.pipeline.queue_depth,
                                       self._rollout_mesh, telemetry=telemetry)
@@ -460,6 +547,23 @@ class PipelinedRL:
                     # zero, so the collect must have fully executed (and the
                     # view dropped) first — also what bounds in-flight work
                     jax.block_until_ready(traj.reward)
+                    self._actor_env_state[i] = env_state
+                    self._actor_obs[i] = last_obs
+                    return key, traj, last_obs, None
+
+            elif self._dqn:
+
+                def collect(params, key):
+                    # the ε-schedule index: this replica's lifetime rollout
+                    # count (in lockstep it equals the learner step, matching
+                    # the synchronous schedule)
+                    n = self._actor_seq[i]
+                    env_state, last_obs, key, traj = collect_jit(
+                        params, self._actor_env_state[i], self._actor_obs[i],
+                        key, jnp.asarray(n, jnp.int32),
+                    )
+                    jax.block_until_ready(traj.reward)
+                    self._actor_seq[i] = n + 1
                     self._actor_env_state[i] = env_state
                     self._actor_obs[i] = last_obs
                     return key, traj, last_obs, None
@@ -592,11 +696,9 @@ class PipelinedRL:
                 # is what the trace's learner track attributes
                 learner_em.begin(LEARNER_UPDATE)
                 try:
-                    self.params, self.opt_state, published, metrics = \
-                        self._update_step(
-                            self.params, self.opt_state, payload.traj,
-                            payload.last_obs, step_arr, publish_dst,
-                        )
+                    published, metrics = self._apply_update(
+                        payload.traj, payload.last_obs, step_arr, publish_dst,
+                    )
                 finally:
                     learner_em.end()
                 learner_em.begin(PUBLISH)
@@ -612,6 +714,17 @@ class PipelinedRL:
                 metrics = dict(metrics)
                 metrics["staleness"] = float(i - payload.behavior_version)
                 hub.set_gauge("staleness", metrics["staleness"])
+                if self._replay and self.pipeline.prioritized:
+                    # feed the update's |TD| back as the sampled slots' new
+                    # priorities (the float() syncs on the metric scalar —
+                    # the prioritized path trades one async dispatch for the
+                    # feedback loop)
+                    p = metrics.get("td_abs")
+                    pr = float(jnp.abs(metrics["loss"]) if p is None else p)
+                    queue.update_priorities(
+                        queue.last_sampled,
+                        [pr] * len(queue.last_sampled),
+                    )
                 # eager (host plane): blocks on the metric scalars => the
                 # update (and the H2D copy of the staged payload) has fully
                 # executed. Lazy (device plane): no sync — just stashes.

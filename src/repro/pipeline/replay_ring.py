@@ -1,0 +1,356 @@
+"""Device-resident sampled replay ring — the pipeline's off-policy plane.
+
+``DeviceTrajectoryRing`` is a FIFO: every payload is consumed exactly once,
+in ticket order, and a full ring *blocks* its producers (backpressure is
+the staleness bound for on-policy learners). Off-policy algorithms invert
+both halves of that contract: the learner wants to *sample* — uniformly or
+by priority — over a window of past rollouts, reusing each many times, and
+a slow learner must never throttle acting (experience generation is the
+scarce resource; Mnih et al. 2015, Horgan et al. 2018).
+
+``ReplayRing`` is the FIFO ring's sampled twin, keeping everything that
+made the device plane safe and changing exactly the two contract points
+above:
+
+* **same plane, same policing** — payloads are device arrays end to end
+  (numpy leaves raise ``TypeError`` at ``put``), slots are preallocated
+  references, and device memory is bounded at ``capacity`` resident
+  rollouts.
+* **never-drop means never-block** — ``put`` on a full ring *evicts* the
+  oldest resident slot (FIFO by ticket) instead of blocking: the ring drops
+  the ring's *oldest memory*, never the producer's *stream*. Actors run at
+  full speed no matter how slow the learner is. Every accepted put is still
+  ticket-stamped (tickets are the eviction order and the freshness
+  accounting).
+* **sampled get, retained slots** — ``sample(key, batch)`` draws ``batch``
+  resident slots (with replacement; uniform, or ∝ priority with
+  ``prioritized=True``) and *retains* them: slots are reused across
+  updates and retired only by eviction or shutdown. Ownership therefore
+  does NOT transfer on sampling — the learner must not donate sampled
+  trajectory buffers (the orchestrator's learner jit never donates the
+  trajectory argument, so this falls out for free). An evicted slot's
+  reference is dropped by the ring; its device memory returns to the
+  allocator as soon as no in-flight learner batch still holds it.
+
+The stream surface (``get``/``producer_done``/``close``/``CLOSED``) is kept
+so ``ActorThread`` and the ``PipelinedRL`` learner loop drive this plane
+unchanged. ``get()`` is **ticket-paced sampling**: it blocks until the ring
+holds at least one *unconsumed* ticket (one fresh put per learner update —
+the same 1:1 produce/consume pacing as the FIFO planes, which is what
+keeps actor quotas, lockstep mode and the bitwise sync-equivalence pin
+meaningful), consumes that ticket, then samples ``batch_size`` resident
+slots and concatenates them along the env axis into one synthetic
+``Rollout`` (``actor_id=-2``, ``seq`` = consume index, ``behavior_version``
+= the *minimum* over the sampled slots — staleness reports the oldest
+experience in the batch). Eviction never breaks pacing: tickets are
+counts, not slot-bound, so a fresh put whose payload is later evicted
+still licenses exactly one update.
+
+Sampling RNG: the ring owns a deterministic key stream —
+``fold_in(PRNGKey(sample_seed), consume_index)`` — so a run's sample
+sequence is a pure function of ``(sample_seed, consume order)``. That is
+what lets the synchronous reference driver (``repro.pipeline.offpolicy.
+SyncReplayDQN``) reproduce a lockstep pipelined run bit for bit: both
+drivers push the same rollouts through a ring with the same seed.
+
+Prioritized sampling is a categorical draw over the per-slot priorities
+(``jax.random.choice`` with ``p`` — the device-side Gumbel/categorical
+formulation). Slots here are whole rollouts, not transitions, so
+``capacity`` is small (tens to low thousands) and the O(capacity) draw
+beats a sum-tree's O(log n) with its host-side pointer chasing; a sum-tree
+becomes worth it only for per-transition PER at millions of entries. New
+slots enter at the current maximum priority (everything is sampled at
+least once — Schaul et al. 2016); ``update_priorities`` feeds TD errors
+back for the tickets reported by ``last_sampled``.
+"""
+from __future__ import annotations
+
+import queue as _queue
+import threading
+import time
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pipeline.queue import CLOSED, QueueClosed
+from repro.pipeline.ring import _assert_device_resident
+from repro.telemetry.spans import (
+    QUEUE_GET_WAIT,
+    REPLAY_ADD,
+    REPLAY_EVICT,
+    REPLAY_SAMPLE,
+    SpanEmitter,
+)
+
+__all__ = ["ReplayRing"]
+
+
+class _ReplaySlot:
+    """One resident rollout: payload reference, ticket tag, priority."""
+
+    __slots__ = ("payload", "ticket", "full", "priority")
+
+    def __init__(self):
+        self.payload: Any = None
+        self.ticket: int = -1
+        self.full: bool = False
+        self.priority: float = 1.0
+
+
+class ReplayRing:
+    """Bounded multi-producer ring of on-device rollout slots, sampled with
+    retention instead of consumed FIFO.
+
+    Same stream surface as ``DeviceTrajectoryRing`` (``put`` / ``get`` /
+    ``producer_done`` / ``close`` / ``CLOSED`` / idle accounting), so
+    actors and the learner loop drive either plane interchangeably — but
+    ``put`` never blocks (full ring evicts oldest-by-ticket) and ``get``
+    samples ``batch_size`` resident slots per consumed ticket rather than
+    popping one. See the module docstring for the full contract.
+    """
+
+    def __init__(self, capacity: int = 64, batch_size: int = 1,
+                 producers: int = 1, prioritized: bool = False,
+                 sample_seed: int = 0, telemetry=None, name: str = "replay"):
+        if capacity < 1:
+            raise ValueError(f"replay capacity must be >= 1, got {capacity}")
+        if batch_size < 1:
+            raise ValueError(
+                f"replay batch_size must be >= 1, got {batch_size}")
+        if producers < 1:
+            raise ValueError(f"producers must be >= 1, got {producers}")
+        self.capacity = capacity
+        self.batch_size = batch_size
+        self.prioritized = prioritized
+        self._slots: List[_ReplaySlot] = [
+            _ReplaySlot() for _ in range(capacity)]
+        self._tail = 0  # next ticket to issue (total accepted puts)
+        self._evict_head = 0  # oldest resident ticket (evictions advance it)
+        self._consumed = 0  # tickets consumed by get() (pacing counter)
+        self._cond = threading.Condition()
+        self._producers_left = producers
+        self._closed = False
+        self._sample_base = jax.random.PRNGKey(sample_seed)
+        # tickets drawn by the most recent get(): the learner's handle for
+        # update_priorities (single consumer, so a plain attribute is safe)
+        self.last_sampled: Tuple[int, ...] = ()
+        self.evictions = 0  # total slots retired by full-ring puts
+        if telemetry is not None:
+            self.span_emitter = telemetry.emitter(name, locked=True)
+        else:
+            self.span_emitter = SpanEmitter(name, locked=True)
+
+    # -- accounting (same surface as the FIFO planes) ------------------------
+    @property
+    def put_wait_s(self) -> float:
+        """Always 0.0 — replay puts never block — kept for plane parity."""
+        return 0.0
+
+    @property
+    def get_wait_s(self) -> float:
+        """Learner idle (no fresh ticket) — span-derived."""
+        return self.span_emitter.total(QUEUE_GET_WAIT)
+
+    @property
+    def tickets_issued(self) -> int:
+        """Total puts accepted over the ring's lifetime (monotone)."""
+        with self._cond:
+            return self._tail
+
+    def qsize(self) -> int:
+        """Fresh (unconsumed) tickets — the pacing depth, not residency."""
+        with self._cond:
+            return self._tail - self._consumed
+
+    @property
+    def resident(self) -> int:
+        """Rollouts currently held (sampleable): ``min(puts, capacity)``."""
+        with self._cond:
+            return self._tail - self._evict_head
+
+    def resident_tickets(self) -> List[int]:
+        """Tickets of the resident slots, oldest first (test/debug surface)."""
+        with self._cond:
+            return list(range(self._evict_head, self._tail))
+
+    # -- producer side -------------------------------------------------------
+    def put(self, item: Any, timeout: Optional[float] = None) -> None:
+        """Deposit a device-resident rollout; never blocks on a full ring.
+
+        A full ring evicts its oldest resident slot (FIFO by ticket,
+        ``replay.evict`` span) before inserting — the producer stream is
+        never dropped and never throttled. Raises ``QueueClosed`` on a
+        closed ring and ``TypeError`` for host-memory payloads. ``timeout``
+        is accepted for queue-surface parity but never needed.
+        """
+        del timeout  # surface parity: a replay put cannot block
+        _assert_device_resident(item)
+        t0 = time.perf_counter()
+        try:
+            with self._cond:
+                if self._closed:
+                    raise QueueClosed("put() on a closed ReplayRing")
+                if self._tail - self._evict_head >= self.capacity:
+                    te = time.perf_counter()
+                    slot = self._slots[self._evict_head % self.capacity]
+                    # drop the ring's reference: the evicted rollout's device
+                    # memory returns to the allocator once no in-flight
+                    # learner batch still reads it
+                    slot.payload = None
+                    slot.ticket = -1
+                    slot.full = False
+                    self._evict_head += 1
+                    self.evictions += 1
+                    self.span_emitter.record(REPLAY_EVICT, te)
+                ticket = self._tail
+                self._tail = ticket + 1
+                slot = self._slots[ticket % self.capacity]
+                assert not slot.full, "replay invariant: slot must be free"
+                slot.payload = item
+                slot.ticket = ticket
+                slot.full = True
+                # fresh experience enters at the current max priority so it
+                # is sampled at least once before TD errors rerank it
+                slot.priority = max(
+                    (s.priority for s in self._slots if s.full), default=1.0
+                )
+                self._cond.notify_all()
+        finally:
+            self.span_emitter.record(REPLAY_ADD, t0)
+
+    # -- sampling ------------------------------------------------------------
+    def _draw(self, key, batch_size: int) -> List[_ReplaySlot]:
+        """Pick ``batch_size`` resident slots (with replacement). Caller
+        holds the lock; at least one slot is resident."""
+        residents = [self._slots[t % self.capacity]
+                     for t in range(self._evict_head, self._tail)]
+        n = len(residents)
+        if self.prioritized:
+            prios = np.asarray([s.priority for s in residents], np.float64)
+            total = prios.sum()
+            if total <= 0.0:  # all-zero priorities degrade to uniform
+                prios = np.ones(n)
+                total = float(n)
+            idx = np.asarray(jax.random.choice(
+                key, n, (batch_size,), replace=True,
+                p=jnp.asarray(prios / total),
+            ))
+        else:
+            idx = np.asarray(jax.random.randint(key, (batch_size,), 0, n))
+        return [residents[int(i)] for i in idx]
+
+    def sample(self, key, batch_size: Optional[int] = None) -> List[Any]:
+        """Draw ``batch_size`` resident rollouts (retained, not consumed).
+
+        The direct sampling surface (the stream-paced learner path goes
+        through ``get``). Raises ``queue.Empty`` on an empty ring — sampling
+        nothing is a caller bug, not a valid batch — and records the
+        ``replay.sample`` span. Returns the payloads oldest-draw order as
+        sampled; ``last_sampled`` is set to their tickets.
+        """
+        if batch_size is None:
+            batch_size = self.batch_size
+        t0 = time.perf_counter()
+        try:
+            with self._cond:
+                if self._tail == self._evict_head:
+                    raise _queue.Empty
+                slots = self._draw(key, batch_size)
+                self.last_sampled = tuple(s.ticket for s in slots)
+                return [s.payload for s in slots]
+        finally:
+            self.span_emitter.record(REPLAY_SAMPLE, t0)
+
+    def update_priorities(self, tickets: Sequence[int],
+                          priorities: Sequence[float]) -> None:
+        """Feed TD-error priorities back for previously sampled tickets.
+
+        Tickets that were evicted since the sample are silently skipped (the
+        experience is gone; its priority is moot). Priorities are clamped to
+        a small positive floor so no resident slot starves forever.
+        """
+        with self._cond:
+            for t, p in zip(tickets, priorities):
+                if self._evict_head <= t < self._tail:
+                    slot = self._slots[t % self.capacity]
+                    if slot.ticket == t:
+                        slot.priority = max(float(p), 1e-6)
+
+    # -- consumer (stream) side ---------------------------------------------
+    def get(self, timeout: Optional[float] = None) -> Any:
+        """One sampled batch per fresh ticket: the learner-loop surface.
+
+        Blocks until an unconsumed ticket exists (accumulating learner idle
+        time), consumes it, samples ``batch_size`` resident slots with the
+        ring's deterministic key stream, and returns them concatenated
+        along the env axis as one synthetic ``Rollout``. Returns ``CLOSED``
+        once the ring is closed (or all producers checked out) and every
+        ticket is consumed; raises stdlib ``queue.Empty`` on timeout.
+        """
+        from repro.pipeline.actor import Rollout
+
+        t0 = time.perf_counter()
+        try:
+            with self._cond:
+                if not self._cond.wait_for(
+                    lambda: self._closed or self._consumed < self._tail,
+                    timeout=timeout,
+                ):
+                    raise _queue.Empty
+                if self._consumed >= self._tail:
+                    return CLOSED  # closed and ticket-drained
+                seq = self._consumed
+                self._consumed = seq + 1
+                key = jax.random.fold_in(self._sample_base, seq)
+                ts = time.perf_counter()
+                slots = self._draw(key, self.batch_size)
+                self.last_sampled = tuple(s.ticket for s in slots)
+                parts = [s.payload for s in slots]
+                version = min(p.behavior_version for p in parts)
+                self._cond.notify_all()
+        finally:
+            self.span_emitter.record(QUEUE_GET_WAIT, t0)
+        # assembly outside the lock: producers must not stall behind a
+        # device concat. Single consumer, so the slot references taken
+        # above cannot race another get (eviction only drops the ring's
+        # reference — `parts` keeps the payloads alive for this batch).
+        try:
+            if len(parts) == 1:
+                traj, last_obs = parts[0].traj, parts[0].last_obs
+            else:
+                traj = jax.tree_util.tree_map(
+                    lambda *ls: jnp.concatenate(ls, axis=1),
+                    *[p.traj for p in parts],
+                )
+                last_obs = jnp.concatenate([p.last_obs for p in parts],
+                                           axis=0)
+            return Rollout(
+                traj=traj,
+                last_obs=last_obs,
+                behavior_version=version,
+                actor_id=-2,  # replay-sampled: no single producing replica
+                seq=seq,
+                release=None,  # device plane: slots are ring-owned
+            )
+        finally:
+            self.span_emitter.record(REPLAY_SAMPLE, ts)
+
+    # -- shutdown (same protocol as the FIFO planes) -------------------------
+    def producer_done(self) -> None:
+        """One producer finished its quota; the stream closes when the last
+        producer checks out (the consumer drains remaining tickets, then
+        sees ``CLOSED``)."""
+        with self._cond:
+            self._producers_left -= 1
+            if self._producers_left <= 0:
+                self._closed = True
+            self._cond.notify_all()
+
+    def close(self) -> None:
+        """Hard abort: wakes producers (``QueueClosed``) and the consumer
+        (``CLOSED`` after remaining tickets drain). Idempotent."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()

@@ -28,6 +28,9 @@ from repro.telemetry.spans import (
     PUBLISH,
     QUEUE_GET_WAIT,
     QUEUE_PUT_WAIT,
+    REPLAY_ADD,
+    REPLAY_EVICT,
+    REPLAY_SAMPLE,
     SHM_COPY,
     SpanEmitter,
     capture_enabled,
@@ -45,6 +48,9 @@ __all__ = [
     "LEARNER_UPDATE",
     "SHM_COPY",
     "MESH_REASSEMBLE",
+    "REPLAY_ADD",
+    "REPLAY_SAMPLE",
+    "REPLAY_EVICT",
     "SpanEmitter",
     "Telemetry",
     "ShippedTrack",

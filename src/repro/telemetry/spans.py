@@ -49,14 +49,20 @@ __all__ = [
     "LEARNER_UPDATE",
     "SHM_COPY",
     "MESH_REASSEMBLE",
+    "REPLAY_ADD",
+    "REPLAY_SAMPLE",
+    "REPLAY_EVICT",
     "SpanEmitter",
     "set_capture",
     "capture_enabled",
 ]
 
-# the fixed pipeline vocabulary — every plane speaks these eight stages
-# (an emitter may carry its own table, e.g. the serve launcher's
-# prefill/decode, but the pipeline emitters all use this one)
+# the fixed pipeline vocabulary — every plane speaks these stages (an
+# emitter may carry its own table, e.g. the serve launcher's
+# prefill/decode, but the pipeline emitters all use this one). The three
+# replay.* stages belong to the sampled ReplayRing plane: add (a producer
+# deposit), sample (the learner's batched draw over resident slots) and
+# evict (FIFO retirement of the oldest slot when the ring is full).
 CATEGORIES: Tuple[str, ...] = (
     "collect",
     "queue.put_wait",
@@ -66,6 +72,9 @@ CATEGORIES: Tuple[str, ...] = (
     "learner.update",
     "shm.copy",
     "mesh.reassemble",
+    "replay.add",
+    "replay.sample",
+    "replay.evict",
 )
 COLLECT = 0
 QUEUE_PUT_WAIT = 1
@@ -75,6 +84,9 @@ PUBLISH = 4
 LEARNER_UPDATE = 5
 SHM_COPY = 6
 MESH_REASSEMBLE = 7
+REPLAY_ADD = 8
+REPLAY_SAMPLE = 9
+REPLAY_EVICT = 10
 
 _MAX_DEPTH = 8  # open-span nesting the preallocated stack covers
 

@@ -7,6 +7,7 @@ These validate the paper's claims at miniature scale:
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs import get_config
@@ -61,6 +62,88 @@ def test_dqn_learns_gridworld():
     rl.run(400)
     last = rl.run(30).mean_metrics["reward_sum"]
     assert last > first + 0.3, (first, last)
+
+
+def test_dqn_epsilon_schedule_endpoints():
+    """Linear ε schedule clamps at both ends and interpolates between."""
+    env = GridWorld(8, size=3, max_steps=15)
+    hp = DQNConfig(eps_start=1.0, eps_end=0.05, eps_steps=100)
+    agent = DQNAgent(_vector_cfg(env), hp)
+    assert float(agent.epsilon(0)) == pytest.approx(hp.eps_start)
+    assert float(agent.epsilon(50)) == pytest.approx(0.525)
+    assert float(agent.epsilon(100)) == pytest.approx(hp.eps_end)
+    assert float(agent.epsilon(10_000)) == pytest.approx(hp.eps_end)
+    # traced step counters take the same path (the scan body's usage)
+    assert float(jax.jit(agent.epsilon)(jnp.asarray(0))) == pytest.approx(
+        hp.eps_start)
+
+
+def test_dqn_target_sync_cadence():
+    """The target tree hard-syncs exactly every ``target_sync`` updates and
+    holds still in between."""
+    from repro.core.agents.dqn import dqn_sync_target
+
+    target = {"w": jnp.zeros(3)}
+    updates = jnp.zeros((), jnp.int32)
+    synced_at = []
+    for step in range(1, 8):
+        params = {"w": jnp.full(3, float(step))}
+        target, updates = dqn_sync_target(target, params, updates,
+                                          target_sync=3)
+        assert int(updates) == step
+        if float(target["w"][0]) == float(step):
+            synced_at.append(step)
+        else:
+            assert float(target["w"][0]) in (0.0, 3.0, 6.0)
+    assert synced_at == [3, 6]
+
+
+def test_dqn_td_target_matches_numpy_oracle():
+    from repro.core.agents.dqn import dqn_td_target
+
+    rng = np.random.default_rng(0)
+    B, A, gamma = 16, 4, 0.97
+    q_next = rng.normal(size=(B, A)).astype(np.float32)
+    reward = rng.normal(size=B).astype(np.float32)
+    done = rng.random(B) < 0.3
+    got = np.asarray(dqn_td_target(jnp.asarray(q_next), jnp.asarray(reward),
+                                   jnp.asarray(done), gamma))
+    want = reward + gamma * (1.0 - done.astype(np.float32)) * q_next.max(1)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_dqn_loss_matches_numpy_oracle():
+    """The shared dqn_loss (scan step + replay learner step + this oracle)
+    is the TD MSE against the target network, gradients stopped through
+    the target."""
+    from repro.core.agents.dqn import dqn_loss
+    from repro.models import init_policy, policy_apply
+
+    env = GridWorld(8, size=3, max_steps=15)
+    cfg = _vector_cfg(env)
+    params = init_policy(jax.random.PRNGKey(0), cfg)
+    target = init_policy(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(2)
+    B, gamma = 12, 0.95
+    obs = rng.normal(size=(B,) + env.obs_shape).astype(np.float32)
+    batch = {
+        "obs": jnp.asarray(obs),
+        "action": jnp.asarray(rng.integers(0, env.num_actions, B)),
+        "reward": jnp.asarray(rng.normal(size=B).astype(np.float32)),
+        "next_obs": jnp.asarray(
+            rng.normal(size=(B,) + env.obs_shape).astype(np.float32)),
+        "done": jnp.asarray(rng.random(B) < 0.25),
+    }
+    loss, metrics = dqn_loss(params, target, batch, cfg, gamma)
+    q = np.asarray(policy_apply(params, cfg, batch["obs"])[0])
+    q_next = np.asarray(policy_apply(target, cfg, batch["next_obs"])[0])
+    q_a = q[np.arange(B), np.asarray(batch["action"])]
+    td_target = np.asarray(batch["reward"]) + gamma * (
+        1.0 - np.asarray(batch["done"]).astype(np.float32)) * q_next.max(1)
+    np.testing.assert_allclose(float(loss), np.mean((td_target - q_a) ** 2),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(metrics["q_mean"]), q_a.mean(),
+                               rtol=1e-5)
 
 
 @pytest.mark.parametrize("mode", ["grad", "act"])

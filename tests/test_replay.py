@@ -1,0 +1,496 @@
+"""Replay plane: ``ReplayRing`` contract, sampling properties, bitwise pins.
+
+Pins the off-policy subsystem's contracts:
+
+* the core ``replay.py`` buffer rejects the two silent-garbage hazards
+  (over-wide ``replay_add`` batches whose scatter indices collide;
+  ``replay_sample`` on an empty buffer),
+* ``ReplayRing`` mirrors the ``DeviceTrajectoryRing`` suite where the
+  contracts coincide (device-only payloads, close-wakes-blocked-consumer,
+  producer_done drain semantics, multi-producer validation) and inverts
+  them where replay semantics demand (put never blocks — full ring evicts
+  FIFO-by-ticket; get samples and *retains* slots),
+* sampling properties (hypothesis, when installed): uniform draws are
+  uniform within statistical bounds, only resident slots are ever drawn on
+  a partially-filled ring, eviction retires strictly the oldest tickets,
+  prioritized draw frequencies track the priorities,
+* the staleness-0 equivalences: a depth-1 lockstep pipelined replay-DQN
+  reproduces the serial ``SyncReplayDQN`` reference *bitwise* (threads and
+  the ring add zero numerics), and replay-PAAC with infinite V-trace clips
+  at capacity 1 reproduces synchronous ``ParallelRL`` bitwise (the
+  V-trace-corrected update equals the on-policy update at staleness 0).
+"""
+import os
+import queue as stdlib_queue
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PipelineConfig, get_config
+from repro.core import ParallelRL
+from repro.core.agents import DQNAgent, DQNConfig, PAACAgent
+from repro.core.agents.replay import replay_add, replay_init, replay_sample
+from repro.core.rollout import Transition
+from repro.envs import GridWorld
+from repro.optim import constant
+from repro.pipeline import (
+    CLOSED,
+    PipelinedRL,
+    QueueClosed,
+    ReplayRing,
+    Rollout,
+    SyncReplayDQN,
+)
+
+try:  # hypothesis is a dev-extra; the contract tests below run without it
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given
+
+    hypothesis.settings.register_profile("ci", deadline=None, max_examples=25)
+    hypothesis.settings.register_profile("dev", deadline=None,
+                                         max_examples=100)
+    hypothesis.settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised by the tier-1 CI job
+    HAVE_HYPOTHESIS = False
+
+
+def _dev(x):
+    return jnp.asarray(x)
+
+
+def _mini_rollout(tag: float, version: int = 0, seq: int = 0,
+                  E: int = 2, T: int = 3) -> Rollout:
+    """A tiny device-resident Rollout whose arrays are filled with ``tag``
+    (so a sampled payload identifies which put produced it)."""
+    traj = Transition(
+        obs=jnp.full((T, E, 2), tag, jnp.float32),
+        action=jnp.zeros((T, E), jnp.int32),
+        reward=jnp.full((T, E), tag, jnp.float32),
+        done=jnp.zeros((T, E), bool),
+        value=jnp.zeros((T, E), jnp.float32),
+        logp=jnp.zeros((T, E), jnp.float32),
+    )
+    return Rollout(traj, jnp.full((E, 2), tag, jnp.float32),
+                   behavior_version=version, actor_id=0, seq=seq,
+                   release=None)
+
+
+def _vector_cfg(env):
+    return get_config("paac_vector").replace(
+        obs_shape=env.obs_shape, num_actions=env.num_actions)
+
+
+# ---------------------------------------------------------------------------
+# core replay buffer hazards (repro.core.agents.replay)
+# ---------------------------------------------------------------------------
+
+
+def test_replay_add_overwide_batch_raises():
+    """E > capacity means colliding scatter indices with unspecified write
+    order — rejected at trace time, not sampled as garbage later."""
+    buf = replay_init(4, (3,))
+    E = 6
+    with pytest.raises(ValueError, match="exceeds capacity"):
+        replay_add(buf, jnp.zeros((E, 3)), jnp.zeros((E,), jnp.int32),
+                   jnp.zeros((E,)), jnp.zeros((E, 3)), jnp.zeros((E,), bool))
+
+
+def test_replay_add_exactly_at_capacity_ok():
+    E = 4
+    buf = replay_init(E, (3,))
+    buf = replay_add(buf, jnp.ones((E, 3)), jnp.arange(E, dtype=jnp.int32),
+                     jnp.ones((E,)), jnp.ones((E, 3)), jnp.zeros((E,), bool))
+    assert int(buf["size"]) == E
+    np.testing.assert_array_equal(np.asarray(buf["action"]), np.arange(E))
+
+
+def test_replay_sample_empty_buffer_raises():
+    buf = replay_init(8, (2,))
+    with pytest.raises(ValueError, match="empty buffer"):
+        replay_sample(buf, jax.random.PRNGKey(0), 4)
+
+
+def test_replay_sample_after_add_draws_only_stored_rows():
+    buf = replay_init(8, (2,))
+    E = 3
+    buf = replay_add(buf, jnp.ones((E, 2)), jnp.full((E,), 7, jnp.int32),
+                     jnp.ones((E,)), jnp.ones((E, 2)), jnp.zeros((E,), bool))
+    batch = replay_sample(buf, jax.random.PRNGKey(1), 16)
+    # only the 3 written rows are drawable — never the zero-init tail
+    np.testing.assert_array_equal(np.asarray(batch["action"]),
+                                  np.full(16, 7))
+
+
+def test_replay_sample_under_jit_traces():
+    """The empty-buffer guard must not break the jitted scan path, where
+    ``size`` is a tracer and the caller owns the invariant."""
+    buf = replay_init(8, (2,))
+    E = 2
+    buf = replay_add(buf, jnp.ones((E, 2)), jnp.zeros((E,), jnp.int32),
+                     jnp.ones((E,)), jnp.ones((E, 2)), jnp.zeros((E,), bool))
+    sample = jax.jit(lambda b, k: replay_sample(b, k, 4))
+    batch = sample(buf, jax.random.PRNGKey(0))
+    assert batch["obs"].shape == (4, 2)
+
+
+# ---------------------------------------------------------------------------
+# ReplayRing contract (mirror of the DeviceTrajectoryRing suite)
+# ---------------------------------------------------------------------------
+
+
+def test_replay_ring_put_never_blocks_and_evicts_fifo():
+    ring = ReplayRing(capacity=3)
+    t0 = time.perf_counter()
+    for i in range(7):
+        ring.put(_dev(float(i)))
+    assert time.perf_counter() - t0 < 1.0  # no backpressure, ever
+    assert ring.tickets_issued == 7
+    assert ring.evictions == 4
+    assert ring.resident == 3
+    # strictly the oldest tickets were retired
+    assert ring.resident_tickets() == [4, 5, 6]
+    payloads = sorted(float(p) for p in
+                      ring.sample(jax.random.PRNGKey(0), 64))
+    assert set(payloads) <= {4.0, 5.0, 6.0}
+    assert ring.put_wait_s == 0.0  # plane-parity accounting
+
+
+def test_replay_ring_rejects_host_payloads():
+    ring = ReplayRing(capacity=2)
+    with pytest.raises(TypeError, match="host"):
+        ring.put(np.zeros(3))
+    ring.put(_dev(1.0))  # device payloads still fine afterwards
+    assert ring.resident == 1
+
+
+def test_replay_ring_sample_retains_slots():
+    ring = ReplayRing(capacity=4)
+    for i in range(3):
+        ring.put(_dev(float(i)))
+    a = ring.sample(jax.random.PRNGKey(5), 8)
+    b = ring.sample(jax.random.PRNGKey(5), 8)  # same key -> same draw
+    assert [float(x) for x in a] == [float(x) for x in b]
+    assert ring.resident == 3  # nothing consumed
+    assert len(ring.last_sampled) == 8
+    assert set(ring.last_sampled) <= {0, 1, 2}
+
+
+def test_replay_ring_sample_empty_raises():
+    ring = ReplayRing(capacity=4)
+    with pytest.raises(stdlib_queue.Empty):
+        ring.sample(jax.random.PRNGKey(0))
+
+
+def test_replay_ring_get_is_ticket_paced():
+    """One fresh put licenses exactly one get: residency alone never feeds
+    the learner loop (what keeps quotas and lockstep meaningful)."""
+    ring = ReplayRing(capacity=4, sample_seed=0)
+    ring.put(_mini_rollout(1.0, version=0, seq=0))
+    out = ring.get(timeout=1.0)
+    assert isinstance(out, Rollout)
+    assert out.actor_id == -2 and out.seq == 0
+    assert float(out.traj.reward[0, 0]) == 1.0
+    assert ring.resident == 1  # retained, not consumed
+    with pytest.raises(stdlib_queue.Empty):
+        ring.get(timeout=0.05)  # resident but no fresh ticket
+    ring.put(_mini_rollout(2.0, version=1, seq=1))
+    out2 = ring.get(timeout=1.0)
+    assert out2.seq == 1  # consume index advances
+    assert float(out2.traj.reward[0, 0]) in (1.0, 2.0)  # sampled, not FIFO
+
+
+def test_replay_ring_get_batch_concat_and_min_version():
+    ring = ReplayRing(capacity=4, batch_size=3, sample_seed=7)
+    ring.put(_mini_rollout(1.0, version=0, seq=0))
+    ring.put(_mini_rollout(2.0, version=5, seq=1))
+    ring.get(timeout=1.0)  # consume ticket 0
+    out = ring.get(timeout=1.0)
+    # 3 sampled rollouts of E=2 envs concatenated along the env axis
+    assert out.traj.reward.shape == (3, 6)
+    assert out.last_obs.shape == (6, 2)
+    # staleness reports the OLDEST experience in the batch
+    assert out.behavior_version == min(
+        0 if 0 in ring.last_sampled else 5,
+        5 if 1 in ring.last_sampled else 0,
+    )
+
+
+def test_replay_ring_close_wakes_blocked_get():
+    ring = ReplayRing(capacity=2)
+    got = []
+
+    def consumer():
+        got.append(ring.get())
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.1)
+    ring.close()
+    t.join(timeout=2.0)
+    assert not t.is_alive()
+    assert got == [CLOSED]
+
+
+def test_replay_ring_producer_done_drains_then_closes():
+    ring = ReplayRing(capacity=4, producers=2)
+    ring.put(_mini_rollout(1.0))
+    ring.producer_done()
+    ring.put(_mini_rollout(2.0, seq=1))  # second producer still live
+    ring.producer_done()
+    with pytest.raises(QueueClosed):
+        ring.put(_dev(3.0))  # closed to producers
+    # the consumer still drains the two fresh tickets before CLOSED
+    assert isinstance(ring.get(timeout=1.0), Rollout)
+    assert isinstance(ring.get(timeout=1.0), Rollout)
+    assert ring.get(timeout=1.0) is CLOSED
+    assert ring.get(timeout=1.0) is CLOSED  # idempotent
+
+
+def test_replay_ring_update_priorities_skips_evicted():
+    ring = ReplayRing(capacity=2, prioritized=True)
+    for i in range(3):  # ticket 0 evicted
+        ring.put(_dev(float(i)))
+    ring.update_priorities([0, 1, 2], [9.0, 5.0, 3.0])
+    slots = {t % 2: ring._slots[t % 2] for t in (1, 2)}
+    assert slots[1 % 2].priority == 5.0
+    assert slots[2 % 2].priority == 3.0
+    ring.update_priorities([1], [0.0])  # clamped to the positive floor
+    assert ring._slots[1 % 2].priority == pytest.approx(1e-6)
+
+
+def test_replay_ring_new_slots_enter_at_max_priority():
+    ring = ReplayRing(capacity=4, prioritized=True)
+    ring.put(_dev(0.0))
+    ring.update_priorities([0], [10.0])
+    ring.put(_dev(1.0))  # fresh experience must be sampleable at least once
+    assert ring._slots[1].priority == 10.0
+
+
+def test_replay_ring_constructor_validation():
+    with pytest.raises(ValueError):
+        ReplayRing(capacity=0)
+    with pytest.raises(ValueError):
+        ReplayRing(batch_size=0)
+    with pytest.raises(ValueError):
+        ReplayRing(producers=0)
+
+
+# ---------------------------------------------------------------------------
+# sampling properties (hypothesis — dev extra)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_uniform_sampling_is_uniform_within_bounds(seed):
+        """Every resident slot's draw frequency lies within 6σ of the
+        uniform expectation (binomial bound; ~1e-9 per-example flake)."""
+        n, draws = 8, 4096
+        ring = ReplayRing(capacity=n)
+        for i in range(n):
+            ring.put(_dev(float(i)))
+        ring.sample(jax.random.PRNGKey(seed), draws)
+        counts = np.bincount(np.asarray(ring.last_sampled), minlength=n)
+        p = 1.0 / n
+        sigma = (draws * p * (1 - p)) ** 0.5
+        assert (abs(counts - draws * p) <= 6 * sigma).all(), counts
+
+    @given(
+        capacity=st.integers(2, 16),
+        n_puts=st.integers(1, 15),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_only_resident_slots_sampled_when_partially_filled(
+            capacity, n_puts, seed):
+        ring = ReplayRing(capacity=capacity)
+        for i in range(n_puts):
+            ring.put(_dev(float(i)))
+        vals = ring.sample(jax.random.PRNGKey(seed), 64)
+        live = set(ring.resident_tickets())
+        assert set(ring.last_sampled) <= live
+        assert {float(v) for v in vals} <= {float(t) for t in live}
+
+    @given(capacity=st.integers(1, 8), n_puts=st.integers(0, 24))
+    def test_eviction_retires_strictly_oldest_tickets(capacity, n_puts):
+        ring = ReplayRing(capacity=capacity)
+        for i in range(n_puts):
+            ring.put(_dev(float(i)))
+        expect_evicted = max(0, n_puts - capacity)
+        assert ring.evictions == expect_evicted
+        assert ring.resident_tickets() == list(
+            range(expect_evicted, n_puts))
+        assert ring.tickets_issued == n_puts
+
+    @given(
+        prios=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_prioritized_frequencies_track_priorities(prios, seed):
+        """Empirical draw frequencies match p_i = prio_i / sum within 6σ."""
+        n, draws = len(prios), 4096
+        ring = ReplayRing(capacity=n, prioritized=True)
+        for i in range(n):
+            ring.put(_dev(float(i)))
+        ring.update_priorities(list(range(n)), prios)
+        ring.sample(jax.random.PRNGKey(seed), draws)
+        counts = np.bincount(np.asarray(ring.last_sampled), minlength=n)
+        p = np.asarray(prios) / sum(prios)
+        sigma = np.sqrt(draws * p * (1 - p))
+        assert (np.abs(counts - draws * p) <= 6 * sigma + 1).all(), counts
+
+
+# ---------------------------------------------------------------------------
+# sync equivalence pins
+# ---------------------------------------------------------------------------
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_replay_depth1_lockstep_dqn_bitwise_vs_sync():
+    """The tentpole pin: a depth-1 lockstep pipelined replay-DQN reproduces
+    the serial SyncReplayDQN reference bit for bit — same jitted collect,
+    same ring seed, same learner step; the thread/queue machinery adds
+    zero numerics. Holds across repeated run() calls (persistent ε index
+    and RNG key)."""
+    env = GridWorld(8, size=4, max_steps=20)
+    agent = DQNAgent(_vector_cfg(env),
+                     DQNConfig(t_max=4, eps_steps=50, target_sync=5))
+    sync = SyncReplayDQN(env, agent, lr_schedule=constant(0.01), seed=3,
+                         replay_capacity=4, replay_batch=1)
+    pipe = PipelinedRL(
+        GridWorld(8, size=4, max_steps=20), agent,
+        lr_schedule=constant(0.01), seed=3,
+        pipeline=PipelineConfig(queue_depth=1, lockstep=True,
+                                replay_plane=True, replay_capacity=4,
+                                replay_batch=1),
+    )
+    r1, r2 = sync.run(10), pipe.run(10)
+    _assert_trees_equal(sync.params, pipe.params)
+    assert np.array_equal(np.asarray(sync.key), np.asarray(pipe.key))
+    for k, v in r1.mean_metrics.items():
+        assert r2.mean_metrics[k] == v, k
+    # continuation run stays bitwise (ε schedule and key stream persist)
+    sync.run(5)
+    pipe.run(5)
+    _assert_trees_equal(sync.params, pipe.params)
+
+
+def test_replay_paac_staleness0_vtrace_equals_onpolicy_bitwise():
+    """V-trace-corrected update == on-policy update at staleness 0 with
+    infinite clips: replay-PAAC at capacity 1 / batch 1 / lockstep always
+    samples the rollout it just produced, so the pipelined replay run must
+    reproduce synchronous ParallelRL bitwise."""
+    env = GridWorld(8, size=4, max_steps=20)
+    agent = PAACAgent(_vector_cfg(env))
+    ref = ParallelRL(env, agent, lr_schedule=constant(0.01), seed=1)
+    pipe = PipelinedRL(
+        GridWorld(8, size=4, max_steps=20), agent,
+        lr_schedule=constant(0.01), seed=1,
+        pipeline=PipelineConfig(queue_depth=1, lockstep=True,
+                                rho_bar=float("inf"), c_bar=float("inf"),
+                                replay_plane=True, replay_capacity=1,
+                                replay_batch=1),
+    )
+    r1, r2 = ref.run(10), pipe.run(10)
+    _assert_trees_equal(ref.params, pipe.params)
+    for k, v in r1.mean_metrics.items():
+        assert r2.mean_metrics[k] == v, k
+
+
+def test_replay_paac_finite_clips_corrects_stale_rollouts():
+    """Off-policy PAAC end to end: deep replay (staleness >> 1) under the
+    default finite V-trace clips runs and reports the stale regime."""
+    env = GridWorld(8, size=4, max_steps=20)
+    agent = PAACAgent(_vector_cfg(env))
+    pipe = PipelinedRL(
+        env, agent, lr_schedule=constant(0.01), seed=1,
+        pipeline=PipelineConfig(num_actors=2, replay_plane=True,
+                                replay_capacity=16, replay_batch=2),
+    )
+    res = pipe.run(20)
+    assert res.steps == 20 * 4 * agent.hp.t_max  # 2 actors x 4-env shards
+    assert res.mean_metrics["staleness"] > 1.0  # genuinely off-policy
+    assert np.isfinite(res.mean_metrics["loss"])
+
+
+def test_replay_multiactor_prioritized_dqn_smoke():
+    env = GridWorld(8, size=4, max_steps=20)
+    agent = DQNAgent(_vector_cfg(env),
+                     DQNConfig(t_max=4, eps_steps=100, target_sync=5))
+    pipe = PipelinedRL(
+        env, agent, lr_schedule=constant(0.01), seed=7,
+        pipeline=PipelineConfig(num_actors=2, replay_plane=True,
+                                replay_capacity=8, replay_batch=2,
+                                prioritized=True),
+    )
+    res = pipe.run(12)
+    assert res.steps == 12 * 4 * agent.hp.t_max
+    assert np.isfinite(res.mean_metrics["loss"])
+    assert res.mean_metrics["q_mean"] != 0.0
+
+
+# ---------------------------------------------------------------------------
+# config-matrix validation
+# ---------------------------------------------------------------------------
+
+
+def test_replay_config_matrix_validation():
+    with pytest.raises(ValueError, match="prioritized"):
+        PipelineConfig(prioritized=True)
+    with pytest.raises(ValueError, match="replay_capacity"):
+        PipelineConfig(replay_capacity=0)
+    with pytest.raises(ValueError, match="replay_batch"):
+        PipelineConfig(replay_batch=0)
+    with pytest.raises(ValueError, match="thread"):
+        PipelineConfig(replay_plane=True, actor_backend="process")
+    with pytest.raises(ValueError, match="mesh"):
+        PipelineConfig(replay_plane=True, mesh_shape=2)
+    with pytest.raises(ValueError, match="device plane"):
+        PipelineConfig(replay_plane=True, rollout_plane="host")
+    # the valid cells construct fine
+    PipelineConfig(replay_plane=True)
+    PipelineConfig(replay_plane=True, rollout_plane="device",
+                   replay_capacity=128, replay_batch=4, prioritized=True)
+
+
+def test_dqn_requires_replay_plane():
+    env = GridWorld(8, size=4, max_steps=20)
+    agent = DQNAgent(_vector_cfg(env), DQNConfig(t_max=4))
+    with pytest.raises(ValueError, match="replay"):
+        PipelinedRL(env, agent, lr_schedule=constant(0.01),
+                    pipeline=PipelineConfig())
+
+
+def test_replay_rejects_host_envs():
+    from repro.envs import HostEnvPool
+
+    def mk():
+        class _E:
+            def reset(self):
+                return np.zeros(3, np.float32)
+
+            def step(self, a):
+                return np.zeros(3, np.float32), 0.0, False
+
+        return _E()
+
+    pool = HostEnvPool([mk for _ in range(4)], obs_shape=(3,))
+    env = GridWorld(8, size=4, max_steps=20)
+    agent = PAACAgent(_vector_cfg(env))
+    try:
+        with pytest.raises(ValueError, match="JAX-native"):
+            PipelinedRL(pool, agent, lr_schedule=constant(0.01),
+                        pipeline=PipelineConfig(replay_plane=True))
+    finally:
+        pool.close()

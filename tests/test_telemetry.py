@@ -175,6 +175,43 @@ def test_device_plane_trace_contains_ring_spans(tmp_path):
     assert {"collect", "queue.get_wait", "learner.update", "publish"} <= names
 
 
+def test_replay_span_categories_in_vocabulary():
+    """The replay plane's three stages are first-class span categories —
+    constants index CATEGORIES exactly and the names are trace-exportable."""
+    from repro.telemetry import REPLAY_ADD, REPLAY_EVICT, REPLAY_SAMPLE
+
+    assert CATEGORIES[REPLAY_ADD] == "replay.add"
+    assert CATEGORIES[REPLAY_SAMPLE] == "replay.sample"
+    assert CATEGORIES[REPLAY_EVICT] == "replay.evict"
+    em = SpanEmitter("replay")
+    em.record(REPLAY_ADD, 1.0, 2.0)
+    em.record(REPLAY_SAMPLE, 2.0, 2.5)
+    em.record(REPLAY_EVICT, 2.5, 2.75)
+    assert em.total(REPLAY_ADD) == 1.0
+    assert em.total(REPLAY_SAMPLE) == 0.5
+    assert em.total(REPLAY_EVICT) == 0.25
+
+
+def test_replay_plane_trace_contains_replay_spans(tmp_path):
+    """A replay-plane run's trace records add/sample (and evict once the
+    ring wraps) on the replay track, all schema-valid over CATEGORIES."""
+    path = str(tmp_path / "trace.json")
+    # capacity 2 so 8 iterations force evictions into the trace
+    prl = _grid_pipeline(trace_path=path, replay_plane=True,
+                         replay_capacity=2, replay_batch=2)
+    prl.run(8)
+    events = _load_trace(path)
+    xs = [e for e in events if e["ph"] == "X"]
+    for e in xs:
+        assert e["name"] in CATEGORIES
+    names = {e["name"] for e in xs}
+    assert {"replay.add", "replay.sample", "replay.evict",
+            "collect", "queue.get_wait", "learner.update"} <= names
+    tracks = {e["args"]["name"] for e in events
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert "replay" in tracks  # the ring registered its own track
+
+
 def test_process_plane_ships_worker_spans_into_the_trace(tmp_path):
     path = str(tmp_path / "trace.json")
     spec = py_bound_spec(4, obs_dim=4, spin=0, n_workers=2)
