@@ -4,6 +4,14 @@ Flattens a pytree with path-derived keys, stores dtype/shape-faithful arrays
 plus a manifest, restores into the same structure. Shard-aware in the sense
 that callers pass host-local (fully-addressable) arrays; under pjit on a
 real pod each host saves its addressable shards with distinct filenames.
+
+Round-trip contract: ``restore_checkpoint(d, s, target)`` returns a tree
+with ``target``'s exact leaf types and dtypes — bf16 leaves (saved as
+lossless f32, numpy has no bf16) come back bf16 bitwise, numpy leaves stay
+numpy (a host-plane resume must not silently promote staging state onto the
+device), python scalars come back as 0-d arrays of the saved dtype. The
+manifest records each leaf's logical dtype so a checkpoint is
+self-describing even where the npz payload dtype differs.
 """
 from __future__ import annotations
 
@@ -18,14 +26,21 @@ import numpy as np
 _SEP = "::"
 
 
+def _path_key(path) -> str:
+    return _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        arr = np.asarray(leaf) if leaf.dtype != jax.numpy.bfloat16 else np.asarray(
-            leaf.astype(jax.numpy.float32)  # numpy has no bf16; f32 is lossless
-        )
-        flat[key] = arr
+        # normalize first: python scalars (step counters, seq numbers) have
+        # no .dtype — np.asarray gives them one without copying real arrays
+        arr = leaf if hasattr(leaf, "dtype") else np.asarray(leaf)
+        if arr.dtype == jax.numpy.bfloat16:
+            # numpy has no bf16; f32 is lossless — restore casts back
+            arr = np.asarray(arr.astype(jax.numpy.float32))
+        flat[_path_key(path)] = np.asarray(arr)
     return flat
 
 
@@ -33,9 +48,16 @@ def save_checkpoint(directory: str, step: int, tree, *, prefix: str = "ckpt") ->
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"{prefix}_{step:010d}.npz")
     flat = _flatten(tree)
+    # logical dtypes (pre-bf16-widening): the manifest makes the checkpoint
+    # self-describing without needing the target tree in hand
+    dtypes = {}
+    for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        dt = getattr(leaf, "dtype", None)
+        dtypes[_path_key(p)] = (str(dt) if dt is not None
+                                else np.asarray(leaf).dtype.str)
     np.savez_compressed(path, **flat)
     with open(os.path.join(directory, f"{prefix}_{step:010d}.json"), "w") as f:
-        json.dump({"step": step, "keys": sorted(flat)}, f)
+        json.dump({"step": step, "keys": sorted(flat), "dtypes": dtypes}, f)
     return path
 
 
@@ -44,21 +66,34 @@ def latest_step(directory: str, prefix: str = "ckpt") -> Optional[int]:
         return None
     steps = []
     for name in os.listdir(directory):
-        m = re.match(rf"{prefix}_(\d+)\.npz", name)
+        # fullmatch: a "ckpt" prefix must not claim "ckpt_extra_..." files
+        m = re.fullmatch(rf"{re.escape(prefix)}_(\d+)\.npz", name)
         if m:
             steps.append(int(m.group(1)))
     return max(steps) if steps else None
 
 
 def restore_checkpoint(directory: str, step: int, target_tree, *, prefix: str = "ckpt"):
-    """Restore into the structure of ``target_tree`` (shapes must match)."""
+    """Restore into the structure of ``target_tree`` (shapes must match).
+
+    Each restored leaf takes the *target* leaf's dtype and residency:
+    bf16 targets get the saved f32 payload cast back (bitwise — the
+    widening was lossless), numpy targets stay host numpy arrays, jax
+    targets land on the device.
+    """
     path = os.path.join(directory, f"{prefix}_{step:010d}.npz")
     data = np.load(path)
     paths, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
     leaves = []
     for p, leaf in paths:
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        key = _path_key(p)
         arr = data[key]
-        assert arr.shape == leaf.shape, f"{key}: {arr.shape} vs {leaf.shape}"
-        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
-    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(target_tree), leaves)
+        shape = getattr(leaf, "shape", np.shape(leaf))
+        assert arr.shape == tuple(shape), f"{key}: {arr.shape} vs {shape}"
+        if isinstance(leaf, np.ndarray):
+            leaves.append(arr.astype(leaf.dtype, copy=False))
+        elif hasattr(leaf, "dtype"):
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        else:  # python scalar target: give back its type
+            leaves.append(type(leaf)(arr.item()))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

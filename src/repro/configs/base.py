@@ -149,6 +149,27 @@ class PipelineConfig:
     ``replay_plane=True`` (they have no FIFO meaning). ``replay_capacity``
     counts resident *rollouts* (each ``t_max × shard_envs`` transitions),
     ``replay_batch`` is rollouts sampled per update.
+
+    **Fault tolerance** (``repro.pipeline.supervisor``; see
+    ``docs/fault_tolerance.md``): ``elastic=True`` arms the
+    ``ActorSupervisor`` — a dying actor replica no longer hard-aborts the
+    stream. Under ``restart_budget`` respawns per actor *slot* (exponential
+    backoff from ``restart_backoff_s``) the dead replica is respawned with
+    a fresh ``(actor_id, seq)`` epoch and re-leased the current params;
+    past the budget (or with ``restart_budget=0``) its remaining quota is
+    reassigned to the surviving replicas and the run degrades to fewer
+    actors instead of aborting. ``elastic=False`` (default) is the
+    pre-supervisor fail-fast path, bit-for-bit: any replica death closes
+    the stream and ``run()`` raises. The mesh plane stays fail-fast
+    regardless (a lane's death leaves the sharded batch unassemblable), so
+    ``elastic`` with the mesh plane is rejected here. ``lease_timeout_s``
+    bounds how long the learner waits to reserve a ping-pong buffer before
+    failing loudly — the error names the party still holding the lease.
+    ``fault_plan`` (a ``repro.pipeline.faults.FaultPlan``) deterministically
+    injects faults for tests/CI; ``checkpoint_dir``/``checkpoint_every``
+    snapshot full pipeline state (params, opt state, RNG keys, per-actor
+    seq/quota counters, ring tickets) every N learner iterations for
+    ``PipelinedRL.restore()`` kill-and-resume.
     """
 
     queue_depth: int = 2
@@ -171,6 +192,18 @@ class PipelineConfig:
     metrics_jsonl: str = ""  # "" -> no JSONL heartbeat stream
     heartbeat_s: float = 1.0  # heartbeat tick interval
     stall_timeout_s: float = 0.0  # 0 -> stall watchdog off
+    # fault tolerance (repro.pipeline.supervisor; docs/fault_tolerance.md)
+    elastic: bool = False  # False -> pre-supervisor fail-fast, bit-for-bit
+    restart_budget: int = 1  # respawns per actor slot before degrading
+    restart_backoff_s: float = 0.05  # base of the exponential respawn backoff
+    lease_timeout_s: float = 60.0  # param-slot reserve/publish deadline
+    # a repro.pipeline.faults.FaultPlan (typed loosely: configs must stay
+    # importable without pulling the pipeline package in — and FaultPlan
+    # imports nothing back, so the runtime isinstance check lives in
+    # PipelinedRL, not here)
+    fault_plan: Optional[object] = None
+    checkpoint_dir: str = ""  # "" -> periodic checkpointing off
+    checkpoint_every: int = 0  # learner iterations between snapshots (0=off)
 
     def __post_init__(self):
         if self.mesh_shape < 1:
@@ -240,6 +273,32 @@ class PipelineConfig:
                 "prioritized=True requires replay_plane=True: FIFO rings"
                 " consume each rollout exactly once, so sampling priorities"
                 " have no meaning there"
+            )
+        if self.restart_budget < 0:
+            raise ValueError(
+                f"restart_budget must be >= 0, got {self.restart_budget}")
+        if self.restart_backoff_s < 0:
+            raise ValueError(
+                f"restart_backoff_s must be >= 0, got "
+                f"{self.restart_backoff_s}")
+        if self.lease_timeout_s <= 0:
+            raise ValueError(
+                f"lease_timeout_s must be > 0, got {self.lease_timeout_s}")
+        if self.checkpoint_every < 0:
+            raise ValueError(
+                f"checkpoint_every must be >= 0 (0 = off), got "
+                f"{self.checkpoint_every}")
+        if self.checkpoint_every > 0 and not self.checkpoint_dir:
+            raise ValueError(
+                "checkpoint_every > 0 requires checkpoint_dir: periodic"
+                " snapshots need somewhere to land")
+        if self.elastic and (self.mesh_shape > 1
+                             or self.rollout_plane == "mesh"):
+            raise ValueError(
+                "elastic=True does not compose with the mesh plane: a dead"
+                " lane leaves every subsequent sharded batch unassemblable,"
+                " so the mesh plane stays fail-fast (see"
+                " docs/fault_tolerance.md)"
             )
 
 

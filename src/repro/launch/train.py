@@ -32,6 +32,17 @@ Perfetto-viewable Chrome trace of every plane's spans, a JSONL liveness
 heartbeat, and the stall watchdog naming the stage each party is blocked
 in when progress stops.
 
+``--elastic`` arms the pipeline's actor supervisor: crashed replicas
+respawn under ``--restart-budget`` (exponential ``--restart-backoff``),
+then the run degrades to fewer actors with the dead replica's quota
+reassigned — instead of the fail-fast default. ``--checkpoint-dir`` +
+``--checkpoint-every N`` snapshot the full pipeline state every N updates;
+``--resume`` restores the newest snapshot and runs only the remainder
+(bitwise-equal to the uninterrupted run on the thread backend's FIFO
+planes). ``--fault-kill``/``--fault-stall-learner`` drive the
+deterministic fault-injection harness (``repro.pipeline.faults``) for
+chaos testing. See docs/fault_tolerance.md.
+
 ``--replay`` swaps the pipeline's FIFO trajectory ring for the sampled
 ``ReplayRing`` (the off-policy plane): actors never block — a full ring
 evicts its oldest rollout — and each learner update samples
@@ -114,6 +125,17 @@ def run_rl(args):
             "--replay requires a JAX-native env on the device plane: it "
             "cannot combine with --host-env/--actor-backend process"
         )
+    if (args.elastic or args.fault_kill or args.fault_stall_learner
+            or args.checkpoint_every or args.resume) and not args.pipeline:
+        raise SystemExit(
+            "--elastic/--fault-*/--checkpoint-every/--resume drive the "
+            "pipeline backend's fault-tolerance plane: add --pipeline"
+        )
+    if (args.checkpoint_every or args.resume) and not args.checkpoint_dir:
+        raise SystemExit(
+            "--checkpoint-every/--resume need --checkpoint-dir (where the "
+            "pipeline's full-state snapshots live)"
+        )
     host_env = args.host_env or args.actor_backend == "process"
     if host_env:
         # GIL-holding external-emulator path (repro.envs.pyemu): the regime
@@ -145,8 +167,31 @@ def run_rl(args):
                                           entropy_beta=0.01))
     if args.pipeline:
         from repro.configs import PipelineConfig
-        from repro.pipeline import PipelinedRL
+        from repro.pipeline import FaultPlan, PipelinedRL
 
+        fault_plan = None
+        if args.fault_kill or args.fault_stall_learner:
+            kills = []
+            for spec in args.fault_kill:
+                parts = spec.split(":")
+                if len(parts) not in (2, 3):
+                    raise SystemExit(
+                        f"--fault-kill {spec!r}: expected "
+                        "slot:after_rollouts[:mode]"
+                    )
+                kills.append((int(parts[0]), int(parts[1]),
+                              parts[2] if len(parts) == 3 else "error"))
+            stalls = []
+            for spec in args.fault_stall_learner:
+                it, _, sec = spec.partition(":")
+                if not sec:
+                    raise SystemExit(
+                        f"--fault-stall-learner {spec!r}: expected "
+                        "iteration:seconds"
+                    )
+                stalls.append((int(it), float(sec)))
+            fault_plan = FaultPlan(kills=tuple(kills),
+                                   stall_learner=tuple(stalls))
         rl = PipelinedRL(
             env, agent, lr_schedule=constant(args.lr), seed=args.seed,
             pipeline=PipelineConfig(queue_depth=args.queue_depth,
@@ -161,14 +206,33 @@ def run_rl(args):
                                     prioritized=args.prioritized,
                                     trace_path=args.trace,
                                     metrics_jsonl=args.metrics_jsonl,
-                                    stall_timeout_s=args.stall_timeout),
+                                    stall_timeout_s=args.stall_timeout,
+                                    elastic=args.elastic,
+                                    restart_budget=args.restart_budget,
+                                    restart_backoff_s=args.restart_backoff,
+                                    lease_timeout_s=args.lease_timeout,
+                                    fault_plan=fault_plan,
+                                    checkpoint_dir=args.checkpoint_dir,
+                                    checkpoint_every=args.checkpoint_every),
         )
     else:
         rl = ParallelRL(env, agent, lr_schedule=constant(args.lr),
                         seed=args.seed)
+    resume_done = 0
+    if args.pipeline and args.resume:
+        resume_done = rl.restore()
+        if resume_done:
+            log.info("resume: checkpoint covers %d update(s) — running the "
+                     "remainder", resume_done)
     try:
         for epoch in range(args.epochs):
-            res = rl.run(args.iterations,
+            iters = args.iterations
+            if epoch == 0 and resume_done:
+                iters = max(args.iterations - resume_done, 0)
+                if iters == 0:
+                    log.info("resume: epoch 0 fully covered by checkpoint")
+                    continue
+            res = rl.run(iters,
                          log_every=max(args.iterations // 4, 1))
             log.info(
                 "epoch %d steps=%d mean_reward/iter=%.3f tps=%.0f%s",
@@ -288,6 +352,40 @@ def main():
                     help="stall watchdog window in seconds: when the learner "
                     "or an actor makes no progress for this long, log which "
                     "stage each party is blocked in (0 = off)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="supervise actor replicas: respawn crashed actors "
+                    "under --restart-budget, then degrade to fewer actors "
+                    "(default is fail-fast; mesh plane is always fail-fast)")
+    ap.add_argument("--restart-budget", type=int, default=1,
+                    help="respawns allowed per actor slot before the "
+                    "supervisor degrades the run (0 = degrade immediately)")
+    ap.add_argument("--restart-backoff", type=float, default=0.05,
+                    help="base respawn backoff in seconds (doubles per "
+                    "attempt on the same slot)")
+    ap.add_argument("--lease-timeout", type=float, default=60.0,
+                    help="learner-side param-lease timeout: error naming the "
+                    "holding party when a lease is never released")
+    ap.add_argument("--fault-kill", action="append", default=[],
+                    metavar="SLOT:AFTER[:MODE]",
+                    help="deterministic fault injection: kill actor slot "
+                    "SLOT after AFTER produced rollouts; MODE is 'error' "
+                    "(raise in-replica, default) or 'exit' (hard process "
+                    "exit, process backend). Repeatable.")
+    ap.add_argument("--fault-stall-learner", action="append", default=[],
+                    metavar="ITER:SECONDS",
+                    help="deterministic fault injection: sleep SECONDS in "
+                    "the learner loop before update ITER. Repeatable.")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="directory for the pipeline's full-state "
+                    "checkpoints (params, opt state, RNG keys, per-actor "
+                    "seq counters, queue tickets)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="save a pipeline checkpoint every N learner "
+                    "updates (0 = off; requires --checkpoint-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest checkpoint in --checkpoint-dir "
+                    "and run only the remaining iterations (bitwise "
+                    "continuation on the thread backend's FIFO planes)")
     args = ap.parse_args()
     if args.mode == "rl":
         run_rl(args)

@@ -176,6 +176,7 @@ from repro.pipeline.actor import (
     StagingSet,
     collect_host,
 )
+from repro.pipeline.faults import FaultInjector, FaultPlan, InjectedActorFault
 from repro.pipeline.learner import make_learner_step, make_sharded_learner_step
 from repro.pipeline.offpolicy import (
     SyncReplayDQN,
@@ -187,14 +188,19 @@ from repro.pipeline.queue import CLOSED, QueueClosed, TrajectoryQueue
 from repro.pipeline.replay_ring import ReplayRing
 from repro.pipeline.ring import DeviceTrajectoryRing, MeshTrajectoryRing
 from repro.pipeline.shm import ShmParamSlot, ShmParamView, ShmStagingSet
+from repro.pipeline.supervisor import ActorSupervisor, QuotaLedger
 from repro.pipeline.worker import ProcessActorDrainer, ProcessActorPlane
 
 __all__ = [
     "ActorBase",
+    "ActorSupervisor",
     "ActorThread",
     "CLOSED",
     "DeviceTrajectoryRing",
+    "FaultInjector",
+    "FaultPlan",
     "HostStagingRing",
+    "InjectedActorFault",
     "MeshTrajectoryRing",
     "ParamSlot",
     "PingPongParamSlot",
@@ -203,6 +209,7 @@ __all__ = [
     "ProcessActorDrainer",
     "ProcessActorPlane",
     "QueueClosed",
+    "QuotaLedger",
     "ReplayRing",
     "Rollout",
     "ShmParamSlot",

@@ -92,11 +92,12 @@ class ParamSlot:
         with self._cond:
             return self._params, self._version
 
-    def acquire(self) -> Tuple[Any, int]:
-        """Take a read lease on the newest params (paired with ``release``)."""
+    def acquire(self, holder: Optional[str] = None) -> Tuple[Any, int]:
+        """Take a read lease on the newest params (paired with ``release``).
+        ``holder`` labels the leasing party for timeout diagnostics."""
         return self.read()
 
-    def release(self, version: int) -> None:
+    def release(self, version: int, holder: Optional[str] = None) -> None:
         """Return the lease taken by ``acquire`` (no-op for the base slot)."""
 
     def wait_for(self, version: int, timeout: Optional[float] = None) -> bool:
@@ -154,17 +155,49 @@ class PingPongParamSlot(ParamSlot):
         super().__init__(bufs[version % 2], version)
         self._bufs = bufs
         self._readers = [0, 0]
+        # per-buffer holder labels, parallel to _readers: when a reserve
+        # times out, the error can name *who* never released (the stall
+        # watchdog's stage-naming idiom applied to leases)
+        self._holders: dict = {0: [], 1: []}
 
-    def acquire(self) -> Tuple[Any, int]:
+    def acquire(self, holder: Optional[str] = None) -> Tuple[Any, int]:
         with self._cond:
-            self._readers[self._version % 2] += 1
+            idx = self._version % 2
+            self._readers[idx] += 1
+            if holder is not None:
+                self._holders[idx].append(holder)
             return self._params, self._version
 
-    def release(self, version: int) -> None:
+    def release(self, version: int, holder: Optional[str] = None) -> None:
         with self._cond:
-            self._readers[version % 2] -= 1
-            assert self._readers[version % 2] >= 0, "unbalanced release"
+            idx = version % 2
+            self._readers[idx] -= 1
+            assert self._readers[idx] >= 0, "unbalanced release"
+            if holder is not None:
+                try:
+                    self._holders[idx].remove(holder)
+                except ValueError:
+                    pass  # unlabeled acquire / already revoked
             self._cond.notify_all()
+
+    def holders(self, idx: int) -> List[str]:
+        """Labels of the parties currently leasing buffer ``idx``."""
+        with self._cond:
+            return list(self._holders[idx])
+
+    def revoke(self, holder: str) -> int:
+        """Drop every lease ``holder`` still holds (supervisor path: a
+        replica that died without releasing). Returns leases cleared."""
+        cleared = 0
+        with self._cond:
+            for idx in (0, 1):
+                while holder in self._holders[idx]:
+                    self._holders[idx].remove(holder)
+                    self._readers[idx] -= 1
+                    cleared += 1
+            if cleared:
+                self._cond.notify_all()
+        return cleared
 
     def reserve(self, version: int, timeout: Optional[float] = None):
         """Claim buffer ``version % 2`` for the upcoming publish.
@@ -202,10 +235,11 @@ class PingPongParamSlot(ParamSlot):
         buffer (which would hand actors a tree mutating under them)."""
         dst = self.reserve(version, timeout=timeout)
         if dst is None:
+            held = ", ".join(self.holders(version % 2)) or "an unlabeled party"
             raise RuntimeError(
                 f"PingPongParamSlot.publish(version={version}): reserve "
                 f"timed out after {timeout}s — buffer {version % 2} is "
-                "still leased (an actor died without release()?)"
+                f"still leased by {held} (died without release()?)"
             )
         assert dst is self._bufs[version % 2], (
             "reserve() returned a tree that is not the reserved buffer"
@@ -414,6 +448,16 @@ class ActorBase(threading.Thread):
         else:
             self.span_emitter = SpanEmitter(f"actor{actor_id}")
         self.error: Optional[BaseException] = None
+        # fault-tolerance surface (repro.pipeline.supervisor): the slot this
+        # replica occupies (stable across respawns, unlike actor_id), its
+        # quota accounting, and the supervisor consulted by the epilogue. A
+        # handled fault leaves ``error`` set (diagnostics) but marks
+        # ``fault_handled`` so the run doesn't treat it as fatal.
+        self.slot_index = actor_id
+        self.assigned = 0  # payloads this replica must produce
+        self.produced = 0  # payloads successfully put so far
+        self.supervisor = None
+        self.fault_handled = False
 
     @property
     def wait_s(self) -> float:
@@ -456,7 +500,17 @@ class ActorBase(threading.Thread):
             self.error = e
         finally:
             if self.error is not None:
-                self._queue.close()  # abort: wake learner + sibling actors
+                # with a supervisor, the dying thread *is* the recovery
+                # context: on_actor_error respawns a replacement (which
+                # inherits this replica's producer slot) or degrades by
+                # orphaning the remaining quota (checking the slot out
+                # itself). Only an unhandled death hard-aborts the stream —
+                # exactly the pre-supervisor fail-fast path.
+                sup = self.supervisor
+                if sup is not None and sup.on_actor_error(self):
+                    self.fault_handled = True
+                else:
+                    self._queue.close()  # abort: wake learner + siblings
             else:
                 self._queue.producer_done()
 
@@ -484,16 +538,60 @@ class ActorThread(ActorBase):
 
     def __init__(self, collect: Callable, queue, slot: ParamSlot, key,
                  iterations: int, lockstep: bool = False, actor_id: int = 0,
-                 telemetry=None):
+                 telemetry=None, slot_index: Optional[int] = None,
+                 start_seq: int = 0, ledger=None, injector=None,
+                 snapshot: Optional[Callable] = None):
         super().__init__(queue, actor_id, telemetry=telemetry)
         self._collect = collect
         self._slot = slot
         self._key = key
-        self._iterations = iterations
+        self.assigned = iterations
         self._lockstep = lockstep
+        self.slot_index = actor_id if slot_index is None else slot_index
+        # seq offset for resumed runs: local rollout index i is tagged
+        # ``start_seq + i`` so the (actor_id, seq) stream stays continuous
+        # with the pre-checkpoint run
+        self._start_seq = start_seq
+        # quota ledger (supervisor runs): lets this replica pick up a dead
+        # sibling's orphaned quota after finishing its own
+        self._ledger = ledger
+        # deterministic fault injection (FaultPlan), None outside tests
+        self._injector = injector
+        # checkpoint support: snapshot(key) -> opaque resume state captured
+        # after each collect; the learner calls consume_state(seq) as it
+        # consumes the matching payload, so the log holds at most the
+        # in-flight window (queue depth + 1) of entries
+        self._snapshot = snapshot
+        self._state_log: dict = {}
+        self._state_lock = threading.Lock()
+
+    def consume_state(self, seq: int):
+        """Pop (and prune up to) the resume state recorded after rollout
+        ``seq``; ``None`` when snapshotting is off or seq predates it."""
+        with self._state_lock:
+            st = self._state_log.get(seq)
+            for k in [k for k in self._state_log if k <= seq]:
+                del self._state_log[k]
+            return st
 
     def _produce(self) -> None:
-        for i in range(self._iterations):
+        i = 0  # local rollout index (lockstep waits on it; seq offsets it)
+        while True:
+            if i >= self.assigned:
+                if self._ledger is None:
+                    return
+                # quota done — but a sibling may have died with quota
+                # outstanding: block for orphaned work instead of checking
+                # out, until the ledger proves no work can remain
+                got = self._ledger.wait_for_work(
+                    stop=self._stop_requested.is_set)
+                if got <= 0:
+                    return
+                self.assigned += got
+                continue
+            if self._injector is not None:
+                self._injector.maybe_kill(self.slot_index, self.produced)
+                self._injector.lease_delay(self.slot_index, i)
             if self._lockstep:
                 # lease span: the stop-abort path cancels instead of ending
                 # (the pre-telemetry counter never accumulated it either)
@@ -509,7 +607,7 @@ class ActorThread(ActorBase):
             # (potentially long) blocking put so the learner's reserve()
             # wait is bounded by one rollout. The instant acquire() itself is
             # deliberately unspanned: wait_s means *blocked on the learner*.
-            params, version = self._slot.acquire()
+            params, version = self._slot.acquire(holder=self.name)
             self.span_emitter.begin(COLLECT)
             try:
                 self._key, traj, last_obs, release = self._collect(
@@ -517,8 +615,18 @@ class ActorThread(ActorBase):
                 )
             finally:
                 self.span_emitter.end()
-                self._slot.release(version)
+                self._slot.release(version, holder=self.name)
+            seq = self._start_seq + i
+            if self._snapshot is not None:
+                # capture post-rollout state *before* the put: by the time
+                # the learner can consume seq, its resume state exists
+                with self._state_lock:
+                    self._state_log[seq] = self._snapshot(self._key)
             if not self._put(
-                Rollout(traj, last_obs, version, self.actor_id, i, release)
+                Rollout(traj, last_obs, version, self.actor_id, seq, release)
             ):
                 return
+            self.produced += 1
+            if self._ledger is not None:
+                self._ledger.produced()
+            i += 1

@@ -69,12 +69,18 @@ hides which learner-private state rides the update signature.
 from __future__ import annotations
 
 import queue as _stdlib_queue
-from typing import Callable, List, Optional, Sequence, Tuple
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.checkpointer import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
 from repro.configs.base import PipelineConfig
 from repro.core.framework import MetricsAccumulator, RunResult, init_rl_common
 from repro.core.rollout import make_collect_fn
@@ -87,9 +93,11 @@ from repro.pipeline.actor import (
     Rollout,
     collect_host,
 )
+from repro.pipeline.faults import FaultInjector, FaultPlan
 from repro.pipeline.learner import make_learner_step, make_sharded_learner_step
 from repro.pipeline.queue import CLOSED, TrajectoryQueue
 from repro.pipeline.ring import DeviceTrajectoryRing, MeshTrajectoryRing
+from repro.pipeline.supervisor import ActorSupervisor, QuotaLedger
 from repro.telemetry import (
     LEARNER_UPDATE,
     LEASE,
@@ -394,6 +402,28 @@ class PipelinedRL:
         # are lane-assembled: actor_id is -1, seq the common lane seq)
         self.learned_ids: List[Tuple[int, int]] = []
 
+        # -- fault tolerance + checkpoint state --------------------------------
+        if pipeline.fault_plan is not None and not isinstance(
+                pipeline.fault_plan, FaultPlan):
+            raise TypeError(
+                "PipelineConfig.fault_plan must be a repro.pipeline.faults."
+                f"FaultPlan, got {type(pipeline.fault_plan).__name__}"
+            )
+        # full (bitwise) resume needs the actor-side carried state; that only
+        # exists parent-side on the thread backend's FIFO planes. Everywhere
+        # else a checkpoint is a *warm* restart: params/opt state/counters
+        # restore exactly, actors re-reset their envs (docs/fault_tolerance.md)
+        self._ckpt_slots = (self._backend == "thread"
+                            and self._plane in ("device", "host")
+                            and not self._replay)
+        self._iters_done = 0  # cumulative completed updates (checkpoint id)
+        self._resume_step = None  # step_arr override set by restore()
+        self._consumed_seq = [0] * n_actors  # per-slot consumed rollout count
+        # slot -> (key, env_state, obs) after the newest *consumed* rollout
+        self._live_slot_state: Dict[int, tuple] = {}
+        self._resume_slot_state: Optional[Dict[int, tuple]] = None
+        self.supervisor = None  # the last run()'s ActorSupervisor (elastic)
+
     # -- queue plane ---------------------------------------------------------
     def _resolve_plane(self, plane: str) -> str:
         if plane not in ("auto", "device", "host", "mesh"):
@@ -590,6 +620,151 @@ class PipelinedRL:
         self.key = keys[0]
         return list(keys[1:])
 
+    # -- checkpoint / resume ---------------------------------------------------
+    def _make_snapshot(self, i: int) -> Callable:
+        """Post-rollout actor-state capture for slot ``i`` (thread backend).
+
+        Called by the actor thread right after each successful collect;
+        the learner stores the snapshot of the newest *consumed* rollout as
+        the slot's resume point. Device path: the carried arrays are
+        immutable jax values — keep references. Host path: the env state
+        lives inside the pool (unrecoverable — warm restart) and the obs
+        rides a recycled staging buffer, so it must be copied out.
+        """
+        if self._host:
+            def snap(key, i=i):
+                return (key, None, np.array(self._actor_obs[i]))
+        else:
+            def snap(key, i=i):
+                return (key, self._actor_env_state[i], self._actor_obs[i])
+        return snap
+
+    def _checkpoint_template(self):
+        """The checkpoint pytree *structure* (placeholder leaves carry the
+        dtypes/shapes/residency ``restore_checkpoint`` restores into).
+        Save and restore both derive it from the live model, so a resume
+        must run under the same config — asserted by leaf-shape checks."""
+        n = self._n_actors
+        tree = {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "key": self.key,
+            "counters": {
+                "total_steps": np.asarray(0, np.int64),
+                "step_value": np.asarray(0, np.int64),
+                "iters_done": np.asarray(0, np.int64),
+                "actor_seq": np.zeros(n, np.int64),
+                "consumed_seq": np.zeros(n, np.int64),
+                # lifetime queue tickets (issued, consumed) at save time:
+                # audit metadata for how many in-flight rollouts a kill
+                # dropped (re-collected on resume, never silently skipped)
+                "tickets": np.zeros(2, np.int64),
+            },
+        }
+        if self._dqn:
+            tree["dqn_target"] = self._target
+            tree["dqn_updates"] = self._updates
+        if self._ckpt_slots:
+            tree["slots"] = {
+                str(i): {
+                    "key": jax.random.PRNGKey(0),
+                    "env_state": self._actor_env_state[i],
+                    "obs": self._actor_obs[i],
+                }
+                for i in range(n)
+            }
+        return tree
+
+    @staticmethod
+    def _ticket_counts(queue) -> Tuple[int, int]:
+        issued = getattr(queue, "tickets_issued", 0)
+        consumed = getattr(queue, "tickets_consumed", 0)
+        if isinstance(issued, (list, tuple)):
+            issued = sum(issued)
+        if isinstance(consumed, (list, tuple)):
+            consumed = sum(consumed)
+        return int(issued), int(consumed)
+
+    def _save_checkpoint(self, queue, step_value: int) -> str:
+        """Snapshot the full pipeline state after the update that just
+        committed. Runs on the learner thread between updates, so
+        ``self.params``/``opt_state`` are quiescent; ``np.asarray`` inside
+        the checkpointer blocks until the update producing them retired."""
+        tree = self._checkpoint_template()
+        issued, consumed = self._ticket_counts(queue)
+        tree["counters"] = {
+            "total_steps": np.asarray(self.total_steps, np.int64),
+            "step_value": np.asarray(step_value, np.int64),
+            "iters_done": np.asarray(self._iters_done, np.int64),
+            "actor_seq": np.asarray(self._actor_seq, np.int64),
+            "consumed_seq": np.asarray(self._consumed_seq, np.int64),
+            "tickets": np.asarray([issued, consumed], np.int64),
+        }
+        if self._ckpt_slots:
+            slots = {}
+            for i in range(self._n_actors):
+                st = self._live_slot_state.get(i)
+                if st is None:  # nothing consumed from this slot yet
+                    st = (jax.random.PRNGKey(0), self._actor_env_state[i],
+                          self._actor_obs[i])
+                slots[str(i)] = {"key": st[0], "env_state": st[1],
+                                 "obs": st[2]}
+            tree["slots"] = slots
+        path = save_checkpoint(self.pipeline.checkpoint_dir,
+                               self._iters_done, tree, prefix="pipe")
+        log.info("checkpoint: saved %s (update %d, %d steps)",
+                 path, self._iters_done, self.total_steps)
+        return path
+
+    def restore(self, directory: Optional[str] = None, *,
+                prefix: str = "pipe") -> int:
+        """Restore the newest checkpoint; returns the number of learner
+        updates already done (0 = nothing to restore). The caller runs the
+        *remaining* iterations: on the thread backend's FIFO planes the
+        resumed run continues the interrupted one bitwise under lockstep
+        (the tests pin this); elsewhere it is a warm restart."""
+        directory = directory or self.pipeline.checkpoint_dir
+        if not directory:
+            raise ValueError("no checkpoint directory: pass one or set "
+                             "PipelineConfig.checkpoint_dir")
+        step = latest_step(directory, prefix=prefix)
+        if step is None:
+            return 0
+        tree = restore_checkpoint(directory, step,
+                                  self._checkpoint_template(), prefix=prefix)
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        self.key = tree["key"]
+        if self._plane == "mesh":
+            from repro.distributed.sharding import replicated_sharding
+
+            repl = replicated_sharding(self._rollout_mesh)
+            self.params = jax.device_put(self.params, repl)
+            self.opt_state = jax.device_put(self.opt_state, repl)
+        if self._dqn:
+            self._target = tree["dqn_target"]
+            self._updates = tree["dqn_updates"]
+        c = tree["counters"]
+        self.total_steps = int(c["total_steps"])
+        self._iters_done = int(c["iters_done"])
+        self._resume_step = int(c["step_value"])
+        self._actor_seq = [int(x) for x in np.asarray(c["actor_seq"])]
+        self._consumed_seq = [int(x) for x in np.asarray(c["consumed_seq"])]
+        if self._ckpt_slots:
+            self._resume_slot_state = {
+                i: (tree["slots"][str(i)]["key"],
+                    tree["slots"][str(i)]["env_state"],
+                    tree["slots"][str(i)]["obs"])
+                for i in range(self._n_actors)
+            }
+        issued, consumed = (int(x) for x in np.asarray(c["tickets"]))
+        log.info(
+            "checkpoint: restored update %d (%d steps) from %s; "
+            "%d in-flight rollout(s) at save time will be re-collected",
+            self._iters_done, self.total_steps, directory,
+            max(issued - consumed, 0))
+        return self._iters_done
+
     def run(self, iterations: int, log_every: int = 0) -> RunResult:
         """Run `iterations` learner updates (each = one shard's n_e·t_max
         timesteps), fed by ``num_actors`` concurrent actor replicas."""
@@ -609,6 +784,30 @@ class PipelinedRL:
             quota = [iterations // n_actors
                      + (1 if i < iterations % n_actors else 0)
                      for i in range(n_actors)]
+        cfg = self.pipeline
+        # fault harness + recovery scaffolding. The injector exists with or
+        # without elastic (deterministic fail-fast chaos tests); the ledger
+        # and supervisor only when elastic arms recovery. Config already
+        # rejected elastic on the mesh plane (fail-fast by design).
+        injector = (FaultInjector(cfg.fault_plan)
+                    if cfg.fault_plan is not None else None)
+        elastic = cfg.elastic
+        ledger = QuotaLedger(sum(quota)) if elastic else None
+        ckpt_every = cfg.checkpoint_every
+        snapshots = ckpt_every > 0 and self._ckpt_slots
+        # resume: restore() stashed per-slot actor state; apply it exactly
+        # once — the resumed actors re-enter the key/env/obs stream at the
+        # checkpointed rollout boundary with seq numbering continuing where
+        # the consumed stream left off (in-flight rollouts re-collect)
+        resume = self._resume_slot_state
+        self._resume_slot_state = None
+        if resume:
+            start_seqs = list(self._consumed_seq)
+            self._live_slot_state = dict(resume)
+        else:
+            start_seqs = [0] * n_actors
+            self._consumed_seq = [0] * n_actors
+            self._live_slot_state = {}
         # the actor-plane split: everything below this differs by backend
         # (thread replicas collecting in-process vs subprocess workers with
         # parent-side drainers); everything after it is backend-agnostic —
@@ -616,12 +815,18 @@ class PipelinedRL:
         # reserve/commit param-slot protocol to the learner loop.
         if self._backend == "process":
             slot, actors = self._process_plane.begin_run(
-                queue, quota, self.pipeline.lockstep, self.params,
-                telemetry=hub,
+                queue, quota, cfg.lockstep, self.params,
+                telemetry=hub, ledger=ledger, injector=injector,
             )
         else:
             slot = PingPongParamSlot(self.params, version=0)
             keys = self._actor_keys(n_actors)
+            if resume:
+                keys = [resume[i][0] for i in range(n_actors)]
+                for i in range(n_actors):
+                    if not self._host:
+                        self._actor_env_state[i] = resume[i][1]
+                    self._actor_obs[i] = resume[i][2]
             if self._plane == "mesh":
                 # each lane's RNG stream is pinned to its device so the
                 # collect jit (whose other inputs live there) never pulls
@@ -633,11 +838,54 @@ class PipelinedRL:
                     self._make_collect(i),
                     queue.lane(i) if self._plane == "mesh" else queue,
                     slot, key, quota[i],
-                    lockstep=self.pipeline.lockstep, actor_id=i,
-                    telemetry=hub,
+                    lockstep=cfg.lockstep, actor_id=i,
+                    telemetry=hub, start_seq=start_seqs[i],
+                    ledger=ledger, injector=injector,
+                    snapshot=self._make_snapshot(i) if snapshots else None,
                 )
                 for i, key in enumerate(keys)
             ]
+        actors_by_id: Dict[int, object] = {a.actor_id: a for a in actors}
+        sup = None
+        if elastic:
+            if self._backend == "process":
+                def respawner(dead, new_id, remaining):
+                    d = self._process_plane.respawn_worker(
+                        dead.slot_index, new_id, remaining, cfg.lockstep,
+                        queue, telemetry=hub, ledger=ledger,
+                    )
+                    actors_by_id[new_id] = d
+                    d.start()
+                    return d
+            else:
+                def respawner(dead, new_id, remaining):
+                    # the replacement resumes the dead replica's RNG stream
+                    # and carried env state (mutated only on a *successful*
+                    # collect, so both sit at the last rollout boundary) but
+                    # gets a fresh staging ring via _make_collect — the dead
+                    # replica's in-flight set may be unrecoverable
+                    a = ActorThread(
+                        self._make_collect(dead.slot_index),
+                        queue, slot, dead._key, remaining,
+                        lockstep=cfg.lockstep, actor_id=new_id,
+                        telemetry=hub, slot_index=dead.slot_index,
+                        ledger=ledger, injector=injector,
+                        snapshot=(self._make_snapshot(dead.slot_index)
+                                  if snapshots else None),
+                    )
+                    actors_by_id[new_id] = a
+                    a.start()
+                    return a
+            sup = ActorSupervisor(
+                queue, ledger, respawner,
+                restart_budget=cfg.restart_budget,
+                backoff_s=cfg.restart_backoff_s, telemetry=hub,
+            )
+            for a in actors:
+                sup.register(a)
+        # kept on self (like .telemetry) so harnesses/tests can audit the
+        # run's fault episodes after run() returns
+        self.supervisor = sup
         # device plane: never sync the learner loop — metric scalars are
         # stashed and converted once at result(), so update i+1 dispatches
         # while update i still executes. Host plane: eager (the blocking
@@ -662,11 +910,19 @@ class PipelinedRL:
                 *[(f"actor{a.actor_id}", a.span_emitter, a.is_alive)
                   for a in actors],
             ])
-        # same step-counter semantics as ParallelRL.run (lr_schedule parity)
-        step_arr = jnp.asarray(self.total_steps, jnp.int32)
+        # same step-counter semantics as ParallelRL.run (lr_schedule parity);
+        # a restore() overrides the start value so the resumed run's schedule
+        # continues exactly where the interrupted one left off
+        start_step = (self._resume_step if self._resume_step is not None
+                      else self.total_steps)
+        self._resume_step = None
+        step_arr = jnp.asarray(start_step, jnp.int32)
+        step0 = int(start_step)
         completed = 0
         try:
             for i in range(iterations):
+                if injector is not None:
+                    injector.stall_learner(i)
                 learner_em.begin(QUEUE_GET_WAIT)
                 try:
                     payload = queue.get()
@@ -678,16 +934,30 @@ class PipelinedRL:
                 # claim the stale ping-pong buffer; bounded by one in-flight
                 # collect (actors release before blocking on the queue), so a
                 # long wait means an actor died without releasing — bail out
-                # instead of hanging
+                # (naming the holder) instead of hanging
                 learner_em.begin(LEASE)
                 try:
+                    deadline = time.monotonic() + cfg.lease_timeout_s
                     while True:
                         publish_dst = slot.reserve(i + 1, timeout=1.0)
                         if publish_dst is not None:
                             break
-                        if not any(a.is_alive() for a in actors):
+                        live = (sup.all_actors() if sup is not None
+                                else actors)
+                        if not any(a.is_alive() for a in live):
                             raise RuntimeError(
                                 "param lease never released (all actors exited)"
+                            )
+                        if time.monotonic() >= deadline:
+                            stale = (i + 1) % 2
+                            held = ", ".join(
+                                slot.holders(stale)
+                                if hasattr(slot, "holders") else ()
+                            ) or "an unknown party"
+                            raise RuntimeError(
+                                f"param buffer {stale} still leased after "
+                                f"lease_timeout_s={cfg.lease_timeout_s:g}s "
+                                f"— held by {held}"
                             )
                 finally:
                     learner_em.end()
@@ -730,7 +1000,26 @@ class PipelinedRL:
                 # executed. Lazy (device plane): no sync — just stashes.
                 acc.update(metrics)
                 if payload.release is not None:
-                    payload.release()  # consume certified: set is reusable
+                    if injector is not None and injector.drop_release(i):
+                        # injected lease-drop: the set is deliberately leaked
+                        # — the staging ring's +2 sizing must absorb it and
+                        # the run must complete regardless
+                        pass
+                    else:
+                        payload.release()  # consume certified: set reusable
+                self._iters_done += 1
+                if ckpt_every:
+                    # track the newest consumed rollout per slot: its
+                    # post-collect actor snapshot is the slot's resume point
+                    owner = actors_by_id.get(payload.actor_id)
+                    if owner is not None:
+                        self._consumed_seq[owner.slot_index] = payload.seq + 1
+                        st = (owner.consume_state(payload.seq)
+                              if hasattr(owner, "consume_state") else None)
+                        if st is not None:
+                            self._live_slot_state[owner.slot_index] = st
+                    if completed % ckpt_every == 0:
+                        self._save_checkpoint(queue, step0 + completed)
                 if log_every and (i + 1) % log_every == 0:
                     # never sync the device planes for a log line: fold only
                     # the already-executed updates (cumulative() would drain
@@ -745,6 +1034,11 @@ class PipelinedRL:
                         acc.last("loss"),
                     )
         finally:
+            # disarm recovery FIRST: a replica dying during teardown must
+            # not respawn a fresh one under the sweeps below
+            if sup is not None:
+                sup.shutdown()
+                actors = sup.all_actors()  # epochs included in the sweeps
             # reap all actors on every exit path (normal, learner exception,
             # KeyboardInterrupt): signal stop, then keep draining so puts
             # blocked on a full queue can finish and the threads can exit —
@@ -782,7 +1076,16 @@ class PipelinedRL:
             hub.stop()
             if self.pipeline.trace_path:
                 hub.write_trace(self.pipeline.trace_path)
-        errors = [a for a in actors if a.error is not None]
+        if sup is not None and sup.fatal is not None:
+            raise RuntimeError(
+                f"pipeline stopped early after faults: {completed}/"
+                f"{iterations} iterations — last live actor died"
+            ) from sup.fatal.error
+        # supervised deaths (fault_handled) were absorbed — respawned or
+        # degraded — and must not fail a run that completed its quota
+        errors = [a for a in actors
+                  if a.error is not None
+                  and not getattr(a, "fault_handled", False)]
         if errors:
             raise RuntimeError(
                 f"pipeline actor {errors[0].actor_id} failed"
@@ -791,14 +1094,19 @@ class PipelinedRL:
             raise RuntimeError(
                 f"pipeline stopped early: {completed}/{iterations} iterations"
             )
+        if sup is not None and sup.episodes:
+            log.warning("pipeline recovered from %d fault episode(s): %s",
+                        len(sup.episodes), sup.episodes)
         if n_actors == 1:
+            # with a supervisor the slot's newest epoch carries the stream
+            last = sup.slot_actor(0) if sup is not None else actors[0]
             if self._backend == "process":
                 # the worker owns the acting key; sync it back so repeated
                 # run() calls continue the same stream the thread plane would
-                if actors[0].final_key is not None:
-                    self.key = jnp.asarray(actors[0].final_key)
+                if last.final_key is not None:
+                    self.key = jnp.asarray(last.final_key)
             else:
-                self.key = actors[0]._key
+                self.key = last._key
         per_actor_idle = [a.put_wait_s + a.wait_s for a in actors]
         return acc.result(
             self.total_steps,

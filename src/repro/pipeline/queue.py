@@ -103,6 +103,11 @@ class TrajectoryQueue:
         else:
             self.span_emitter = SpanEmitter(name, locked=True)
         self._validated: Any = None  # last payload to pass the plane check
+        # lifetime ticket counters (monotone; survive close): checkpoint
+        # metadata records them so a resume can audit how many in-flight
+        # payloads the interruption dropped
+        self._tickets_issued = 0  # payloads ever accepted by put()
+        self._tickets_consumed = 0  # payloads ever handed out by get()
 
     @property
     def put_wait_s(self) -> float:
@@ -144,6 +149,7 @@ class TrajectoryQueue:
                 if not ok:
                     raise _queue.Full
                 self._items.append(item)
+                self._tickets_issued += 1
                 self._cond.notify_all()
             # cache only spans the Full-retry loop — don't retain a
             # reference to a payload the consumer may since have released
@@ -163,6 +169,7 @@ class TrajectoryQueue:
                     raise _queue.Empty
                 if self._items:
                     item = self._items.popleft()
+                    self._tickets_consumed += 1
                     self._cond.notify_all()
                     return item
                 return CLOSED
@@ -190,3 +197,15 @@ class TrajectoryQueue:
     def qsize(self) -> int:
         with self._cond:
             return len(self._items)
+
+    @property
+    def tickets_issued(self) -> int:
+        """Payloads ever accepted (monotone — the device ring's idiom)."""
+        with self._cond:
+            return self._tickets_issued
+
+    @property
+    def tickets_consumed(self) -> int:
+        """Payloads ever delivered to the consumer (monotone)."""
+        with self._cond:
+            return self._tickets_consumed

@@ -229,6 +229,14 @@ class DeviceTrajectoryRing:
         with self._cond:
             return self._tail
 
+    @property
+    def tickets_consumed(self) -> int:
+        """Total gets delivered over the ring's lifetime (monotone);
+        ``issued - consumed`` at checkpoint time is the in-flight window a
+        resume re-collects."""
+        with self._cond:
+            return self._head
+
 
 # ---------------------------------------------------------------------------
 # Mesh plane — per-device sub-rings feeding a sharded learner

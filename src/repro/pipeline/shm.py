@@ -169,7 +169,8 @@ class ShmParamSlot:
     the shared synchronization primitives for a spawned child.
     """
 
-    def __init__(self, template_tree: Any, ctx, version: int = 0):
+    def __init__(self, template_tree: Any, ctx, version: int = 0,
+                 max_readers: int = 16):
         # force real host copies for seeding: np.asarray of a CPU jax array
         # can alias the device buffer, and the learner donates its initial
         # params on the very first update
@@ -189,6 +190,12 @@ class ShmParamSlot:
         self._cond = ctx.Condition()
         self._version = ctx.Value("q", version, lock=False)
         self._readers = [ctx.Value("i", 0, lock=False) for _ in range(2)]
+        # per-reader lease counts, parallel to _readers: lease slot j is
+        # worker j's outstanding acquires on that buffer. Lets a reserve
+        # timeout name the holder, and lets the supervisor revoke() a dead
+        # worker's leaked lease instead of deadlocking the learner.
+        self._leases = [ctx.Array("i", max_readers, lock=False)
+                        for _ in range(2)]
         for buf in self._bufs:  # version 0 is readable before any commit
             for dst, src in zip(buf, leaves):
                 np.copyto(dst, src)
@@ -220,11 +227,34 @@ class ShmParamSlot:
         reset path: workers are idle between runs, so rewinding the version
         to 0 cannot race a reader)."""
         if not self.reserve(version, timeout=timeout):
+            held = ", ".join(self.holders(version % 2)) or "an unlabeled party"
             raise RuntimeError(
                 f"ShmParamSlot.publish(version={version}): reserve timed "
-                f"out after {timeout}s — a worker died holding its lease?"
+                f"out after {timeout}s — buffer {version % 2} is still "
+                f"leased by {held} (died holding its lease?)"
             )
         self.commit(tree, version)
+
+    def holders(self, idx: int) -> List[str]:
+        """Labels of the workers currently leasing shm buffer ``idx``."""
+        with self._cond:
+            return [f"worker {j}" for j in range(len(self._leases[idx]))
+                    if self._leases[idx][j] > 0]
+
+    def revoke(self, reader_id: int) -> int:
+        """Clear every lease ``reader_id`` still holds (supervisor path: a
+        worker that died mid-acquire). Returns leases cleared."""
+        cleared = 0
+        with self._cond:
+            for idx in (0, 1):
+                n = self._leases[idx][reader_id]
+                if n > 0:
+                    self._leases[idx][reader_id] = 0
+                    self._readers[idx].value -= n
+                    cleared += n
+            if cleared:
+                self._cond.notify_all()
+        return cleared
 
     def handle(self) -> "ShmParamHandle":
         return ShmParamHandle(
@@ -233,6 +263,7 @@ class ShmParamSlot:
             cond=self._cond,
             version=self._version,
             readers=tuple(self._readers),
+            leases=tuple(self._leases),
         )
 
     def close(self) -> None:
@@ -270,12 +301,13 @@ class ShmParamHandle:
     ``template`` is the param tree with every leaf replaced by a
     ``_LeafSpec`` — structure and layout only, no values."""
 
-    def __init__(self, names, template, cond, version, readers):
+    def __init__(self, names, template, cond, version, readers, leases=None):
         self.names = names
         self.template = template
         self.cond = cond
         self.version = version
         self.readers = readers
+        self.leases = leases  # per-reader lease arrays (None: untracked)
 
 
 class ShmParamView:
@@ -288,7 +320,7 @@ class ShmParamView:
     lease only for the copy. ``wait_for`` is the lockstep gate.
     """
 
-    def __init__(self, handle: ShmParamHandle):
+    def __init__(self, handle: ShmParamHandle, reader_id: Optional[int] = None):
         specs, self._treedef = jax.tree_util.tree_flatten(handle.template)
         fields = [(s.shape, s.dtype) for s in specs]
         offsets, _ = _layout(fields)
@@ -297,17 +329,28 @@ class ShmParamView:
         self._cond = handle.cond
         self._version = handle.version
         self._readers = handle.readers
+        # which lease slot this reader marks on acquire (None, or a handle
+        # without lease arrays, skips the tracking — pre-supervisor protocol)
+        self._leases = getattr(handle, "leases", None)
+        self._reader_id = reader_id
 
     def acquire(self) -> Tuple[List[np.ndarray], int]:
         with self._cond:
             v = int(self._version.value)
             self._readers[v % 2].value += 1
+            if self._leases is not None and self._reader_id is not None:
+                self._leases[v % 2][self._reader_id] += 1
             return self._bufs[v % 2], v
 
     def release(self, version: int) -> None:
         with self._cond:
-            self._readers[version % 2].value -= 1
-            assert self._readers[version % 2].value >= 0, "unbalanced release"
+            idx = version % 2
+            if self._leases is not None and self._reader_id is not None:
+                if self._leases[idx][self._reader_id] <= 0:
+                    return  # revoked under us — the slot already balanced
+                self._leases[idx][self._reader_id] -= 1
+            self._readers[idx].value -= 1
+            assert self._readers[idx].value >= 0, "unbalanced release"
             self._cond.notify_all()
 
     def read_params(self) -> Tuple[Any, int]:

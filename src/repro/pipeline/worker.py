@@ -51,9 +51,12 @@ actor error — EOF propagation without deadlock.
 """
 from __future__ import annotations
 
+import atexit
 import multiprocessing as mp
+import os
 import queue as _stdlib_queue
 import traceback
+import weakref
 from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -75,6 +78,25 @@ __all__ = ["ProcessActorPlane", "ProcessActorDrainer"]
 def _parent_alive() -> bool:
     p = mp.parent_process()
     return p is not None and p.is_alive()
+
+
+def _orphan_unlink(sets, slot) -> None:
+    """Child-side last resort for the shm estate: the parent normally owns
+    every unlink, but a parent killed hard (SIGKILL) never runs its atexit
+    reaper — the orphaned child destroys the segments on its way out so
+    /dev/shm does not leak. POSIX unlink is safe under live mappings, and a
+    sibling orphan racing us sees FileNotFoundError, which is success."""
+    for s in sets or ():
+        try:
+            s.shm.unlink()
+        except Exception:
+            pass
+    if slot is not None:
+        for shm in getattr(slot, "_shms", ()) or ():
+            try:
+                shm.unlink()
+            except Exception:
+                pass
 
 
 def _worker_main(spec: HostEnvSpec, arch_cfg, hp, slot_handle,
@@ -99,7 +121,9 @@ def _worker_main(spec: HostEnvSpec, arch_cfg, hp, slot_handle,
                           name=n, create=False)
             for n in set_names
         ]
-        slot = ShmParamView(slot_handle)
+        # reader_id = this worker's slot: its param leases are attributable
+        # (reserve-timeout diagnostics) and revocable (supervisor respawn)
+        slot = ShmParamView(slot_handle, reader_id=actor_id)
         key = jnp.asarray(key_host)
         obs = pool.reset()
         # this worker's span track: recorded here (the spans describe *this*
@@ -120,14 +144,32 @@ def _worker_main(spec: HostEnvSpec, arch_cfg, hp, slot_handle,
                 cmd = cmd_q.get(timeout=1.0)
             except _stdlib_queue.Empty:
                 if not _parent_alive():
-                    return  # orphaned: the parent died without "stop"
+                    # orphaned: the parent died without "stop" — and without
+                    # its unlink duty (hard kill bypasses atexit)
+                    _orphan_unlink(sets, slot)
+                    return
                 continue
             if cmd[0] == "stop":
                 return
-            _, quota, lockstep = cmd
+            # 4th element (absent pre-fault-plan): planned (after, mode)
+            # kills this run executes in its own process
+            _, quota, lockstep = cmd[0], cmd[1], cmd[2]
+            faults = tuple(cmd[3]) if len(cmd) > 3 else ()
             try:
                 aborted = False
                 for seq in range(quota):
+                    for after, mode in faults:
+                        if after == seq:
+                            if mode == "exit":
+                                # the segfault/OOM-kill shape: no message,
+                                # no traceback — the drainer's liveness
+                                # poll must detect the silent death
+                                os._exit(17)
+                            raise RuntimeError(
+                                f"FaultPlan: injected worker fault on actor "
+                                f"{actor_id} after {seq} rollouts "
+                                f"(mode={mode!r})"
+                            )
                     if lockstep:
                         em.begin(LEASE)
                         while not slot.wait_for(seq, timeout=0.1):
@@ -226,10 +268,23 @@ class ProcessActorDrainer(ActorBase):
     to the worker's free list.
     """
 
-    def __init__(self, worker: _WorkerHandle, queue, telemetry=None):
-        super().__init__(queue, worker.actor_id, telemetry=telemetry)
+    def __init__(self, worker: _WorkerHandle, queue, telemetry=None,
+                 actor_id: Optional[int] = None, ledger=None,
+                 lockstep: bool = False):
+        # actor_id can differ from the worker's slot: a respawned replica
+        # gets a fresh epoch id while the child keeps its slot (which is
+        # also its shm reader_id)
+        super().__init__(
+            queue, worker.actor_id if actor_id is None else actor_id,
+            telemetry=telemetry)
         self._worker = worker
         self._telemetry = telemetry
+        self.slot_index = worker.actor_id
+        self._ledger = ledger
+        self._lockstep = lockstep
+        # seq offset for ledger-continuation runs: the child restarts its
+        # local seq at 0 per run command, the stream must not
+        self._seq_base = 0
         self.final_key: Optional[np.ndarray] = None
 
     def stop(self) -> None:
@@ -243,7 +298,7 @@ class ProcessActorDrainer(ActorBase):
             except _stdlib_queue.Empty:
                 if not self._worker.proc.is_alive():
                     raise RuntimeError(
-                        f"actor worker {self.actor_id} died without a "
+                        f"actor worker {self.slot_index} died without a "
                         f"message (exitcode "
                         f"{self._worker.proc.exitcode}) — envs or shm torn "
                         "down underneath it?"
@@ -263,26 +318,44 @@ class ProcessActorDrainer(ActorBase):
                     continue
                 s = self._worker.sets[idx]
                 if not self._put(Rollout(
-                    s.traj, s.last_obs, version, self.actor_id, seq,
+                    s.traj, s.last_obs, version, self.actor_id,
+                    self._seq_base + seq,
                     release=(lambda i=idx: free_q.put(i)),
                 )):
                     free_q.put(idx)
                     discard = True  # drain to the terminal message
+                else:
+                    self.produced += 1
+                    if self._ledger is not None:
+                        self._ledger.produced()
             elif kind == "spans":
                 # the child's telemetry ring, shipped just before its
                 # terminal message: give it a trace track of its own process
                 if self._telemetry is not None:
                     self._telemetry.merge_shipped(
-                        msg[1], pid=self.actor_id + 1
+                        msg[1], pid=self.slot_index + 1
                     )
             elif kind == "done":
                 self.final_key = msg[1]
+                if self._ledger is not None and not discard \
+                        and not self._stop_requested.is_set():
+                    # quota done — a dead sibling may have orphaned more:
+                    # claim it and send the idle child another run command
+                    got = self._ledger.wait_for_work(
+                        stop=self._stop_requested.is_set)
+                    if got > 0:
+                        extra = got + self._ledger.claim()
+                        self._seq_base = self.produced
+                        self.assigned += extra
+                        self._worker.cmd_q.put(
+                            ("run", int(extra), self._lockstep, ()))
+                        continue
                 return  # graceful checkout (ActorBase -> producer_done)
             elif kind == "aborted":
                 return
             elif kind == "error":
                 raise RuntimeError(
-                    f"actor worker {self.actor_id} failed:\n{msg[1]}"
+                    f"actor worker {self.slot_index} failed:\n{msg[1]}"
                 )
             else:  # pragma: no cover - protocol violation
                 raise RuntimeError(f"unknown worker message {msg!r}")
@@ -309,6 +382,10 @@ class _ShmSlotBridge:
         if not self._shm.reserve(version, timeout=timeout):
             return None
         return self._bufs[version % 2]
+
+    def holders(self, idx: int) -> List[str]:
+        """Which workers still lease shm buffer ``idx`` (timeout naming)."""
+        return self._shm.holders(idx)
 
     def commit(self, published: Any, version: int) -> None:
         self._bufs[version % 2] = published
@@ -341,45 +418,65 @@ class ProcessActorPlane:
         if len(keys) != len(specs):
             raise ValueError("one RNG key per worker spec required")
         self._ctx = mp.get_context("spawn")
-        self._slot = ShmParamSlot(params, self._ctx)
-        n_sets = queue_depth + 2  # the HostStagingRing sizing contract
+        self._slot = ShmParamSlot(params, self._ctx,
+                                  max_readers=max(len(specs), 1))
+        self._n_sets = queue_depth + 2  # the HostStagingRing sizing contract
         self._workers: List[_WorkerHandle] = []
+        # retired handles of hard-killed workers: their staging sets may
+        # still back in-flight payloads (and their free_q still receives
+        # those payloads' release()s), so the estate is only torn down at
+        # plane close, never at respawn time
+        self._graveyard: List[_WorkerHandle] = []
         self._closed = False
+        self._specs = list(specs)
+        self._agent = agent
+        self._initial_keys = [np.asarray(k) for k in keys]
+        self._epochs = [0] * len(specs)  # respawn generation per slot
+        _LIVE_PLANES.add(self)
         try:
             for i, spec in enumerate(specs):
                 spec.validate_picklable()
-                sets = [
-                    ShmStagingSet(agent.hp.t_max, spec.n_envs,
-                                  spec.obs_shape, spec.obs_dtype)
-                    for _ in range(n_sets)
-                ]
-                cmd_q = self._ctx.Queue()
-                ready_q = self._ctx.Queue()
-                free_q = self._ctx.Queue()
-                for j in range(n_sets):
-                    free_q.put(j)
-                stop_evt = self._ctx.Event()
-                proc = self._ctx.Process(
-                    target=_worker_main,
-                    args=(spec, agent.cfg, agent.hp, self._slot.handle(),
-                          [s.name for s in sets], np.asarray(keys[i]),
-                          cmd_q, ready_q, free_q, stop_evt, i),
-                    name=f"pipeline-worker-{i}",
-                    daemon=True,  # orphan reaping: die with the parent
-                )
-                proc.start()
-                self._workers.append(_WorkerHandle(
-                    i, proc, cmd_q, ready_q, free_q, stop_evt, sets))
+                self._workers.append(self._spawn(i, self._initial_keys[i]))
         except BaseException:
             self.close()
             raise
+
+    def _spawn(self, slot_idx: int, key_host: np.ndarray) -> _WorkerHandle:
+        """Allocate one worker's estate (staging sets, queues, stop event)
+        and start its process. The child's actor_id stays the *slot* index
+        — it doubles as the shm param reader_id and trace track."""
+        spec = self._specs[slot_idx]
+        sets = [
+            ShmStagingSet(self._agent.hp.t_max, spec.n_envs,
+                          spec.obs_shape, spec.obs_dtype)
+            for _ in range(self._n_sets)
+        ]
+        cmd_q = self._ctx.Queue()
+        ready_q = self._ctx.Queue()
+        free_q = self._ctx.Queue()
+        for j in range(self._n_sets):
+            free_q.put(j)
+        stop_evt = self._ctx.Event()
+        epoch = self._epochs[slot_idx]
+        proc = self._ctx.Process(
+            target=_worker_main,
+            args=(spec, self._agent.cfg, self._agent.hp, self._slot.handle(),
+                  [s.name for s in sets], key_host,
+                  cmd_q, ready_q, free_q, stop_evt, slot_idx),
+            name=(f"pipeline-worker-{slot_idx}" if epoch == 0
+                  else f"pipeline-worker-{slot_idx}e{epoch}"),
+            daemon=True,  # orphan reaping: die with the parent
+        )
+        proc.start()
+        return _WorkerHandle(slot_idx, proc, cmd_q, ready_q, free_q,
+                             stop_evt, sets)
 
     @property
     def n_workers(self) -> int:
         return len(self._workers)
 
     def begin_run(self, queue, quota: Sequence[int], lockstep: bool,
-                  params: Any, telemetry=None):
+                  params: Any, telemetry=None, ledger=None, injector=None):
         """Start one ``run()``'s worth of collection on every worker.
 
         Returns ``(slot, drainers)`` with ``slot`` speaking the learner
@@ -396,30 +493,73 @@ class ProcessActorPlane:
         drainers = []
         for w, q in zip(self._workers, quota):
             w.stop_evt.clear()
-            w.cmd_q.put(("run", int(q), bool(lockstep)))
-            drainers.append(ProcessActorDrainer(w, queue, telemetry=telemetry))
+            faults = (injector.kills_for_worker(w.actor_id)
+                      if injector is not None else ())
+            w.cmd_q.put(("run", int(q), bool(lockstep), faults))
+            d = ProcessActorDrainer(w, queue, telemetry=telemetry,
+                                    ledger=ledger, lockstep=bool(lockstep))
+            d.assigned = int(q)
+            drainers.append(d)
         publish_em = (telemetry.emitter("shm.publish")
                       if telemetry is not None else None)
         return _ShmSlotBridge(params, self._slot, emitter=publish_em), drainers
 
+    def respawn_worker(self, slot_idx: int, actor_id: int, quota: int,
+                       lockstep: bool, queue, telemetry=None, ledger=None):
+        """Stand a dead slot back up mid-run (supervisor path).
+
+        Clears the dead replica's leaked param lease, then either reuses
+        the still-alive child (an injected/in-child error leaves it parked
+        at its command loop) or retires the handle to the graveyard and
+        spawns a fresh process with a fresh shm estate and a fold_in-derived
+        key (deterministic per (slot, epoch), never a key replay). Returns
+        a started ``ProcessActorDrainer`` carrying the fresh epoch
+        ``actor_id``; the caller starts it.
+        """
+        import jax
+
+        if self._closed:
+            raise RuntimeError("respawn_worker() on a closed plane")
+        self._slot.revoke(slot_idx)
+        self._epochs[slot_idx] += 1
+        w = self._workers[slot_idx]
+        if not w.proc.is_alive():
+            w.proc.join(timeout=1.0)
+            self._graveyard.append(w)
+            key = np.asarray(jax.random.fold_in(
+                jax.numpy.asarray(self._initial_keys[slot_idx]),
+                self._epochs[slot_idx]))
+            w = self._spawn(slot_idx, key)
+            self._workers[slot_idx] = w
+        w.stop_evt.clear()
+        w.cmd_q.put(("run", int(quota), bool(lockstep), ()))
+        d = ProcessActorDrainer(w, queue, telemetry=telemetry,
+                                actor_id=actor_id, ledger=ledger,
+                                lockstep=bool(lockstep))
+        d.assigned = int(quota)
+        return d
+
     def close(self, join_timeout: float = 10.0) -> None:
-        """Stop workers (politely, then hard) and release the shm estate.
-        Idempotent; safe to call with workers already dead."""
+        """Stop workers (politely, then hard) and release the shm estate —
+        including the graveyard of handles retired by respawns. Idempotent;
+        safe to call with workers already dead."""
         if self._closed:
             return
         self._closed = True
-        for w in self._workers:
+        _LIVE_PLANES.discard(self)
+        handles = self._workers + self._graveyard
+        for w in handles:
             w.stop_evt.set()
             try:
                 w.cmd_q.put(("stop",))
             except (ValueError, OSError):  # queue already torn down
                 pass
-        for w in self._workers:
+        for w in handles:
             w.proc.join(timeout=join_timeout)
             if w.proc.is_alive():  # hung child: reap it hard
                 w.proc.terminate()
                 w.proc.join(timeout=join_timeout)
-        for w in self._workers:
+        for w in handles:
             for q in (w.cmd_q, w.ready_q, w.free_q):
                 q.cancel_join_thread()
                 q.close()
@@ -429,8 +569,22 @@ class ProcessActorPlane:
         self._slot.close()
         self._slot.unlink()
 
-    def __del__(self):  # best-effort: never leave orphan shm segments
+
+# Interpreter-exit reaper, replacing the old per-plane ``__del__``: CPython
+# gives no ordering (or execution) guarantee for __del__ at shutdown — a
+# plane caught in a reference cycle was torn down after the shm module's
+# globals were cleared, or not at all, leaking /dev/shm segments and child
+# processes. One atexit hook over a WeakSet runs while the interpreter is
+# still whole; a plane closed normally has already removed itself.
+_LIVE_PLANES: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def _reap_planes() -> None:  # pragma: no cover - exercised by test via call
+    for plane in list(_LIVE_PLANES):
         try:
-            self.close(join_timeout=1.0)
+            plane.close(join_timeout=1.0)
         except Exception:
             pass
+
+
+atexit.register(_reap_planes)

@@ -22,6 +22,9 @@ from repro.telemetry.hub import ShippedTrack, Telemetry
 from repro.telemetry.spans import (
     CATEGORIES,
     COLLECT,
+    FAULT_DETECT,
+    FAULT_GIVEUP,
+    FAULT_RESPAWN,
     LEASE,
     LEARNER_UPDATE,
     MESH_REASSEMBLE,
@@ -51,6 +54,9 @@ __all__ = [
     "REPLAY_ADD",
     "REPLAY_SAMPLE",
     "REPLAY_EVICT",
+    "FAULT_DETECT",
+    "FAULT_RESPAWN",
+    "FAULT_GIVEUP",
     "SpanEmitter",
     "Telemetry",
     "ShippedTrack",

@@ -178,6 +178,11 @@ class Telemetry:
                                       if em.last_activity else None)
                             for em in actors
                         },
+                        # every registered counter (fault.detect/respawn/
+                        # giveup land here when the supervisor is active) —
+                        # additive: schema consumers key on the fields above
+                        "counters": {k: v for k, v in self._counters.items()
+                                     if k != "steps"},
                     }
                     line.update(self._sample_gauges())
                     f.write(json.dumps(line) + "\n")

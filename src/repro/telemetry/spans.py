@@ -52,6 +52,9 @@ __all__ = [
     "REPLAY_ADD",
     "REPLAY_SAMPLE",
     "REPLAY_EVICT",
+    "FAULT_DETECT",
+    "FAULT_RESPAWN",
+    "FAULT_GIVEUP",
     "SpanEmitter",
     "set_capture",
     "capture_enabled",
@@ -62,7 +65,11 @@ __all__ = [
 # prefill/decode, but the pipeline emitters all use this one). The three
 # replay.* stages belong to the sampled ReplayRing plane: add (a producer
 # deposit), sample (the learner's batched draw over resident slots) and
-# evict (FIFO retirement of the oldest slot when the ring is full).
+# evict (FIFO retirement of the oldest slot when the ring is full). The
+# three fault.* stages are the supervisor's recovery episodes (detect a
+# replica failure, respawn it, or give up and degrade) — appended, never
+# reordered: shipped worker rings carry category *indices*, so existing
+# entries must keep their positions across versions.
 CATEGORIES: Tuple[str, ...] = (
     "collect",
     "queue.put_wait",
@@ -75,6 +82,9 @@ CATEGORIES: Tuple[str, ...] = (
     "replay.add",
     "replay.sample",
     "replay.evict",
+    "fault.detect",
+    "fault.respawn",
+    "fault.giveup",
 )
 COLLECT = 0
 QUEUE_PUT_WAIT = 1
@@ -87,6 +97,9 @@ MESH_REASSEMBLE = 7
 REPLAY_ADD = 8
 REPLAY_SAMPLE = 9
 REPLAY_EVICT = 10
+FAULT_DETECT = 11
+FAULT_RESPAWN = 12
+FAULT_GIVEUP = 13
 
 _MAX_DEPTH = 8  # open-span nesting the preallocated stack covers
 

@@ -1,0 +1,222 @@
+"""Checkpointer round-trips + pipeline full-state checkpoint/resume.
+
+Pins the checkpoint plane's contracts:
+
+* pytree round-trips are dtype- and residency-faithful: bf16 leaves come
+  back bf16 **bitwise** (saved as lossless f32 — numpy has no bf16),
+  numpy leaves stay numpy, python scalars survive, and the json manifest
+  records each leaf's logical dtype,
+* ``latest_step`` is anchored — prefix look-alikes never shadow the real
+  series,
+* the tentpole: kill a pipelined run mid-flight and resume from its last
+  checkpoint — under depth-1 lockstep with infinite clips the resumed
+  run's params are **bitwise identical** to the uninterrupted run's
+  (params, opt state, learner step counter, per-actor RNG/env/obs state
+  and seq numbering all restore exactly; in-flight rollouts re-collect),
+* the host plane resumes warm (params/counters exact, envs re-reset) and
+  keeps running.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.configs import PipelineConfig, get_config
+from repro.core.agents import PAACAgent, PAACConfig
+from repro.envs import GridWorld, HostEnvPool
+from repro.pipeline import FaultPlan, PipelinedRL
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(tree)
+
+
+# ---------------------------------------------------------------------------
+# checkpointer round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_roundtrip_is_bitwise(tmp_path):
+    key = jax.random.PRNGKey(0)
+    tree = {
+        "w": jax.random.normal(key, (16, 8), jnp.bfloat16),
+        "b": jnp.arange(8, dtype=jnp.bfloat16) / 3,
+        "f32": jax.random.normal(key, (4,), jnp.float32),
+    }
+    save_checkpoint(str(tmp_path), 1, tree)
+    back = restore_checkpoint(str(tmp_path), 1, tree)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype, k
+        # bitwise: compare the raw bit patterns, not approximate values
+        np.testing.assert_array_equal(
+            np.asarray(back[k]).view(np.uint8),
+            np.asarray(tree[k]).view(np.uint8), err_msg=k)
+
+
+def test_scalar_and_numpy_leaves_roundtrip(tmp_path):
+    tree = {
+        "step": 42,
+        "lr": 0.125,
+        "host_obs": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "counters": np.asarray([3, 5], np.int64),
+        "key": jax.random.PRNGKey(7),
+    }
+    save_checkpoint(str(tmp_path), 3, tree)
+    back = restore_checkpoint(str(tmp_path), 3, tree)
+    assert back["step"] == 42 and isinstance(back["step"], int)
+    assert back["lr"] == 0.125
+    # numpy stays numpy: a host-plane resume must not promote to device
+    assert type(back["host_obs"]) is np.ndarray
+    np.testing.assert_array_equal(back["host_obs"], tree["host_obs"])
+    np.testing.assert_array_equal(back["counters"], tree["counters"])
+    np.testing.assert_array_equal(np.asarray(back["key"]),
+                                  np.asarray(tree["key"]))
+
+
+def test_manifest_records_logical_dtypes(tmp_path):
+    tree = {"w": jnp.zeros((2,), jnp.bfloat16), "n": 7}
+    save_checkpoint(str(tmp_path), 2, tree, prefix="pipe")
+    with open(os.path.join(str(tmp_path), "pipe_0000000002.json")) as f:
+        manifest = json.load(f)
+    assert manifest["step"] == 2
+    assert manifest["dtypes"]["w"] == "bfloat16"
+
+
+def test_latest_step_is_anchored(tmp_path):
+    for name in ("pipe_0000000003.npz", "pipe_0000000001.npz",
+                 "pipe_extra_0000000009.npz", "xpipe_0000000008.npz"):
+        (tmp_path / name).write_bytes(b"")
+    assert latest_step(str(tmp_path), prefix="pipe") == 3
+    assert latest_step(str(tmp_path), prefix="nope") is None
+    assert latest_step(str(tmp_path / "missing")) is None
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": np.zeros((4,), np.float32)})
+    with pytest.raises(AssertionError):
+        restore_checkpoint(str(tmp_path), 1,
+                           {"w": np.zeros((5,), np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# pipeline checkpoint/resume
+# ---------------------------------------------------------------------------
+
+
+def _grid_rl(tmp_dir="", every=0, fault_plan=None, seed=1):
+    env = GridWorld(8, size=4, max_steps=20)
+    cfg = get_config("paac_vector").replace(
+        obs_shape=env.obs_shape, num_actions=env.num_actions)
+    agent = PAACAgent(cfg, PAACConfig(t_max=5))
+    inf = float("inf")
+    return PipelinedRL(
+        env, agent, seed=seed,
+        pipeline=PipelineConfig(
+            queue_depth=1, rho_bar=inf, c_bar=inf, lockstep=True,
+            checkpoint_dir=str(tmp_dir), checkpoint_every=every,
+            fault_plan=fault_plan),
+    )
+
+
+def test_kill_and_resume_is_bitwise_vs_uninterrupted(tmp_path):
+    """The acceptance pin: run A uninterrupted; run B checkpoints every 3
+    updates and is killed mid-run by an injected fault; run C restores B's
+    newest checkpoint and runs the remainder. Under depth-1 lockstep with
+    infinite clips C's params equal A's bit for bit."""
+    total = 8
+    rl_a = _grid_rl()
+    rl_a.run(total)
+
+    rl_b = _grid_rl(tmp_dir=tmp_path, every=3,
+                    fault_plan=FaultPlan(kills=((0, 5, "error"),)))
+    with pytest.raises(RuntimeError):
+        rl_b.run(total)
+    assert latest_step(str(tmp_path), prefix="pipe") == 3
+
+    rl_c = _grid_rl(tmp_dir=tmp_path)
+    done = rl_c.restore()
+    assert done == 3
+    assert rl_c.total_steps == rl_b._steps_per_iter * 3
+    res = rl_c.run(total - done)
+    assert np.isfinite(res.mean_metrics["loss"])
+    # params AND opt state bitwise equal the uninterrupted run's
+    for a, c in zip(_leaves(rl_a.params), _leaves(rl_c.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    for a, c in zip(_leaves(rl_a.opt_state), _leaves(rl_c.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    assert rl_c.total_steps == rl_a.total_steps
+    # seq numbering continued where the consumed stream left off
+    assert [s for _, s in rl_c.learned_ids] == list(range(3, total))
+
+
+def test_resume_with_empty_dir_is_noop(tmp_path):
+    rl = _grid_rl(tmp_dir=tmp_path)
+    assert rl.restore() == 0
+    with pytest.raises(ValueError, match="checkpoint dir"):
+        _grid_rl().restore()
+
+
+def test_periodic_checkpoints_accumulate(tmp_path):
+    rl = _grid_rl(tmp_dir=tmp_path, every=2)
+    rl.run(5)
+    # checkpoints at updates 2 and 4; latest wins
+    assert latest_step(str(tmp_path), prefix="pipe") == 4
+    names = sorted(n for n in os.listdir(tmp_path) if n.endswith(".npz"))
+    assert names == ["pipe_0000000002.npz", "pipe_0000000004.npz"]
+
+
+class _ToyGymEnv:
+    def __init__(self, seed):
+        self.rng = np.random.RandomState(seed)
+        self.state = 0
+
+    def reset(self):
+        self.state = int(self.rng.randint(0, 100))
+        return np.array([self.state % 7], np.float32)
+
+    def step(self, action):
+        reward = 1.0 if action == self.state % 3 else 0.0
+        self.state += 1
+        return np.array([self.state % 7], np.float32), reward, \
+            self.state % 10 == 0, {}
+
+
+def test_host_plane_checkpoint_and_warm_resume(tmp_path):
+    """Host pool: env state lives inside the pool workers, so a resume is
+    warm — params/opt/counters restore exactly, the policy-input obs
+    restores from its copied snapshot, and the run keeps going."""
+    cfg = get_config("paac_vector").replace(obs_shape=(1,), num_actions=3)
+    agent = PAACAgent(cfg, PAACConfig(t_max=3))
+
+    def pool():
+        return HostEnvPool([lambda s=i: _ToyGymEnv(s) for i in range(4)],
+                           n_workers=2, obs_shape=(1,))
+
+    with pool() as p:
+        rl = PipelinedRL(
+            p, agent, seed=0,
+            pipeline=PipelineConfig(queue_depth=2,
+                                    checkpoint_dir=str(tmp_path),
+                                    checkpoint_every=2))
+        rl.run(4)
+        saved_params = jax.tree_util.tree_map(np.asarray, rl.params)
+    with pool() as p:
+        rl2 = PipelinedRL(
+            p, agent, seed=0,
+            pipeline=PipelineConfig(queue_depth=2,
+                                    checkpoint_dir=str(tmp_path)))
+        done = rl2.restore()
+        assert done == 4
+        for a, b in zip(_leaves(saved_params), _leaves(rl2.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        res = rl2.run(2)
+    assert np.isfinite(res.mean_metrics["loss"])
+    assert rl2.total_steps == 6 * 4 * 3

@@ -1,0 +1,387 @@
+"""Fault injection + actor supervision (repro.pipeline.faults/supervisor).
+
+Pins the recovery plane's contracts:
+
+* ``FaultPlan`` validates its schedule and every entry fires exactly once,
+* without ``elastic`` the pipeline stays fail-fast: an injected kill
+  propagates as the same ``RuntimeError`` a genuine crash would,
+* with ``elastic`` a killed replica respawns under the restart budget and
+  the run completes its *full* quota under a fresh ``(actor_id, seq)``
+  epoch; past the budget the run degrades to the survivors, who absorb the
+  dead replica's quota through the ``QuotaLedger`` (work conservation),
+* the respawn-vs-``producer_done`` race is closed: survivors wait on the
+  ledger instead of checking out while orphaned quota is outstanding,
+* the last live replica dying is fatal — a clean error, never a hang,
+* a replica crashing while its sibling is blocked in ``put()`` (stalled
+  learner, full queue) recovers without deadlock,
+* param leases are attributable: ``PingPongParamSlot`` names the holding
+  party on timeout, and ``revoke`` clears a dead replica's leases,
+* learner-side injections (stall, dropped release) are absorbed by the
+  pipeline's sizing contracts,
+* the process backend recovers from both planned-``error`` *and* hard
+  ``os._exit`` worker deaths.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import PipelineConfig, get_config
+from repro.core.agents import PAACAgent, PAACConfig
+from repro.envs import GridWorld, HostEnvPool
+from repro.pipeline import (
+    FaultInjector,
+    FaultPlan,
+    InjectedActorFault,
+    PingPongParamSlot,
+    PipelinedRL,
+    QuotaLedger,
+)
+
+
+def _grid_agent(t_max=3):
+    env = GridWorld(8, size=4, max_steps=20)
+    cfg = get_config("paac_vector").replace(
+        obs_shape=env.obs_shape, num_actions=env.num_actions)
+    return GridWorld(8, size=4, max_steps=20), PAACAgent(
+        cfg, PAACConfig(t_max=t_max))
+
+
+class _ToyGymEnv:
+    def __init__(self, seed):
+        self.rng = np.random.RandomState(seed)
+        self.state = 0
+
+    def reset(self):
+        self.state = int(self.rng.randint(0, 100))
+        return np.array([self.state % 7], np.float32)
+
+    def step(self, action):
+        reward = 1.0 if action == self.state % 3 else 0.0
+        self.state += 1
+        return np.array([self.state % 7], np.float32), reward, \
+            self.state % 10 == 0, {}
+
+
+def _toy_pool(n=4, n_workers=2):
+    return HostEnvPool([lambda s=i: _ToyGymEnv(s) for i in range(n)],
+                       n_workers=n_workers, obs_shape=(1,))
+
+
+def _pool_agent(t_max=3):
+    cfg = get_config("paac_vector").replace(obs_shape=(1,), num_actions=3)
+    return PAACAgent(cfg, PAACConfig(t_max=t_max))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / config validation
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_validates_entries():
+    with pytest.raises(ValueError, match="mode"):
+        FaultPlan(kills=((0, 1, "segfault"),))
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultPlan(kills=((-1, 0, "error"),))
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultPlan(lease_delays=((0, 0, -1.0),))
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultPlan(drop_release=(-2,))
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultPlan(stall_learner=((0, -0.1),))
+    # frozen: the plan rides an (immutable) config
+    plan = FaultPlan(kills=((0, 1, "error"),))
+    with pytest.raises(Exception):
+        plan.kills = ()
+
+
+def test_fault_injector_entries_fire_exactly_once():
+    inj = FaultInjector(FaultPlan(kills=((0, 2, "error"),),
+                                  drop_release=(1,)))
+    with pytest.raises(InjectedActorFault):
+        inj.maybe_kill(0, 2)
+    inj.maybe_kill(0, 2)  # fired: the respawned replica sails through
+    inj.maybe_kill(1, 2)  # different slot: never planned
+    assert inj.drop_release(1) is True
+    assert inj.drop_release(1) is False
+
+
+def test_config_validates_fault_fields():
+    with pytest.raises(ValueError, match="restart_budget"):
+        PipelineConfig(restart_budget=-1)
+    with pytest.raises(ValueError, match="lease_timeout_s"):
+        PipelineConfig(lease_timeout_s=0.0)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        PipelineConfig(checkpoint_every=5)
+    with pytest.raises(ValueError, match="mesh"):
+        PipelineConfig(elastic=True, mesh_shape=2, num_actors=2)
+    with pytest.raises(ValueError, match="mesh"):
+        PipelineConfig(elastic=True, rollout_plane="mesh")
+
+
+def test_orchestrator_rejects_non_fault_plan():
+    env, agent = _grid_agent()
+    with pytest.raises(TypeError, match="FaultPlan"):
+        PipelinedRL(env, agent,
+                    pipeline=PipelineConfig(fault_plan={"kills": []}))
+
+
+# ---------------------------------------------------------------------------
+# fail-fast default (elastic off)
+# ---------------------------------------------------------------------------
+
+
+def test_injected_kill_fails_fast_without_elastic():
+    env, agent = _grid_agent()
+    prl = PipelinedRL(
+        env, agent, seed=0,
+        pipeline=PipelineConfig(
+            queue_depth=2, num_actors=2,
+            fault_plan=FaultPlan(kills=((0, 1, "error"),))),
+    )
+    with pytest.raises(RuntimeError, match="pipeline actor") as ei:
+        prl.run(8)
+    assert isinstance(ei.value.__cause__, InjectedActorFault)
+    assert prl.supervisor is None  # fail-fast: no supervisor constructed
+
+
+# ---------------------------------------------------------------------------
+# elastic recovery: respawn and degrade
+# ---------------------------------------------------------------------------
+
+
+def test_thread_respawn_completes_full_quota():
+    """Kill one of two replicas mid-run: the supervisor respawns it under a
+    fresh actor_id epoch and the run completes every one of its iterations
+    (the acceptance scenario)."""
+    env, agent = _grid_agent()
+    prl = PipelinedRL(
+        env, agent, seed=0,
+        pipeline=PipelineConfig(
+            queue_depth=2, num_actors=2, elastic=True, restart_budget=1,
+            restart_backoff_s=0.01,
+            fault_plan=FaultPlan(kills=((0, 2, "error"),))),
+    )
+    res = prl.run(8)
+    assert np.isfinite(res.mean_metrics["loss"])
+    # full quota: all 8 updates consumed, none dropped
+    assert len(prl.learned_ids) == 8
+    sup = prl.supervisor
+    assert ("respawn", 0, 2) in sup.episodes
+    # the replacement epoch produced under its own id
+    ids = {a for a, _ in prl.learned_ids}
+    assert 2 in ids
+    # slot 0's stream: 2 rollouts from the dead epoch + the remainder fresh
+    dead = sorted(s for a, s in prl.learned_ids if a == 0)
+    fresh = sorted(s for a, s in prl.learned_ids if a == 2)
+    assert dead == [0, 1] and fresh == [0, 1]
+    # telemetry counters recorded the episode
+    counters = prl.telemetry._counters
+    assert counters.get("fault.detect") == 1
+    assert counters.get("fault.respawn") == 1
+
+
+def test_degrade_to_fewer_actors_when_budget_exhausted():
+    """restart_budget=0: the dead slot's quota is orphaned to the ledger and
+    the surviving replica absorbs it — the run still completes in full."""
+    env, agent = _grid_agent()
+    prl = PipelinedRL(
+        env, agent, seed=0,
+        pipeline=PipelineConfig(
+            queue_depth=2, num_actors=2, elastic=True, restart_budget=0,
+            fault_plan=FaultPlan(kills=((0, 1, "error"),))),
+    )
+    res = prl.run(8)
+    assert np.isfinite(res.mean_metrics["loss"])
+    assert len(prl.learned_ids) == 8
+    sup = prl.supervisor
+    assert any(e[0] == "giveup" and e[1] == 0 for e in sup.episodes)
+    assert not any(e[0] == "respawn" for e in sup.episodes)
+    # survivor (actor 1) produced its own 4 plus the orphaned remainder
+    survivor = [s for a, s in prl.learned_ids if a == 1]
+    assert len(survivor) == 7 and sorted(survivor) == list(range(7))
+    assert prl.telemetry._counters.get("fault.giveup") == 1
+
+
+def test_last_actor_death_is_fatal_not_a_hang():
+    env, agent = _grid_agent()
+    prl = PipelinedRL(
+        env, agent, seed=0,
+        pipeline=PipelineConfig(
+            queue_depth=1, num_actors=1, elastic=True, restart_budget=0,
+            fault_plan=FaultPlan(kills=((0, 1, "error"),))),
+    )
+    with pytest.raises(RuntimeError, match="after faults") as ei:
+        prl.run(6)
+    assert isinstance(ei.value.__cause__, InjectedActorFault)
+    assert prl.supervisor.fatal is not None
+
+
+def test_respawn_after_sibling_finished_quota():
+    """The respawn-vs-producer_done race: the kill lands when the *other*
+    replica may already be done with its own quota. The ledger keeps the
+    survivor from checking out while the orphaned work is outstanding."""
+    env, agent = _grid_agent(t_max=2)
+    # uneven split: quota [3, 2]; slot 1 dies before producing anything
+    prl = PipelinedRL(
+        env, agent, seed=0,
+        pipeline=PipelineConfig(
+            queue_depth=2, num_actors=2, elastic=True, restart_budget=0,
+            fault_plan=FaultPlan(kills=((1, 0, "error"),))),
+    )
+    res = prl.run(5)
+    assert np.isfinite(res.mean_metrics["loss"])
+    assert len(prl.learned_ids) == 5
+    # every payload came from the survivor
+    assert all(a == 0 for a, _ in prl.learned_ids)
+
+
+def test_crash_while_sibling_blocked_in_put():
+    """A stalled learner fills the depth-1 queue so the sibling blocks in
+    put(); the kill then fires and the recovery episode must complete
+    without deadlock (the supervisor runs on the dying thread while the
+    queue is full)."""
+    env, agent = _grid_agent(t_max=2)
+    prl = PipelinedRL(
+        env, agent, seed=0,
+        pipeline=PipelineConfig(
+            queue_depth=1, num_actors=2, elastic=True, restart_budget=1,
+            restart_backoff_s=0.01,
+            fault_plan=FaultPlan(kills=((0, 1, "error"),),
+                                 stall_learner=((0, 0.5),))),
+    )
+    res = prl.run(6)
+    assert np.isfinite(res.mean_metrics["loss"])
+    assert len(prl.learned_ids) == 6
+
+
+def test_zero_budget_no_fault_matches_failfast_stream():
+    """elastic with an empty fault plan consumes the identical payload
+    stream a fail-fast run does (supervision is pure scaffolding until a
+    fault fires)."""
+    env, agent = _grid_agent(t_max=2)
+    pipe = dict(queue_depth=2, num_actors=2)
+    a = PipelinedRL(GridWorld(8, size=4, max_steps=20), agent, seed=3,
+                    pipeline=PipelineConfig(**pipe))
+    a.run(6)
+    b = PipelinedRL(GridWorld(8, size=4, max_steps=20), agent, seed=3,
+                    pipeline=PipelineConfig(elastic=True, restart_budget=0,
+                                            **pipe))
+    b.run(6)
+    assert sorted(a.learned_ids) == sorted(b.learned_ids)
+
+
+# ---------------------------------------------------------------------------
+# lease attribution
+# ---------------------------------------------------------------------------
+
+
+def test_pingpong_holders_and_revoke():
+    slot = PingPongParamSlot({"w": np.zeros(3, np.float32)}, version=0)
+    slot.acquire(holder="actor-0")
+    slot.acquire(holder="actor-1")
+    assert sorted(slot.holders(0)) == ["actor-0", "actor-1"]
+    # a dead replica's leases are cleared wholesale
+    assert slot.revoke("actor-0") == 1
+    assert slot.holders(0) == ["actor-1"]
+    slot.release(0, holder="actor-1")
+    assert slot.holders(0) == []
+    # publish proceeds now that the buffer is free
+    slot.publish({"w": np.ones(3, np.float32)}, 2, timeout=1.0)
+
+
+def test_publish_timeout_names_the_holder():
+    slot = PingPongParamSlot({"w": np.zeros(3, np.float32)}, version=0)
+    slot.acquire(holder="actor-7")
+    with pytest.raises(RuntimeError, match="actor-7"):
+        slot.publish({"w": np.ones(3, np.float32)}, 2, timeout=0.05)
+
+
+def test_learner_lease_timeout_is_configurable():
+    cfg = PipelineConfig(lease_timeout_s=12.5)
+    assert cfg.lease_timeout_s == 12.5
+
+
+# ---------------------------------------------------------------------------
+# learner-side injections
+# ---------------------------------------------------------------------------
+
+
+def test_drop_release_absorbed_by_staging_sizing():
+    """One deliberately leaked host staging lease must be absorbed by the
+    ring's queue_depth + 2 sizing — the run completes regardless."""
+    agent = _pool_agent()
+    with _toy_pool() as pool:
+        prl = PipelinedRL(
+            pool, agent, seed=0,
+            pipeline=PipelineConfig(
+                queue_depth=1,
+                fault_plan=FaultPlan(drop_release=(1,))),
+        )
+        res = prl.run(6)
+    assert np.isfinite(res.mean_metrics["loss"])
+    assert len(prl.learned_ids) == 6
+
+
+def test_stall_learner_backpressures_without_fault():
+    env, agent = _grid_agent(t_max=2)
+    prl = PipelinedRL(
+        env, agent, seed=0,
+        pipeline=PipelineConfig(
+            queue_depth=1, num_actors=2,
+            fault_plan=FaultPlan(stall_learner=((1, 0.3),))),
+    )
+    res = prl.run(6)
+    assert np.isfinite(res.mean_metrics["loss"])
+    assert len(prl.learned_ids) == 6
+
+
+# ---------------------------------------------------------------------------
+# quota ledger unit
+# ---------------------------------------------------------------------------
+
+
+def test_quota_ledger_work_conservation():
+    led = QuotaLedger(4)
+    led.produced()
+    led.orphan(2)
+    assert led.wait_for_work() == 1  # claims one unit
+    assert led.claim() == 1  # takes the rest of the pool
+    led.produced()
+    led.produced()
+    led.produced()
+    # outstanding drained: waiters check out immediately
+    assert led.wait_for_work() == 0
+    led2 = QuotaLedger(5)
+    led2.abort()
+    assert led2.wait_for_work() == 0
+
+
+# ---------------------------------------------------------------------------
+# process backend recovery
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["error", "exit"])
+def test_process_backend_respawns_dead_worker(mode):
+    """Both planned failure shapes — an in-worker exception and a hard
+    os._exit (silent death) — recover via worker respawn and the run
+    completes its full quota."""
+    from repro.envs import py_bound_spec
+
+    spec = py_bound_spec(4, obs_dim=3, spin=0, n_workers=2)
+    cfg = get_config("paac_vector").replace(obs_shape=spec.obs_shape,
+                                            num_actions=3)
+    agent = PAACAgent(cfg, PAACConfig(t_max=2))
+    prl = PipelinedRL(
+        spec, agent, seed=0,
+        pipeline=PipelineConfig(
+            queue_depth=2, num_actors=2, actor_backend="process",
+            elastic=True, restart_budget=1, restart_backoff_s=0.01,
+            fault_plan=FaultPlan(kills=((0, 1, mode),))),
+    )
+    try:
+        res = prl.run(6)
+        assert np.isfinite(res.mean_metrics["loss"])
+        assert len(prl.learned_ids) == 6
+        assert any(e[0] == "respawn" for e in prl.supervisor.episodes)
+    finally:
+        prl.close()
