@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Run repro-lint from the repo root without PYTHONPATH plumbing.
+
+``python scripts/lint.py``            lints ``src/`` (the CI gate).
+``python scripts/lint.py --diff``     lints only ``.py`` files changed
+                                      vs ``main`` (plus untracked ones),
+                                      for a fast pre-push check.
+``python scripts/lint.py PATH ...``   lints explicit paths.
+
+Exit codes mirror ``python -m repro.analysis.lint``: 0 clean, 1
+findings, 2 usage error. ``--diff`` with no changed files is clean.
+"""
+import argparse
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def changed_py_files(base: str) -> list:
+    out = subprocess.run(
+        ["git", "diff", "--name-only", "--diff-filter=d", base, "--"],
+        cwd=REPO, capture_output=True, text=True, check=True,
+    ).stdout
+    untracked = subprocess.run(
+        ["git", "ls-files", "--others", "--exclude-standard"],
+        cwd=REPO, capture_output=True, text=True, check=True,
+    ).stdout
+    files = []
+    for line in (out + untracked).splitlines():
+        rel = line.strip()
+        p = REPO / rel
+        # fixtures are deliberately broken — they are the linter's tests
+        if rel.startswith("tests/fixtures/"):
+            continue
+        if rel.endswith(".py") and p.exists():
+            files.append(str(p))
+    return sorted(set(files))
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files/dirs to lint (default: src)")
+    parser.add_argument("--diff", action="store_true",
+                        help="lint only .py files changed vs --base")
+    parser.add_argument("--base", default="main",
+                        help="diff base ref for --diff (default: main)")
+    args = parser.parse_args(argv)
+    if args.diff and args.paths:
+        parser.error("--diff and explicit paths are mutually exclusive")
+
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.analysis import lint as rlint
+
+    if args.diff:
+        targets = changed_py_files(args.base)
+        if not targets:
+            print("repro-lint: no .py files changed vs %s" % args.base,
+                  file=sys.stderr)
+            return 0
+    else:
+        targets = args.paths or [str(REPO / "src")]
+    return rlint.main(targets)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,85 @@
+"""Correctness tooling for the pipeline's unchecked invariants.
+
+Three tools, one package (ISSUE 9 / docs/static_analysis.md):
+
+* ``repro.analysis.lint`` — **repro-lint**, stdlib-``ast`` static checks
+  over ``src/`` enforcing the conventions the pipeline's correctness
+  rests on: lease acquire/release pairing under ``try/finally``,
+  ``SpanEmitter`` begin/end-or-cancel balance, no reuse of donated
+  buffers, no host syncs on ``# hot-path`` functions, and picklable
+  ``HostEnvSpec`` construction. ``python -m repro.analysis.lint src``.
+* ``repro.analysis.lockcheck`` — runtime lock-order detector: the
+  pipeline's ``Lock``/``Condition`` sites are built through
+  ``make_lock``/``make_condition`` factories that return instrumented
+  wrappers under ``REPRO_SANITIZE=locks``, recording per-thread
+  acquisition stacks into a global lock-order graph and flagging cycles
+  (potential deadlock) and wait-while-holding-foreign-lock hazards.
+* ``repro.analysis.sanitize`` — transfer/donation sanitizer: under
+  ``REPRO_SANITIZE=transfers`` the device/mesh-plane steady state runs
+  inside ``jax.transfer_guard("disallow")`` scopes (explicit ``allowed``
+  escapes mark the intended D2H/H2D edges) and a deleted-buffer probe
+  asserts donated params/opt/publish buffers actually invalidated.
+
+The sanitizers are **off by default and free when off**: the factories
+hand back plain ``threading`` primitives and the guard scopes are no-op
+context managers, so the hot paths are untouched unless the env var
+``REPRO_SANITIZE`` (comma-separated modes) or ``enable_sanitizers()``
+(the ``--sanitize`` launcher flag) turns a mode on.
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterable, Set
+
+SANITIZE_ENV = "REPRO_SANITIZE"
+SANITIZE_MODES = ("locks", "transfers")
+
+# modes forced on programmatically (the --sanitize flag / tests); unioned
+# with the env var at every query so either switch works mid-process
+_forced: Set[str] = set()
+
+
+def _parse(spec: str) -> Set[str]:
+    modes = {m.strip() for m in spec.split(",") if m.strip()}
+    bad = modes - set(SANITIZE_MODES)
+    if bad:
+        raise ValueError(
+            f"unknown sanitize mode(s) {sorted(bad)}: pick from "
+            f"{SANITIZE_MODES} (comma-separated)"
+        )
+    return modes
+
+
+def enable_sanitizers(spec) -> Set[str]:
+    """Force sanitizer modes on for this process (``"locks,transfers"``
+    or an iterable of mode names). Returns the modes enabled."""
+    if isinstance(spec, str):
+        modes = _parse(spec)
+    else:
+        modes = set()
+        for m in spec:
+            modes |= _parse(m)
+    _forced.update(modes)
+    return modes
+
+
+def disable_sanitizers(spec=None) -> None:
+    """Drop programmatically-forced modes (all of them when ``spec`` is
+    None). The env var, if set, still applies."""
+    if spec is None:
+        _forced.clear()
+    else:
+        _forced.difference_update(
+            _parse(spec) if isinstance(spec, str) else set(spec))
+
+
+def sanitizer_enabled(mode: str) -> bool:
+    """Is ``mode`` on — via ``REPRO_SANITIZE`` or ``enable_sanitizers``?
+    Read at call time so tests and the launcher can flip it dynamically
+    (objects built *before* the flip stay uninstrumented)."""
+    if mode not in SANITIZE_MODES:
+        raise ValueError(f"unknown sanitize mode {mode!r}")
+    if mode in _forced:
+        return True
+    env = os.environ.get(SANITIZE_ENV, "")
+    return mode in _parse(env) if env else False

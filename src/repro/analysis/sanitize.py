@@ -1,0 +1,141 @@
+"""Transfer/donation sanitizer for the device and mesh rollout planes.
+
+The device planes' perf contract is *no implicit host traffic in steady
+state*: rollouts never leave the accelerator, the fused learner step is
+one dispatch with donated params/opt/publish buffers, and every D2H/H2D
+edge that does exist (shm param broadcast, end-of-run metrics drain, the
+DQN collector's epsilon-schedule scalar) is deliberate and documented. A
+regression — a stray ``np.asarray`` on a device value, a forgotten
+``device_put`` — doesn't fail anything today; it just quietly serializes
+the learner against PCIe. This module makes it fail loudly instead.
+
+Two probes, both no-ops unless ``REPRO_SANITIZE=transfers`` (or the
+launcher's ``--sanitize transfers``) is on:
+
+* :func:`guard` — a ``jax.transfer_guard("disallow")`` scope wrapping the
+  steady-state regions (``PipelinedRL.run``'s get/reserve/update/commit
+  block and the device-plane collect closures, both from their second
+  iteration on — the first call compiles, and compilation may legally
+  materialize constants). Any implicit transfer inside raises.
+* :func:`allowed` — the explicit escape marking an *intended* edge (e.g.
+  ``_ShmSlotBridge`` publish's D2H param copy, the metrics drain, the
+  DQN epsilon index H2D). Each use names its edge, so the allowed surface
+  is grep-able and reviewed.
+
+Plus the **deleted-buffer probe**: :func:`assert_deleted` checks that a
+donated tree's buffers were actually invalidated by the donation — on a
+backend/jit change that silently drops input-output aliasing, the
+"alloc-free steady state" claim breaks with no other symptom than
+memory growth. ``PipelinedRL.run`` probes the donated previous params
+and the reserved publish buffer after every sanitized update.
+
+``stats`` counts guarded/allowed/probed activations so tests can pin
+"the device-plane steady state ran transfer-free for >= N iterations"
+without parsing logs.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict
+
+from repro.analysis import sanitizer_enabled
+
+__all__ = [
+    "DonationViolation", "allowed", "assert_deleted",
+    "assert_uniformly_deleted", "deleted_leaves", "guard", "reset_stats",
+    "stats", "transfers_enabled",
+]
+
+# activation counters (observability for tests / reports); reset_stats()
+# between runs that want per-run numbers
+stats: Dict[str, int] = {"guarded": 0, "allowed": 0, "probed": 0}
+
+
+class DonationViolation(AssertionError):
+    """A buffer the fused step was told to donate is still live."""
+
+
+def transfers_enabled() -> bool:
+    return sanitizer_enabled("transfers")
+
+
+def reset_stats() -> None:
+    for k in stats:
+        stats[k] = 0
+
+
+@contextlib.contextmanager
+def guard(active: bool = True):
+    """Disallow implicit transfers inside the scope (no-op when the
+    transfers sanitizer is off or ``active`` is False — callers pass
+    their own warmed-up predicate so compilation stays exempt)."""
+    if not (active and transfers_enabled()):
+        yield
+        return
+    import jax
+
+    stats["guarded"] += 1
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+@contextlib.contextmanager
+def allowed(edge: str):
+    """Escape hatch naming an intended D2H/H2D edge inside a guarded
+    region. No-op when the sanitizer is off."""
+    if not transfers_enabled():
+        yield
+        return
+    import jax
+
+    stats["allowed"] += 1
+    with jax.transfer_guard("allow"):
+        yield
+
+
+def deleted_leaves(tree: Any):
+    """``(deleted, live)`` partition of the tree's jax.Array leaves
+    (non-array leaves are ignored). Unconditional — test helper."""
+    import jax
+
+    deleted, live = [], []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if isinstance(leaf, jax.Array):
+            (deleted if leaf.is_deleted() else live).append(leaf)
+    return deleted, live
+
+
+def assert_deleted(tree: Any, what: str) -> None:
+    """Deleted-buffer probe: every jax.Array leaf of ``tree`` must have
+    been invalidated (the visible effect of donation). No-op when the
+    transfers sanitizer is off."""
+    if not transfers_enabled():
+        return
+    stats["probed"] += 1
+    deleted, live = deleted_leaves(tree)
+    if live:
+        raise DonationViolation(
+            f"{what}: {len(live)}/{len(live) + len(deleted)} donated "
+            "buffer(s) still live after the update — donation was dropped "
+            "(backend/jit change?), the alloc-free steady state is gone"
+        )
+
+
+def assert_uniformly_deleted(tree: Any, what: str) -> None:
+    """Donation *consistency* probe for buffers a backend may decline to
+    alias wholesale (e.g. the ping-pong publish target on CPU, where XLA
+    routes the published output through the params donation instead):
+    all-deleted and all-live are both coherent outcomes, but a *mix* means
+    the executable aliased some leaves and silently copied the rest —
+    exactly the half-donated state that corrupts the ping-pong contract.
+    No-op when the transfers sanitizer is off."""
+    if not transfers_enabled():
+        return
+    stats["probed"] += 1
+    deleted, live = deleted_leaves(tree)
+    if deleted and live:
+        raise DonationViolation(
+            f"{what}: donation split — {len(deleted)} leaf buffer(s) "
+            f"invalidated but {len(live)} still live; the executable "
+            "aliased part of the tree and copied the rest"
+        )

@@ -106,6 +106,19 @@ def run_rl(args):
             "--trace/--metrics-jsonl/--stall-timeout observe the pipeline "
             "backend's telemetry hub: add --pipeline"
         )
+    if args.sanitize and not args.pipeline:
+        raise SystemExit(
+            "--sanitize arms the pipeline backend's runtime sanitizers "
+            "(repro.analysis): add --pipeline"
+        )
+    if args.sanitize:
+        from repro.analysis import enable_sanitizers
+
+        try:
+            modes = enable_sanitizers(args.sanitize)
+        except ValueError as e:
+            raise SystemExit(f"--sanitize: {e}")
+        log.info("sanitizers armed: %s", ",".join(sorted(modes)))
     if args.replay and not args.pipeline:
         raise SystemExit(
             "--replay selects the pipeline's sampled ReplayRing plane: add "
@@ -246,6 +259,27 @@ def run_rl(args):
         if args.checkpoint:
             save_checkpoint(args.checkpoint, rl.total_steps, rl.params)
             log.info("checkpoint saved to %s", args.checkpoint)
+        if args.sanitize and "locks" in args.sanitize:
+            # the run's lock-order verdict (also embedded in --trace output):
+            # a cycle or wait-while-holding hazard is a latent deadlock —
+            # fail the launch so CI catches it
+            from repro.analysis.lockcheck import monitor
+
+            rep = monitor().report()
+            if rep["cycles"] or rep["hazards"]:
+                for cyc in rep["cycles"]:
+                    log.error("lockcheck: lock-order cycle %s",
+                              " -> ".join(cyc))
+                for h in rep["hazards"]:
+                    log.error(
+                        "lockcheck: %s waited on %s while holding %s",
+                        h["thread"], h["waiting_on"], ", ".join(h["holding"]))
+                raise SystemExit(
+                    f"lockcheck: {len(rep['cycles'])} cycle(s), "
+                    f"{len(rep['hazards'])} hazard(s) — see log"
+                )
+            log.info("lockcheck: %d lock-order edge(s), no cycles, "
+                     "no hazards", len(rep["edges"]))
     finally:
         if hasattr(rl, "close"):
             rl.close()  # worker subprocesses / spec-built pools
@@ -348,6 +382,13 @@ def main():
     ap.add_argument("--metrics-jsonl", default="",
                     help="append a JSONL metrics heartbeat (steps/s EMA, "
                     "queue depth, staleness, per-actor liveness) here")
+    ap.add_argument("--sanitize", default="",
+                    help="arm runtime sanitizers (comma-separated: 'locks' "
+                    "for the lock-order deadlock detector — the launch "
+                    "fails on cycles/wait-while-holding hazards — and "
+                    "'transfers' for jax transfer guards + donated-buffer "
+                    "probes on the device planes); same effect as the "
+                    "REPRO_SANITIZE env var. Pipeline backend only.")
     ap.add_argument("--stall-timeout", type=float, default=0.0,
                     help="stall watchdog window in seconds: when the learner "
                     "or an actor makes no progress for this long, log which "

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rollout import Transition, make_collect_fn  # noqa: F401
+from repro.analysis.lockcheck import make_condition, make_lock
 from repro.pipeline.queue import QueueClosed
 from repro.telemetry.spans import (
     COLLECT,
@@ -80,7 +81,7 @@ class ParamSlot:
     def __init__(self, params: Any, version: int = 0):
         self._params = params
         self._version = version
-        self._cond = threading.Condition()
+        self._cond = make_condition("param_slot.cond")
 
     def publish(self, params: Any, version: int) -> None:
         with self._cond:
@@ -328,7 +329,7 @@ class HostStagingRing:
             for _ in range(n_sets)
         ]
         self.n_sets = n_sets
-        self._cond = threading.Condition()
+        self._cond = make_condition("staging_ring.cond")
 
     def acquire(self, timeout: float = 60.0) -> StagingSet:
         with self._cond:
@@ -473,6 +474,7 @@ class ActorBase(threading.Thread):
         """Ask the actor to exit at its next blocking point (learner died)."""
         self._stop_requested.set()
 
+    # hot-path
     def _put(self, rollout: Rollout) -> bool:
         """Bounded put, interruptible by stop()/close(). Returns False when
         the actor should exit instead of producing more."""
@@ -563,7 +565,7 @@ class ActorThread(ActorBase):
         # in-flight window (queue depth + 1) of entries
         self._snapshot = snapshot
         self._state_log: dict = {}
-        self._state_lock = threading.Lock()
+        self._state_lock = make_lock("actor.state")
 
     def consume_state(self, seq: int):
         """Pop (and prune up to) the resume state recorded after rollout

@@ -76,6 +76,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize
+from repro.analysis.lockcheck import locks_enabled, monitor
 from repro.checkpoint.checkpointer import (
     latest_step,
     restore_checkpoint,
@@ -562,51 +564,64 @@ class PipelinedRL:
 
             elif self._plane == "mesh":
                 dev = self._mesh_devices[i]
+                warm = [False]  # first call compiles — exempt from the guard
 
                 def collect(params, key):
                     # params arrive as the leased replicated snapshot; the
                     # lane consumes its zero-copy device-local view so the
                     # shared collect jit dispatches on this lane's device
-                    pv = _device_view(params, dev)
-                    env_state, last_obs, key, traj = collect_jit(
-                        pv, self._actor_env_state[i], self._actor_obs[i],
-                        key,
-                    )
-                    # block before the lease is released: the learner may
-                    # donate the stale snapshot the moment readers reach
-                    # zero, so the collect must have fully executed (and the
-                    # view dropped) first — also what bounds in-flight work
-                    jax.block_until_ready(traj.reward)
+                    with sanitize.guard(active=warm[0]):
+                        pv = _device_view(params, dev)
+                        env_state, last_obs, key, traj = collect_jit(
+                            pv, self._actor_env_state[i], self._actor_obs[i],
+                            key,
+                        )
+                        # block before the lease is released: the learner may
+                        # donate the stale snapshot the moment readers reach
+                        # zero, so the collect must have fully executed (and
+                        # the view dropped) first — also what bounds
+                        # in-flight work
+                        jax.block_until_ready(traj.reward)
+                    warm[0] = True
                     self._actor_env_state[i] = env_state
                     self._actor_obs[i] = last_obs
                     return key, traj, last_obs, None
 
             elif self._dqn:
+                warm = [False]
 
                 def collect(params, key):
                     # the ε-schedule index: this replica's lifetime rollout
                     # count (in lockstep it equals the learner step, matching
-                    # the synchronous schedule)
+                    # the synchronous schedule). Its H2D copy is an intended
+                    # edge, hoisted ahead of the transfer-guarded dispatch.
                     n = self._actor_seq[i]
-                    env_state, last_obs, key, traj = collect_jit(
-                        params, self._actor_env_state[i], self._actor_obs[i],
-                        key, jnp.asarray(n, jnp.int32),
-                    )
-                    jax.block_until_ready(traj.reward)
+                    n_dev = jnp.asarray(n, jnp.int32)
+                    with sanitize.guard(active=warm[0]):
+                        env_state, last_obs, key, traj = collect_jit(
+                            params, self._actor_env_state[i],
+                            self._actor_obs[i], key, n_dev,
+                        )
+                        jax.block_until_ready(traj.reward)
+                    warm[0] = True
                     self._actor_seq[i] = n + 1
                     self._actor_env_state[i] = env_state
                     self._actor_obs[i] = last_obs
                     return key, traj, last_obs, None
 
             else:
+                warm = [False]
 
                 def collect(params, key):
-                    env_state, last_obs, key, traj = collect_jit(
-                        params, self._actor_env_state[i], self._actor_obs[i],
-                        key,
-                    )
-                    # block so queue depth genuinely bounds in-flight rollouts
-                    jax.block_until_ready(traj.reward)
+                    with sanitize.guard(active=warm[0]):
+                        env_state, last_obs, key, traj = collect_jit(
+                            params, self._actor_env_state[i],
+                            self._actor_obs[i], key,
+                        )
+                        # block so queue depth genuinely bounds in-flight
+                        # rollouts
+                        jax.block_until_ready(traj.reward)
+                    warm[0] = True
                     self._actor_env_state[i] = env_state
                     self._actor_obs[i] = last_obs
                     return key, traj, last_obs, None
@@ -919,63 +934,89 @@ class PipelinedRL:
         step_arr = jnp.asarray(start_step, jnp.int32)
         step0 = int(start_step)
         completed = 0
+        # transfer sanitizer: the device planes' steady state (get → reserve
+        # → fused update → commit) must stay free of implicit host traffic.
+        # Iteration 0 is exempt (compilation may materialize constants); the
+        # step counter bump and metric bookkeeping stay OUTSIDE the guard —
+        # they are host-side by design. Host plane: the staged payload's H2D
+        # is the plane's whole point, so it is never guarded.
+        san = (sanitize.transfers_enabled()
+               and self._plane in ("device", "mesh"))
         try:
             for i in range(iterations):
                 if injector is not None:
                     injector.stall_learner(i)
-                learner_em.begin(QUEUE_GET_WAIT)
-                try:
-                    payload = queue.get()
-                finally:
-                    learner_em.end()
-                if payload is CLOSED:  # an actor died early
-                    break
-                assert isinstance(payload, Rollout)
-                # claim the stale ping-pong buffer; bounded by one in-flight
-                # collect (actors release before blocking on the queue), so a
-                # long wait means an actor died without releasing — bail out
-                # (naming the holder) instead of hanging
-                learner_em.begin(LEASE)
-                try:
-                    deadline = time.monotonic() + cfg.lease_timeout_s
-                    while True:
-                        publish_dst = slot.reserve(i + 1, timeout=1.0)
-                        if publish_dst is not None:
-                            break
-                        live = (sup.all_actors() if sup is not None
-                                else actors)
-                        if not any(a.is_alive() for a in live):
-                            raise RuntimeError(
-                                "param lease never released (all actors exited)"
-                            )
-                        if time.monotonic() >= deadline:
-                            stale = (i + 1) % 2
-                            held = ", ".join(
-                                slot.holders(stale)
-                                if hasattr(slot, "holders") else ()
-                            ) or "an unknown party"
-                            raise RuntimeError(
-                                f"param buffer {stale} still leased after "
-                                f"lease_timeout_s={cfg.lease_timeout_s:g}s "
-                                f"— held by {held}"
-                            )
-                finally:
-                    learner_em.end()
-                # on the device planes this span covers the async *dispatch*,
-                # not the execution — by design: the learner thread's own time
-                # is what the trace's learner track attributes
-                learner_em.begin(LEARNER_UPDATE)
-                try:
-                    published, metrics = self._apply_update(
-                        payload.traj, payload.last_obs, step_arr, publish_dst,
-                    )
-                finally:
-                    learner_em.end()
-                learner_em.begin(PUBLISH)
-                try:
-                    slot.commit(published, i + 1)
-                finally:
-                    learner_em.end()
+                with sanitize.guard(active=san and i > 0):
+                    learner_em.begin(QUEUE_GET_WAIT)
+                    try:
+                        payload = queue.get()
+                    finally:
+                        learner_em.end()
+                    if payload is CLOSED:  # an actor died early
+                        break
+                    assert isinstance(payload, Rollout)
+                    # claim the stale ping-pong buffer; bounded by one
+                    # in-flight collect (actors release before blocking on the
+                    # queue), so a long wait means an actor died without
+                    # releasing — bail out (naming the holder) instead of
+                    # hanging
+                    learner_em.begin(LEASE)
+                    try:
+                        deadline = time.monotonic() + cfg.lease_timeout_s
+                        while True:
+                            publish_dst = slot.reserve(i + 1, timeout=1.0)
+                            if publish_dst is not None:
+                                break
+                            live = (sup.all_actors() if sup is not None
+                                    else actors)
+                            if not any(a.is_alive() for a in live):
+                                raise RuntimeError(
+                                    "param lease never released "
+                                    "(all actors exited)"
+                                )
+                            if time.monotonic() >= deadline:
+                                stale = (i + 1) % 2
+                                held = ", ".join(
+                                    slot.holders(stale)
+                                    if hasattr(slot, "holders") else ()
+                                ) or "an unknown party"
+                                raise RuntimeError(
+                                    f"param buffer {stale} still leased after "
+                                    f"lease_timeout_s={cfg.lease_timeout_s:g}s "
+                                    f"— held by {held}"
+                                )
+                    finally:
+                        learner_em.end()
+                    if san:
+                        prev_params = self.params
+                    # on the device planes this span covers the async
+                    # *dispatch*, not the execution — by design: the learner
+                    # thread's own time is what the trace's learner track
+                    # attributes
+                    learner_em.begin(LEARNER_UPDATE)
+                    try:
+                        published, metrics = self._apply_update(
+                            payload.traj, payload.last_obs, step_arr,
+                            publish_dst,
+                        )
+                    finally:
+                        learner_em.end()
+                    learner_em.begin(PUBLISH)
+                    try:
+                        slot.commit(published, i + 1)
+                    finally:
+                        learner_em.end()
+                if san:
+                    # deleted-buffer probes: donation marks inputs deleted at
+                    # dispatch, so still-live donated params mean aliasing
+                    # was dropped and the alloc-free steady state is gone.
+                    # The publish target is consistency-checked only — a
+                    # backend may route the published output through the
+                    # params donation and decline this alias wholesale, but
+                    # a *partial* donation is always a bug.
+                    sanitize.assert_deleted(prev_params, "donated params")
+                    sanitize.assert_uniformly_deleted(
+                        publish_dst, "reserved publish buffer")
                 step_arr = step_arr + 1
                 self.total_steps += self._steps_per_iter
                 completed += 1
@@ -1069,6 +1110,11 @@ class PipelinedRL:
                     break
                 if getattr(p, "release", None):
                     p.release()
+            # lock-order verdict for this run: everything the sanitized
+            # wrappers witnessed, attached to the trace by name so the
+            # launcher (and CI) can fail on cycles/hazards post-run
+            if locks_enabled():
+                hub.report("lockcheck", monitor().report())
             # observers down, then export — after the joins above, so
             # worker-shipped span rings have merged into the hub. Runs on
             # every exit path: a post-mortem trace of a failed run is the
@@ -1108,13 +1154,16 @@ class PipelinedRL:
             else:
                 self.key = last._key
         per_actor_idle = [a.put_wait_s + a.wait_s for a in actors]
-        return acc.result(
-            self.total_steps,
-            self._steps_per_iter,
-            actor_idle_s=sum(per_actor_idle),
-            learner_idle_s=queue.get_wait_s,
-            per_actor_idle_s=per_actor_idle,
-        )
+        # the end-of-run metrics drain pulls every stashed device scalar to
+        # host in one batch — the device planes' one intended D2H sync
+        with sanitize.allowed("metrics drain"):
+            return acc.result(
+                self.total_steps,
+                self._steps_per_iter,
+                actor_idle_s=sum(per_actor_idle),
+                learner_idle_s=queue.get_wait_s,
+                per_actor_idle_s=per_actor_idle,
+            )
 
     # -- teardown (process plane + pools built from specs) -------------------
     def close(self) -> None:

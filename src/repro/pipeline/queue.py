@@ -43,6 +43,7 @@ import time
 from collections import deque
 from typing import Any, Optional
 
+from repro.analysis.lockcheck import make_condition
 from repro.telemetry.spans import QUEUE_GET_WAIT, QUEUE_PUT_WAIT, SpanEmitter
 
 
@@ -90,7 +91,7 @@ class TrajectoryQueue:
             raise ValueError(f"producers must be >= 1, got {producers}")
         self.depth = depth
         self._items: deque = deque()
-        self._cond = threading.Condition()
+        self._cond = make_condition("queue.cond")
         self._producers_left = producers
         self._closed = False
         # the queue's aggregate span track: put spans land here from every
@@ -119,6 +120,7 @@ class TrajectoryQueue:
         """Learner idle (queue empty) — span-derived."""
         return self.span_emitter.total(QUEUE_GET_WAIT)
 
+    # hot-path
     def put(self, item: Any, timeout: Optional[float] = None) -> None:
         """Blocking put; accumulates the time spent waiting on a full queue.
 
@@ -157,6 +159,7 @@ class TrajectoryQueue:
         finally:
             self.span_emitter.record(QUEUE_PUT_WAIT, t0)
 
+    # hot-path
     def get(self, timeout: Optional[float] = None) -> Any:
         """Blocking get; returns ``CLOSED`` once closed and drained.
         Raises stdlib ``queue.Empty`` when ``timeout`` elapses first."""

@@ -74,6 +74,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.lockcheck import make_condition
+from repro.analysis import sanitize
 from repro.pipeline.queue import CLOSED, QueueClosed
 from repro.pipeline.ring import _assert_device_resident
 from repro.telemetry.spans import (
@@ -129,7 +131,7 @@ class ReplayRing:
         self._tail = 0  # next ticket to issue (total accepted puts)
         self._evict_head = 0  # oldest resident ticket (evictions advance it)
         self._consumed = 0  # tickets consumed by get() (pacing counter)
-        self._cond = threading.Condition()
+        self._cond = make_condition("replay_ring.cond")
         self._producers_left = producers
         self._closed = False
         self._sample_base = jax.random.PRNGKey(sample_seed)
@@ -176,6 +178,7 @@ class ReplayRing:
             return list(range(self._evict_head, self._tail))
 
     # -- producer side -------------------------------------------------------
+    # hot-path
     def put(self, item: Any, timeout: Optional[float] = None) -> None:
         """Deposit a device-resident rollout; never blocks on a full ring.
 
@@ -227,18 +230,23 @@ class ReplayRing:
         residents = [self._slots[t % self.capacity]
                      for t in range(self._evict_head, self._tail)]
         n = len(residents)
-        if self.prioritized:
-            prios = np.asarray([s.priority for s in residents], np.float64)
-            total = prios.sum()
-            if total <= 0.0:  # all-zero priorities degrade to uniform
-                prios = np.ones(n)
-                total = float(n)
-            idx = np.asarray(jax.random.choice(
-                key, n, (batch_size,), replace=True,
-                p=jnp.asarray(prios / total),
-            ))
-        else:
-            idx = np.asarray(jax.random.randint(key, (batch_size,), 0, n))
+        # intended host<->device edges: the draw materializes its indices on
+        # host (and, prioritized, ships the priority vector up) by design
+        with sanitize.allowed("replay sample draw"):
+            if self.prioritized:
+                prios = np.asarray(
+                    [s.priority for s in residents], np.float64)
+                total = prios.sum()
+                if total <= 0.0:  # all-zero priorities degrade to uniform
+                    prios = np.ones(n)
+                    total = float(n)
+                idx = np.asarray(jax.random.choice(
+                    key, n, (batch_size,), replace=True,
+                    p=jnp.asarray(prios / total),
+                ))
+            else:
+                idx = np.asarray(
+                    jax.random.randint(key, (batch_size,), 0, n))
         return [residents[int(i)] for i in idx]
 
     def sample(self, key, batch_size: Optional[int] = None) -> List[Any]:
@@ -303,7 +311,10 @@ class ReplayRing:
                     return CLOSED  # closed and ticket-drained
                 seq = self._consumed
                 self._consumed = seq + 1
-                key = jax.random.fold_in(self._sample_base, seq)
+                # folding the host-side consume index into the key stream is
+                # the sampling path's intended H2D edge (like the draw below)
+                with sanitize.allowed("replay sample draw"):
+                    key = jax.random.fold_in(self._sample_base, seq)
                 ts = time.perf_counter()
                 slots = self._draw(key, self.batch_size)
                 self.last_sampled = tuple(s.ticket for s in slots)

@@ -61,6 +61,7 @@ from typing import Any, List, Optional
 import jax
 import numpy as np
 
+from repro.analysis.lockcheck import make_condition
 from repro.pipeline.queue import CLOSED, QueueClosed
 from repro.telemetry.spans import (
     MESH_REASSEMBLE,
@@ -115,7 +116,7 @@ class DeviceTrajectoryRing:
         self._slots: List[_Slot] = [_Slot() for _ in range(depth)]
         self._tail = 0  # next ticket to issue (producer side)
         self._head = 0  # next ticket to consume (learner side)
-        self._cond = threading.Condition()
+        self._cond = make_condition("ring.cond")
         self._producers_left = producers
         self._closed = False
         # span-derived idle accounting: same contract as TrajectoryQueue —
@@ -137,6 +138,7 @@ class DeviceTrajectoryRing:
         return self.span_emitter.total(QUEUE_GET_WAIT)
 
     # -- producer side -------------------------------------------------------
+    # hot-path
     def put(self, item: Any, timeout: Optional[float] = None) -> None:
         """Deposit a device-resident payload into the next free slot.
 
@@ -169,6 +171,7 @@ class DeviceTrajectoryRing:
             self.span_emitter.record(QUEUE_PUT_WAIT, t0)
 
     # -- consumer side -------------------------------------------------------
+    # hot-path
     def get(self, timeout: Optional[float] = None) -> Any:
         """Take the oldest full slot's payload, transferring ownership.
 
@@ -264,6 +267,7 @@ class _MeshLane:
         self._device = device
         self._validated: Any = None  # last payload to pass the device check
 
+    # hot-path
     def put(self, item: Any, timeout: Optional[float] = None) -> None:
         # ActorBase._put retries a blocked put with short timeouts; the
         # payload object is unchanged across retries, so validate it once
@@ -419,6 +423,7 @@ class MeshTrajectoryRing:
             release=None,  # device plane: the learner's consume retires it
         )
 
+    # hot-path
     def get(self, timeout: Optional[float] = None) -> Any:
         """One sharded ``Rollout`` assembled from every lane's oldest slot.
 

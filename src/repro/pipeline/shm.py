@@ -48,6 +48,7 @@ from multiprocessing import shared_memory
 
 import jax
 
+from repro.analysis.lockcheck import make_condition
 from repro.core.rollout import Transition
 from repro.pipeline.actor import staging_fields
 
@@ -187,7 +188,7 @@ class ShmParamSlot:
         self._shms = [shared_memory.SharedMemory(create=True, size=nbytes)
                       for _ in range(2)]
         self._bufs = [_views(s, fields, self._offsets) for s in self._shms]
-        self._cond = ctx.Condition()
+        self._cond = make_condition("shm.param_slot", inner=ctx.Condition())
         self._version = ctx.Value("q", version, lock=False)
         self._readers = [ctx.Value("i", 0, lock=False) for _ in range(2)]
         # per-reader lease counts, parallel to _readers: lease slot j is

@@ -44,6 +44,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro.analysis.lockcheck import make_condition, make_lock
 from repro.pipeline.faults import InjectedActorFault
 from repro.telemetry.spans import (
     FAULT_DETECT,
@@ -70,7 +71,7 @@ class QuotaLedger:
     """
 
     def __init__(self, total: int):
-        self._cond = threading.Condition()
+        self._cond = make_condition("quota_ledger.cond")
         self._outstanding = int(total)
         self._unassigned = 0
         self._aborted = False
@@ -146,7 +147,7 @@ class ActorSupervisor:
         # locked: episodes can fire from several dying threads at once
         self._em = (telemetry.emitter("supervisor", locked=True)
                     if telemetry is not None else None)
-        self._lock = threading.Lock()
+        self._lock = make_lock("supervisor.lock")
         self._actors: List = []
         self._attempts: Dict[int, int] = {}  # slot -> respawns so far
         self._next_id = 0

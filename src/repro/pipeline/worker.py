@@ -62,6 +62,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.envs.host_env import HostEnvSpec
+from repro.analysis import sanitize
 from repro.pipeline.actor import ActorBase, Rollout, _copy_tree
 from repro.pipeline.shm import ShmParamSlot, ShmStagingSet
 from repro.telemetry.spans import (
@@ -391,14 +392,17 @@ class _ShmSlotBridge:
         self._bufs[version % 2] = published
         if self._emitter is not None:
             # the one per-update D2H param copy the process plane costs —
-            # worth its own shm.copy span on the publish track
+            # worth its own shm.copy span on the publish track; an intended
+            # transfer edge, so it escapes the learner loop's guard scope
             self._emitter.begin(SHM_COPY)
             try:
-                self._shm.commit(published, version)
+                with sanitize.allowed("shm param publish"):
+                    self._shm.commit(published, version)
             finally:
                 self._emitter.end()
         else:
-            self._shm.commit(published, version)
+            with sanitize.allowed("shm param publish"):
+                self._shm.commit(published, version)
 
 
 class ProcessActorPlane:

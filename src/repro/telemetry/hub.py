@@ -74,6 +74,9 @@ class Telemetry:
         self._next_tid: Dict[int, int] = {}
         self._counters: Dict[str, float] = {}
         self._gauges: Dict[str, Any] = {}  # name -> value or callable
+        # named end-of-run reports (e.g. the lock-order sanitizer verdict):
+        # plain JSON-able dicts, embedded in the trace under "reports"
+        self.reports: Dict[str, dict] = {}
         self._hb_stop: Optional[threading.Event] = None
         self._hb_thread: Optional[threading.Thread] = None
         self._wd_stop: Optional[threading.Event] = None
@@ -136,10 +139,20 @@ class Telemetry:
                 out[name] = None
         return out
 
+    # -- named reports --------------------------------------------------------
+    def report(self, name: str, payload: dict) -> None:
+        """Attach a named end-of-run report (overwrites a prior ``name``).
+
+        Used by the sanitizers (``lockcheck``) so their verdicts ride the
+        run's telemetry instead of a side channel; harnesses read
+        ``hub.reports[name]`` after ``run()`` returns."""
+        self.reports[name] = payload
+
     # -- trace export ---------------------------------------------------------
     def write_trace(self, path) -> int:
         """Merge every registered track into one Chrome trace JSON."""
-        n = write_chrome_trace(path, self.tracks(), self.t0)
+        n = write_chrome_trace(path, self.tracks(), self.t0,
+                               reports=self.reports or None)
         if isinstance(path, str):
             log.info("telemetry: wrote %d spans to %s", n, path)
         return n

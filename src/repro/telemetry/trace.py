@@ -14,18 +14,21 @@ the trace starts near 0 regardless of host uptime.
 from __future__ import annotations
 
 import json
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 __all__ = ["write_chrome_trace"]
 
 
 def write_chrome_trace(path_or_file, tracks: List[Tuple[int, int, object]],
-                       epoch: float) -> int:
+                       epoch: float, reports: Optional[dict] = None) -> int:
     """Write one merged Chrome trace; returns the number of span events.
 
     ``tracks`` is ``[(pid, tid, emitter), ...]`` (emitters or anything with
     ``name``/``categories``/``snapshot()``); ``epoch`` the perf_counter
-    origin subtracted from every timestamp.
+    origin subtracted from every timestamp. ``reports`` (optional) is a
+    dict of named end-of-run payloads (e.g. the lock-order sanitizer's
+    verdict) embedded verbatim as a top-level ``"reports"`` key — trace
+    viewers ignore unknown keys, post-mortem tooling greps them.
     """
     events = []
     pids_named = set()
@@ -56,6 +59,8 @@ def write_chrome_trace(path_or_file, tracks: List[Tuple[int, int, object]],
             })
             n_spans += 1
     payload = {"traceEvents": events, "displayTimeUnit": "ms"}
+    if reports:
+        payload["reports"] = reports
     if hasattr(path_or_file, "write"):
         json.dump(payload, path_or_file)
     else:

@@ -1,0 +1,11 @@
+"""Fixture: donated-reuse violation — a tree is read after riding a
+donated argument position of the registered fused step."""
+import jax
+
+update_step = jax.jit(lambda p, o, t: (p, o), donate_argnums=(0, 1))
+
+
+def learner_iter(params, opt_state, traj):
+    new_params, new_opt = update_step(params, opt_state, traj)
+    stale_norm = params["w"].sum()   # params was donated: use-after-free
+    return new_params, new_opt, stale_norm

@@ -1,0 +1,5 @@
+"""Fixture: hostenv-picklable violation — a lambda env_fn cannot cross a
+spawned worker boundary."""
+from repro.envs.host_env import HostEnvSpec
+
+bad_spec = HostEnvSpec(lambda n: object(), n_envs=4, obs_shape=(16,))

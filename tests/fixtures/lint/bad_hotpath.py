@@ -1,0 +1,7 @@
+"""Fixture: hot-path-sync violation — a blocking host sync on a hot path."""
+
+
+# hot-path
+def put(ring, item):
+    depth = float(item.reward.sum())   # implicit D2H sync in the hot loop
+    ring.append((depth, item))

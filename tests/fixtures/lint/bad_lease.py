@@ -1,0 +1,8 @@
+"""Fixture: lease-pairing violation — acquire without a finally release."""
+
+
+def leaky_reader(slot):
+    params, version = slot.acquire(holder="leaky")
+    out = params["w"].sum()        # raises here => lease never returned
+    slot.release(version, holder="leaky")
+    return out

@@ -1,0 +1,10 @@
+"""Fixture: span-pairing violation — begin() escapes via an early return."""
+
+
+def leaky_stage(em, queue, stop):
+    em.begin(3)
+    item = queue.get()
+    if item is None:
+        return None                # open span leaks past this return
+    em.end()
+    return item

@@ -1,0 +1,33 @@
+"""Fixture: the negative — every rule's idiom done right."""
+import jax
+
+update_step = jax.jit(lambda p, o, t: (p, o), donate_argnums=(0, 1))
+
+
+def good_reader(slot):
+    params, version = slot.acquire(holder="good")
+    try:
+        return params["w"].sum()
+    finally:
+        slot.release(version, holder="good")
+
+
+def good_stage(em, queue, stop):
+    em.begin(3)
+    try:
+        item = queue.get()
+    finally:
+        em.end()
+    if item is None:
+        return None
+    return item
+
+
+def good_learner_iter(params, opt_state, traj):
+    params, opt_state = update_step(params, opt_state, traj)
+    return params, opt_state
+
+
+# hot-path
+def put(ring, item):
+    ring.append(item)              # no host syncs on the hot path
