@@ -23,6 +23,11 @@ GIL-holding env (``process_actors``), the mesh plane at 1/2/4 devices
 proof the always-on instrumentation stays within its 2% budget), and the
 replay plane's pipelined replay-DQN vs sync scan-DQN grid
 (``replay_ring``) — the perf trajectory future PRs diff against.
+
+``fig2_serve`` writes its own file, ``BENCH_serve.json`` (path via
+``--out-serve-json``): per reduced-zoo arch, aggregate tokens/s and
+request-latency p50/p99 for continuous batching vs lockstep waves over
+an identical mixed-length burst, plus the continuous/lockstep speedup.
 """
 from __future__ import annotations
 
@@ -90,6 +95,13 @@ PARAMS = {
         "ci": {"n_e": 4, "obs_dim": 64, "width": 16, "t_max": 2, "iters": 3,
                "warmup": 1, "repeats": 1, "pair_n": 2_000},
     },
+    "fig2_serve": {
+        "quick": {}, "full": {"n_requests": 96, "slots": 8},
+        # tiny but end-to-end: both scheduling modes really lease slots,
+        # prefill exact lengths, and decode on the fixed-width jitted step
+        "ci": {"archs": ("qwen2-7b",), "n_requests": 4, "slots": 2,
+               "prompt_lens": (4,), "gen_range": (2, 6)},
+    },
     "fig34": {
         "quick": {"n_envs_list": (16, 32, 64), "total_steps": 30_000},
         "full": {"n_envs_list": (16, 32, 64, 128, 256),
@@ -116,6 +128,8 @@ def main() -> None:
     ap.add_argument("--profile", choices=("quick", "full", "ci"), default="")
     ap.add_argument("--out-json", default="BENCH_pipeline.json",
                     help="where fig2_ring writes the pipeline steps/s grid")
+    ap.add_argument("--out-serve-json", default="BENCH_serve.json",
+                    help="where fig2_serve writes the serving grid")
     args, _ = ap.parse_known_args()
     profile = args.profile or ("full" if args.full else "quick")
     strict = profile == "ci"
@@ -142,6 +156,7 @@ def main() -> None:
     mesh_result = {}
     telemetry_result = {}
     replay_result = {}
+    serve_result = {}
 
     def fig2_ring_job(**kw):
         ring_result.update(fig2_time_split.run_device_ring(**kw))
@@ -158,6 +173,10 @@ def main() -> None:
     def fig2_replay_job(**kw):
         replay_result.update(fig2_time_split.run_replay_ring(**kw))
 
+    def fig2_serve_job(**kw):
+        from benchmarks import serve_bench
+        serve_result.update(serve_bench.run(**kw))
+
     runners = {
         "kernels": kernels_bench.run,
         "table1": table1_throughput.run,
@@ -169,6 +188,7 @@ def main() -> None:
         "fig2_mesh": fig2_mesh_job,
         "fig2_telemetry": fig2_telemetry_job,
         "fig2_replay": fig2_replay_job,
+        "fig2_serve": fig2_serve_job,
         "fig34": fig34_ne_scaling.run,
         "baselines": baselines.run,
         "roofline": roofline.run,
@@ -228,6 +248,17 @@ def main() -> None:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"fig2_ring/json,0.0,wrote={args.out_json}")
+
+    if serve_result:
+        # the serving grid gets its own file: its rows are per-arch
+        # continuous/lockstep dicts, a different shape from the pipeline
+        # steps/s grids, and the serve-smoke CI job asserts on it alone
+        payload = {"bench": "serving_plane", "profile": profile,
+                   "unix_time": time.time(), "serve": serve_result}
+        with open(args.out_serve_json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"fig2_serve/json,0.0,wrote={args.out_serve_json}")
 
 
 if __name__ == "__main__":

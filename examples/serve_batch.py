@@ -3,12 +3,21 @@ as modern LLM inference — prefill a batch of prompts, then decode.
 
     PYTHONPATH=src python examples/serve_batch.py --arch mamba2-370m
     PYTHONPATH=src python examples/serve_batch.py --arch qwen2-7b --gen 64
+    PYTHONPATH=src python examples/serve_batch.py --continuous --requests 8
 """
 import sys
 
 from repro.launch.serve import main
 
+
+def run(argv=None):
+    """Forward to the serve launcher with ``--reduced`` defaulted on,
+    without mutating ``sys.argv`` (importable and testable)."""
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--reduced" not in argv:
+        argv.append("--reduced")
+    main(argv)
+
+
 if __name__ == "__main__":
-    if "--reduced" not in sys.argv:
-        sys.argv.append("--reduced")
-    main()
+    run()

@@ -4,15 +4,18 @@ The pipeline's correctness rests on conventions that, before this tool,
 lived only in docstrings and review memory. Each is now a named rule
 (``docs/static_analysis.md`` has the catalog with rationale):
 
-* ``lease-pairing`` — every ``<recv>.acquire(...)`` lease (param slots,
-  staging rings, shm views) is paired with ``<recv>.release(...)`` in the
-  same function, and when the release happens in this function's own
-  control flow it must sit under a ``try/finally`` so error paths cannot
-  leak the lease (a leaked lease deadlocks the learner's ``reserve`` or
-  starves the staging ring). A release inside a nested ``lambda``/``def``
-  is the *deferred handoff* idiom (the payload's ``release`` callback)
-  and satisfies the rule. ``reserve`` must likewise pair with ``commit``
-  (no finally needed: reserve only waits, it holds nothing on failure).
+* ``lease-pairing`` — every acquire-side lease call is paired with its
+  release-side twin on the same receiver in the same function:
+  ``<recv>.acquire(...)``/``<recv>.release(...)`` (param slots, staging
+  rings, shm views) and ``<recv>.allocate(...)``|``<recv>.alloc(...)``/
+  ``<recv>.free(...)`` (the serving plane's cache slots). When the
+  release happens in this function's own control flow it must sit under
+  a ``try/finally`` so error paths cannot leak the lease (a leaked lease
+  deadlocks the learner's ``reserve`` or starves the ring/slot pool). A
+  release inside a nested ``lambda``/``def`` is the *deferred handoff*
+  idiom (the payload's ``release``/``free`` callback) and satisfies the
+  rule. ``reserve`` must likewise pair with ``commit`` (no finally
+  needed: reserve only waits, it holds nothing on failure).
 * ``span-pairing`` — every ``SpanEmitter.begin`` is balanced by ``end()``
   or ``cancel()`` on every early-return path and on normal completion
   (an unbalanced span corrupts the emitter's open-span stack and every
@@ -53,8 +56,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 __all__ = ["Finding", "RULES", "lint_paths", "lint_source", "main"]
 
 RULES: Dict[str, str] = {
-    "lease-pairing": "acquire/release (and reserve/commit) pairing under "
-                     "try/finally on all paths",
+    "lease-pairing": "acquire/release, allocate/free (and reserve/commit) "
+                     "pairing under try/finally on all paths",
     "span-pairing": "SpanEmitter.begin balanced by end() or cancel() on "
                     "every non-exceptional path",
     "donated-reuse": "no use of a variable after it rode a donated "
@@ -64,11 +67,20 @@ RULES: Dict[str, str] = {
                          "only (spawned workers unpickle the recipe)",
 }
 
+# lease verbs: acquire-side name -> its matching release-side name.
+# acquire/release is the pipeline ring's vocabulary; allocate|alloc/free
+# is the serving slot cache's (KVSlotCache). Same rule, same deferred-
+# handoff and try/finally semantics for every pair.
+_LEASE_PAIRS = {"acquire": "release", "allocate": "free", "alloc": "free"}
+_LEASE_ACQ = set(_LEASE_PAIRS)
+_LEASE_REL = set(_LEASE_PAIRS.values())
+
 # function names that ARE the lease protocol implementation (their bodies
 # legitimately touch one side of a pair)
 _LEASE_IMPL = {
     "acquire", "release", "reserve", "commit", "publish", "revoke",
     "read", "__enter__", "__exit__",
+    "allocate", "alloc", "free", "evict",
 }
 
 # hot by construction, no comment marker needed (the rule's allowlist arm)
@@ -213,24 +225,26 @@ class _FileLint:
                 for fstmt in stmt.finalbody:
                     for sub in ast.walk(fstmt):
                         in_finally.add(id(sub))
-        acquires: Dict[str, ast.Call] = {}
+        # acquire-side calls keyed by (recv, acquire-verb); a release-side
+        # call matches when its recv and verb agree with _LEASE_PAIRS
+        acquires: Dict[Tuple[str, str], ast.Call] = {}
         reserves: Dict[str, ast.Call] = {}
-        direct_rel: Dict[str, List[bool]] = {}  # recv -> [in_finally?]
+        direct_rel: Dict[Tuple[str, str], List[bool]] = {}  # in_finally?
         commits: Set[str] = set()
-        deferred_rel: Set[str] = set()
+        deferred_rel: Set[Tuple[str, str]] = set()
+        verbs = _LEASE_ACQ | _LEASE_REL | {"reserve", "commit"}
         for stmt in _direct_statements(func):
             for node in _direct_expr_walk(stmt):
-                hit = _attr_call(node, {"acquire", "release", "reserve",
-                                        "commit"})
+                hit = _attr_call(node, verbs)
                 if hit is None:
                     continue
                 recv, attr = hit
-                if attr == "acquire":
-                    acquires.setdefault(recv, node)
+                if attr in _LEASE_ACQ:
+                    acquires.setdefault((recv, attr), node)
                 elif attr == "reserve":
                     reserves.setdefault(recv, node)
-                elif attr == "release":
-                    direct_rel.setdefault(recv, []).append(
+                elif attr in _LEASE_REL:
+                    direct_rel.setdefault((recv, attr), []).append(
                         id(node) in in_finally)
                 elif attr == "commit":
                     commits.add(recv)
@@ -239,22 +253,23 @@ class _FileLint:
             for node in _direct_expr_walk(stmt):
                 if isinstance(node, (ast.Lambda, ast.FunctionDef)):
                     for sub in ast.walk(node):
-                        hit = _attr_call(sub, {"release"})
+                        hit = _attr_call(sub, _LEASE_REL)
                         if hit is not None:
-                            deferred_rel.add(hit[0])
-        for recv, call in acquires.items():
-            rels = direct_rel.get(recv, [])
-            if not rels and recv not in deferred_rel:
+                            deferred_rel.add(hit)
+        for (recv, acq), call in acquires.items():
+            rel = _LEASE_PAIRS[acq]
+            rels = direct_rel.get((recv, rel), [])
+            if not rels and (recv, rel) not in deferred_rel:
                 self.emit(
                     "lease-pairing", call,
-                    f"{recv}.acquire() has no matching {recv}.release() in "
+                    f"{recv}.{acq}() has no matching {recv}.{rel}() in "
                     "this function — a leaked lease starves the ring or "
-                    "deadlocks the learner's reserve()", func)
+                    "slot pool and deadlocks upstream admission", func)
             elif rels and not any(rels):
                 self.emit(
                     "lease-pairing", call,
-                    f"{recv}.release() is not under try/finally — an "
-                    "exception between acquire and release leaks the "
+                    f"{recv}.{rel}() is not under try/finally — an "
+                    f"exception between {acq} and {rel} leaks the "
                     "lease", func)
         for recv, call in reserves.items():
             if recv not in commits:

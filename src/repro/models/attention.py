@@ -297,38 +297,65 @@ def gqa_decode(
     cfg,
     x: jnp.ndarray,  # (B, 1, d_model)
     cache,
-    pos,  # scalar int32: index of the current token
+    pos,  # scalar int32 (shared position), or (B,) int32 per-row positions
     *,
     window: int = 0,
 ):
-    """Single-token decode against the cache. Returns (out, new_cache)."""
+    """Single-token decode against the cache. Returns (out, new_cache).
+
+    ``pos`` may be a scalar (every row at the same position — the lockstep
+    launcher) or a ``(B,)`` vector giving each batch row its own position
+    (the serving plane's slot-managed decode, where requests join and
+    leave mid-flight). Every op is row-independent in both modes: row
+    ``b``'s output depends only on row ``b``'s token, position and cache
+    row, which is what makes the serving plane's per-request bitwise pin
+    possible.
+    """
     B = x.shape[0]
     H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     slots = cache["k"].shape[1]
     q = linear(p["wq"], x).reshape(B, 1, H, D)
     k = linear(p["wk"], x).reshape(B, 1, Hkv, D)
     v = linear(p["wv"], x).reshape(B, 1, Hkv, D)
-    pos_arr = jnp.full((1,), pos, jnp.int32)
-    q = apply_rope(q, pos_arr, cfg.rope_theta)
-    k = apply_rope(k, pos_arr, cfg.rope_theta)
+    slot_idx = jnp.arange(slots)
+    win = window if window else slots
+    if jnp.ndim(pos) == 0:
+        pos_arr = jnp.full((1,), pos, jnp.int32)
+        q = apply_rope(q, pos_arr, cfg.rope_theta)
+        k = apply_rope(k, pos_arr, cfg.rope_theta)
 
-    write = pos % slots  # ring write (== pos when full-length cache)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, write, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, write, 0, 0))
+        write = pos % slots  # ring write (== pos when full-length cache)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, write, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, write, 0, 0))
+        if window == 0 and cfg.sliding_window == 0:
+            valid = slot_idx <= pos
+        else:
+            # ring buffer: a slot holds token (pos - ((write - i) % slots));
+            # valid iff its age < min(window, pos+1)
+            age = (write - slot_idx) % slots
+            valid = age < jnp.minimum(win, pos + 1)
+        maskb = valid[None, None, None, :]
+    else:
+        # per-row positions: rope by (B,1) positions, one-hot where-write
+        # into each row's own slot, per-row validity mask
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+        write = pos % slots  # (B,)
+        hit = slot_idx[None, :] == write[:, None]  # (B, slots)
+        ck = jnp.where(hit[:, :, None, None], k.astype(cache["k"].dtype), cache["k"])
+        cv = jnp.where(hit[:, :, None, None], v.astype(cache["v"].dtype), cache["v"])
+        if window == 0 and cfg.sliding_window == 0:
+            valid = slot_idx[None, :] <= pos[:, None]
+        else:
+            age = (write[:, None] - slot_idx[None, :]) % slots
+            valid = age < jnp.minimum(win, pos[:, None] + 1)
+        maskb = valid[:, None, None, :]
 
     G = H // Hkv
     qg = (q * (1.0 / math.sqrt(D))).reshape(B, Hkv, G, D).astype(ck.dtype)
     s = jnp.einsum("bhgd,bkhd->bhgk", qg, ck, preferred_element_type=jnp.float32)
-    slot_idx = jnp.arange(slots)
-    if window == 0 and cfg.sliding_window == 0:
-        valid = slot_idx <= pos
-    else:
-        # ring buffer: a slot holds token (pos - ((write - i) % slots)); valid
-        # iff its age < min(window, pos+1)
-        age = (write - slot_idx) % slots
-        win = window if window else slots
-        valid = age < jnp.minimum(win, pos + 1)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(maskb, s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", pr.astype(cv.dtype), cv,
                      preferred_element_type=jnp.float32)
@@ -420,29 +447,47 @@ def mla_decode(p, cfg, x, cache, pos, *, window: int = 0):
 
     cfg.mla_absorb selects the latent-space path (W_uk absorbed into q,
     W_uv into the output) versus the naive path that reconstructs all
-    per-head K/V from the latent every step.
+    per-head K/V from the latent every step. ``pos`` is a scalar (shared
+    position) or a ``(B,)`` vector of per-row positions (serving plane) —
+    see ``gqa_decode``; both modes are row-independent.
     """
     B = x.shape[0]
     H = cfg.num_heads
     slots = cache["c"].shape[1]
-    pos_arr = jnp.full((1,), pos, jnp.int32)
-
-    q_nope, q_rope = _mla_queries(p, cfg, x)  # (B,1,H,*)
-    q_rope = apply_rope(q_rope, pos_arr, cfg.rope_theta)
-    c_new, kr_new = _mla_latent(p, cfg, x)  # (B,1,kv_lora), (B,1,rope)
-    kr_new = apply_rope(kr_new[:, :, None, :], pos_arr, cfg.rope_theta)[:, :, 0, :]
-
-    write = pos % slots
-    cc = jax.lax.dynamic_update_slice(cache["c"], c_new.astype(cache["c"].dtype), (0, write, 0))
-    ckr = jax.lax.dynamic_update_slice(cache["kr"], kr_new.astype(cache["kr"].dtype), (0, write, 0))
-
     slot_idx = jnp.arange(slots)
-    if cfg.sliding_window == 0 and window == 0:
-        valid = slot_idx <= pos
+    win = window if window else slots
+    q_nope, q_rope = _mla_queries(p, cfg, x)  # (B,1,H,*)
+    c_new, kr_new = _mla_latent(p, cfg, x)  # (B,1,kv_lora), (B,1,rope)
+
+    if jnp.ndim(pos) == 0:
+        pos_arr = jnp.full((1,), pos, jnp.int32)
+        q_rope = apply_rope(q_rope, pos_arr, cfg.rope_theta)
+        kr_new = apply_rope(kr_new[:, :, None, :], pos_arr, cfg.rope_theta)[:, :, 0, :]
+
+        write = pos % slots
+        cc = jax.lax.dynamic_update_slice(cache["c"], c_new.astype(cache["c"].dtype), (0, write, 0))
+        ckr = jax.lax.dynamic_update_slice(cache["kr"], kr_new.astype(cache["kr"].dtype), (0, write, 0))
+        if cfg.sliding_window == 0 and window == 0:
+            valid = slot_idx <= pos
+        else:
+            age = (write - slot_idx) % slots
+            valid = age < jnp.minimum(win, pos + 1)
+        maskb = valid[None, None, :]
     else:
-        age = (write - slot_idx) % slots
-        win = window if window else slots
-        valid = age < jnp.minimum(win, pos + 1)
+        q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+        kr_new = apply_rope(kr_new[:, :, None, :], pos[:, None],
+                            cfg.rope_theta)[:, :, 0, :]
+
+        write = pos % slots  # (B,)
+        hit = slot_idx[None, :] == write[:, None]  # (B, slots)
+        cc = jnp.where(hit[:, :, None], c_new.astype(cache["c"].dtype), cache["c"])
+        ckr = jnp.where(hit[:, :, None], kr_new.astype(cache["kr"].dtype), cache["kr"])
+        if cfg.sliding_window == 0 and window == 0:
+            valid = slot_idx[None, :] <= pos[:, None]
+        else:
+            age = (write[:, None] - slot_idx[None, :]) % slots
+            valid = age < jnp.minimum(win, pos[:, None] + 1)
+        maskb = valid[:, None, :]
 
     scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
     nope, vdim, rank = cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
@@ -461,7 +506,7 @@ def mla_decode(p, cfg, x, cache, pos, *, window: int = 0):
                        preferred_element_type=f32)
         s = s + jnp.einsum("bhr,bkr->bhk", q_rope[:, 0].astype(ckr.dtype), ckr,
                            preferred_element_type=f32)
-        s = jnp.where(valid[None, None, :], s * scale, NEG_INF)
+        s = jnp.where(maskb, s * scale, NEG_INF)
         pr = jax.nn.softmax(s, axis=-1)
         o_lat = jnp.einsum("bhk,bkr->bhr", pr.astype(cc.dtype), cc,
                            preferred_element_type=f32)  # (B,H,rank)
@@ -475,7 +520,7 @@ def mla_decode(p, cfg, x, cache, pos, *, window: int = 0):
         s = jnp.einsum("bhn,bkhn->bhk", qn, k_nope, preferred_element_type=f32)
         s = s + jnp.einsum("bhr,bkr->bhk", q_rope[:, 0].astype(ckr.dtype), ckr,
                            preferred_element_type=f32)
-        s = jnp.where(valid[None, None, :], s * scale, NEG_INF)
+        s = jnp.where(maskb, s * scale, NEG_INF)
         pr = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bhk,bkhv->bhv", pr.astype(v.dtype), v,
                          preferred_element_type=f32)

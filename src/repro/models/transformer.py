@@ -371,7 +371,10 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None):
 
 
 def decode_step(params, cfg, cache, token, pos, *, window: Optional[int] = None):
-    """One autoregressive step. token: (B, 1) int32; pos: scalar int32.
+    """One autoregressive step. token: (B, 1) int32; pos: scalar int32
+    (lockstep — every row at the same position) or (B,) int32 per-row
+    positions (the serving plane's slot-managed batch; rows advance
+    independently and the attention paths mask/write per row).
 
     Returns (hidden (B,1,d), new_cache).
     """

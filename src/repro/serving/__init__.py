@@ -1,0 +1,23 @@
+"""Serving plane: continuous batching for policy inference.
+
+Layers (``docs/serving.md``):
+
+* ``request``   — the ``Request`` unit the admission queue carries.
+* ``slots``     — ``KVSlotCache``: lease discipline over cache rows.
+* ``engine``    — ``DecodeEngine``: one fixed-width jitted decode step.
+* ``scheduler`` — continuous / lockstep admission over one engine.
+* ``traffic``   — open-loop (Poisson or burst) request sources.
+"""
+from repro.serving.engine import DecodeEngine
+from repro.serving.request import ACTIVE, DONE, ERRORED, QUEUED, Request
+from repro.serving.scheduler import SERVE_CATEGORIES, Scheduler
+from repro.serving.slots import (KVSlotCache, SlotCacheClosed, SlotError,
+                                 SlotsExhausted)
+from repro.serving.traffic import OpenLoopTraffic, make_requests
+
+__all__ = [
+    "ACTIVE", "DONE", "ERRORED", "QUEUED",
+    "DecodeEngine", "KVSlotCache", "OpenLoopTraffic", "Request",
+    "SERVE_CATEGORIES", "Scheduler", "SlotCacheClosed", "SlotError",
+    "SlotsExhausted", "make_requests",
+]

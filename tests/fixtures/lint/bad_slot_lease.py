@@ -1,0 +1,10 @@
+"""Fixture: lease-pairing violation, serving-plane vocabulary — a cache
+slot allocated and never freed (no direct free, no deferred-free
+closure handed to the request)."""
+
+
+def leaky_admit(slots, engine, req):
+    slot = slots.allocate(req.rid)
+    tok0 = engine.admit(slot, req.prompt, req.seed)  # raises => slot leaks
+    req.record_first_token(tok0)
+    return slot

@@ -68,6 +68,7 @@ def _rules_for(path: Path):
 
 @pytest.mark.parametrize("fixture,rule", [
     ("bad_lease.py", "lease-pairing"),
+    ("bad_slot_lease.py", "lease-pairing"),
     ("bad_span.py", "span-pairing"),
     ("bad_donated.py", "donated-reuse"),
     ("bad_hotpath.py", "hot-path-sync"),
@@ -144,6 +145,37 @@ def ok_deferred(staging):
 """
     assert not [f for f in rlint.lint_source(src, "x.py")
                 if f.rule == "lease-pairing"]
+
+
+def test_lease_rule_covers_allocate_free_vocabulary():
+    """The serving slot cache's allocate/free pair rides the same rule:
+    deferred-free closures and try/finally frees pass; a mixed pairing
+    (allocate answered only by release) does not."""
+    ok = """
+def ok_admit(slots, req):
+    slot = slots.allocate(req.rid)
+    req.on_retire = (lambda s=slot, r=req.rid: slots.free(s, r))
+    return slot
+
+def ok_scoped(slots, rid):
+    slot = slots.allocate(rid)
+    try:
+        return do_work(slot)
+    finally:
+        slots.free(slot, rid)
+"""
+    assert not [f for f in rlint.lint_source(ok, "x.py")
+                if f.rule == "lease-pairing"]
+    mixed = """
+def mixed(slots, rid):
+    slot = slots.allocate(rid)
+    try:
+        return do_work(slot)
+    finally:
+        slots.release(slot)
+"""
+    assert [f for f in rlint.lint_source(mixed, "x.py")
+            if f.rule == "lease-pairing"]
 
 
 def test_cli_clean_on_real_tree_and_nonzero_on_fixtures():
